@@ -1,0 +1,80 @@
+"""Ablations over the paper's central hyperparameters (no paper table —
+this is the analysis the paper omits):
+
+  (a) fixed-alpha sweep: FL accuracy and gradient-statistic telemetry vs
+      the client-CV coefficient, showing the 1-alpha step-scale tradeoff;
+  (b) K (RLOO units) sweep: the K>=2 requirement and diminishing returns of
+      the leave-one-out baseline quality.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import control_variates as cv
+from repro.data import federated_splits
+from repro.fed import FLConfig, MethodConfig, Simulator
+from repro.fed.methods import _microbatch_grads
+from repro.models import lenet
+from benchmarks.bench_fl import make_task
+
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+ROUNDS = 15 if FAST else 40
+
+
+def alpha_sweep():
+    print("# (a) fixed-alpha sweep (fedncv, beta=0, synthetic cifar10)")
+    spec, train, test = federated_splits("cifar10", n_clients=12, alpha=0.1,
+                                         seed=5, scale=0.12)
+    cfg, task = make_task(spec)
+    for a in [0.0, 0.25, 0.5, 0.75, 0.9]:
+        params = lenet.init(cfg, jax.random.PRNGKey(0))
+        fl = FLConfig(method="fedncv", n_clients=12, cohort=6, k_micro=4,
+                      micro_batch=16, server_lr=0.5,
+                      mc=MethodConfig(name="fedncv", local_lr=0.05,
+                                      ncv_alpha0=a, ncv_alpha_lr=0.0,
+                                      ncv_beta=0.0))
+        sim = Simulator(task, params, train, fl, seed=1)
+        for _ in range(ROUNDS):
+            sim.run_round()
+        acc = sim.evaluate(test)
+        print(f"ablation_alpha,alpha={a},pre_acc={acc:.4f},"
+              f"msg_scale={1 - a:.2f}")
+
+
+def k_sweep():
+    print("# (b) K (RLOO units) sweep: baseline quality vs K")
+    spec, train, _ = federated_splits("cifar10", n_clients=4, alpha=0.5,
+                                      seed=6, scale=0.1)
+    cfg, task = make_task(spec)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    pool = np.asarray(train["client_idx"][0])
+    pool = pool[pool >= 0]
+    for k in [2, 4, 8, 16]:
+        take = rng.choice(pool, size=k * 16, replace=len(pool) < k * 16)
+        batch = {kk: jnp.asarray(np.asarray(v)[take.reshape(k, 16)])
+                 for kk, v in train.items()
+                 if kk not in ("client_idx", "client_sizes")}
+        g = _microbatch_grads(task, params, batch)
+        stats = cv.client_stats_from_stack(g)
+        a_star = float(cv.optimal_alpha_single(stats))
+        e_gc, e_cc = cv.rloo_scalar_moments(stats)
+        # residual second moment at alpha* (law of total variance form)
+        m0 = float(stats.sum_norm_sq / stats.k)
+        m_star = m0 - float(e_gc) ** 2 / max(float(e_cc), 1e-12)
+        print(f"ablation_k,K={k},alpha*={a_star:.3f},"
+              f"secmom_alpha0={m0:.4f},secmom_alpha*={m_star:.4f},"
+              f"reduction_x={m0 / max(m_star, 1e-9):.2f}")
+
+
+def main():
+    alpha_sweep()
+    k_sweep()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Table 1 + Figure 1: accuracy across datasets x methods, and
+convergence curves (pre-test accuracy vs communication rounds).
+
+Synthetic stand-ins for the paper's datasets (offline environment) with the
+same protocol: LeNet-5, Dirichlet(0.1) non-IID, sampled cohorts, pre-test
+("test before") and post-personalization ("test after") evaluation.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.data import federated_splits
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.models import lenet
+
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+
+DATASETS = ["cifar10", "emnist"] if FAST else ["cifar10", "cifar100",
+                                               "tiny-imagenet", "emnist"]
+# "fedncv" = practical config (beta=0, small fixed alpha);
+# "fedncv-lit" = the literal Eq.10-12 estimator (beta=1) — included to make
+# the degeneracy finding visible (EXPERIMENTS.md §Repro).
+METHODS = ["fedavg", "fedprox", "scaffold", "fedrep", "fedper", "pfedsim",
+           "fedncv", "fedncv-lit", "fedncv+"]
+
+METHOD_MC = {
+    "fedncv": dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5, ncv_beta=0.0),
+    "fedncv-lit": dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5, ncv_beta=1.0),
+}
+ROUNDS = 30 if FAST else 100
+N_CLIENTS = 16 if FAST else 40
+COHORT = 8 if FAST else 10
+EVAL_EVERY = 5
+
+
+def make_task(spec):
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    return cfg, Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                     accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                     head_keys=lenet.HEAD_KEYS)
+
+
+def run_dataset(name: str, seed=0):
+    spec, train, test = federated_splits(name, n_clients=N_CLIENTS, alpha=0.1,
+                                         seed=seed,
+                                         scale=0.15 if FAST else 0.5)
+    cfg, task = make_task(spec)
+    rows, curves = [], {}
+    for method in METHODS:
+        params = lenet.init(cfg, jax.random.PRNGKey(seed))
+        sim_method = method.split("-")[0]      # "fedncv-lit" -> "fedncv"
+        mc_kw = METHOD_MC.get(method, {})
+        fl = FLConfig(method=sim_method, n_clients=N_CLIENTS, cohort=COHORT,
+                      k_micro=4, micro_batch=16, server_lr=0.5,
+                      mc=MethodConfig(name=sim_method, local_lr=0.05,
+                                      local_epochs=2, **mc_kw))
+        sim = Simulator(task, params, train, fl, seed=seed)
+        t0 = time.time()
+        curve = []
+        for r in range(ROUNDS):
+            sim.run_round()
+            if (r + 1) % EVAL_EVERY == 0:
+                curve.append((r + 1, sim.evaluate(test)))
+        pre = sim.evaluate(test)                       # "test before"
+        post = sim.evaluate(test, personalize_steps=3)  # "test after"
+        dt = time.time() - t0
+        rows.append((method, pre, post, dt))
+        curves[method] = curve
+        print(f"table1,{name},{method},pre={pre:.4f},post={post:.4f},"
+              f"rounds={ROUNDS},sec={dt:.1f}", flush=True)
+    return rows, curves
+
+
+def main():
+    print(f"# Table 1 analogue (synthetic data; FAST={FAST})")
+    all_curves = {}
+    for ds in DATASETS:
+        rows, curves = run_dataset(ds)
+        all_curves[ds] = curves
+        best = max(rows, key=lambda r: r[1])
+        print(f"# {ds}: best pre-test = {best[0]} ({best[1]:.4f})")
+    print("# Figure 1 analogue: pre-test accuracy vs rounds")
+    for ds, curves in all_curves.items():
+        for method, curve in curves.items():
+            pts = ";".join(f"{r}:{a:.4f}" for r, a in curve)
+            print(f"fig1,{ds},{method},{pts}")
+    return all_curves
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Roofline report: reads the dry-run JSON artifacts (results/) and prints
+the §Roofline table — three terms, dominant bottleneck, MODEL_FLOPS ratio,
+and a one-line recommendation per (arch x shape) on the single-pod mesh.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results")
+
+
+def _recommendation(rec):
+    dom = rec["roofline"]["dominant"]
+    coll = rec["collective"]
+    if dom == "collective_s":
+        top = max(("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute"), key=lambda k: coll.get(k, 0))
+        return (f"cut {top} volume (seq-parallel reduce-scatter, head-aligned "
+                f"TP, or fewer activation reshards)")
+    if dom == "memory_s":
+        return "raise arithmetic intensity (fuse, larger microbatch, bf16 state)"
+    return "compute-bound: close remat waste / skip masked attention tiles"
+
+
+ICI_BW = 50e9
+
+
+def effective_collective_s(rec):
+    """Effective ICI seconds (ring all-reduce moves ~2x its buffer)."""
+    c = rec["collective"]
+    eff = c.get("effective_total")
+    if eff is None:
+        eff = (2.0 * c["all-reduce"] + c["all-gather"] + c["reduce-scatter"]
+               + c["all-to-all"] + c["collective-permute"])
+    return eff / ICI_BW
+
+
+def load(mesh="16x16"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main():
+    rows = load("16x16")
+    ok = [r for r in rows if r.get("ok")]
+    fail = [r for r in rows if not r.get("ok")]
+    print("# §Roofline — single-pod 16x16 (256 chips), per-device terms (s)")
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,recommendation")
+    for r in ok:
+        t = dict(r["roofline"])
+        t["collective_s"] = effective_collective_s(r)
+        dom = max(("compute_s", "memory_s", "collective_s"), key=t.get)
+        print(f"{r['arch']},{r['shape']},{t['compute_s']:.4f},"
+              f"{t['memory_s']:.4f},{t['collective_s']:.4f},{dom},"
+              f"{(r.get('useful_flops_ratio') or 0):.3f},"
+              f"\"{_recommendation(r)}\"")
+    mp = [r for r in load("2x16x16") if r.get("ok")]
+    print(f"# multi-pod 2x16x16 passes: {len(mp)}")
+    if fail:
+        print(f"# FAILURES: {len(fail)}")
+        for r in fail:
+            print(f"fail,{r['arch']},{r['shape']},{r.get('error','')[:120]}")
+    print(f"# single-pod ok={len(ok)} fail={len(fail)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""The paper's core claim, measured directly: gradient-estimator variance.
+
+Three measurements on synthetic Dirichlet-non-IID data (LeNet gradients):
+
+1. client-level RLOO (Prop. 2/3): per-unit estimator second moment vs alpha —
+   shows the optimal-alpha minimum and the variance reduction vs alpha=0;
+2. server-level LOO under partial participation: variance of the per-client
+   corrected gradient g_u - c_{V\\u} as a drift estimator vs the raw g_u;
+3. aggregate-estimator variance across sampled cohorts: FedAvg vs FedNCV+
+   (stale-CV, beyond-paper) — the quantity that controls round-to-round
+   update noise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import control_variates as cv
+from repro.data import federated_splits
+from repro.fed.methods import Task, _microbatch_grads
+from repro.models import lenet
+from repro.utils.tree_math import tree_norm_sq, tree_stack, tree_sub
+from benchmarks.bench_fl import make_task
+
+
+def client_grads(task, params, train, m, k=8, b=16, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for u in range(m):
+        pool = np.asarray(train["client_idx"][u])
+        pool = pool[pool >= 0]
+        take = rng.choice(pool, size=k * b, replace=len(pool) < k * b)
+        batch = {kk: jnp.asarray(np.asarray(v)[take.reshape(k, b)])
+                 for kk, v in train.items()
+                 if kk not in ("client_idx", "client_sizes")}
+        out.append(_microbatch_grads(task, params, batch))
+    return out
+
+
+def main():
+    spec, train, test = federated_splits("cifar10", n_clients=12, alpha=0.1,
+                                         seed=3, scale=0.15)
+    cfg, task = make_task(spec)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    stacks = client_grads(task, params, train, m=12)
+
+    # 1. client-level RLOO second moment vs alpha
+    print("# (1) client RLOO per-unit second moment vs alpha (paper Prop.2)")
+    g = stacks[0]
+    stats = cv.client_stats_from_stack(g)
+    a_star = float(cv.optimal_alpha_single(stats))
+    for alpha in [0.0, 0.25, 0.5, 0.75, 1.0, a_star]:
+        r = cv.rloo_reshape(g, alpha)
+        m2 = float(np.mean([float(tree_norm_sq(jax.tree.map(lambda x: x[i], r)))
+                            for i in range(int(stats.k))]))
+        tag = " (alpha*)" if abs(alpha - a_star) < 1e-9 else ""
+        print(f"var1,alpha={alpha:.3f},second_moment={m2:.5f}{tag}")
+
+    # 2. server LOO drift isolation
+    print("# (2) server LOO: ||g_u - c_u|| isolates per-client drift")
+    mean_grads = [cv.client_message(cv.client_stats_from_stack(s), 0.0)
+                  for s in stacks]
+    n_u = jnp.ones(len(mean_grads)) * 10
+    baselines = cv.server_loo_baselines(mean_grads, n_u)
+    raw = np.mean([float(tree_norm_sq(g)) for g in mean_grads])
+    drift = np.mean([float(tree_norm_sq(tree_sub(g, c)))
+                     for g, c in zip(mean_grads, baselines)])
+    print(f"var2,raw_grad_sq={raw:.5f},drift_component_sq={drift:.5f},"
+          f"drift_fraction={drift / raw:.4f}")
+
+    # 3. cohort-sampling variance: FedAvg vs stale-CV (FedNCV+)
+    print("# (3) aggregate variance across cohorts (beyond-paper FedNCV+)")
+    rng = np.random.default_rng(0)
+    m_total, cohort, trials = 12, 4, 200
+    h = [np.zeros_like(np.concatenate([np.ravel(x) for x in
+                                       jax.tree.leaves(g)]))
+         for g in mean_grads]
+    flat = [np.concatenate([np.ravel(np.asarray(x))
+                            for x in jax.tree.leaves(g)])
+            for g in mean_grads]
+    full_mean = np.mean(flat, axis=0)
+    h_arr = np.stack(flat) * 0.9 + 0.1 * rng.standard_normal(
+        (m_total, flat[0].size)).astype(np.float32) * np.std(flat)
+    aggs_avg, aggs_cv = [], []
+    for _ in range(trials):
+        idx = rng.choice(m_total, size=cohort, replace=False)
+        g_c = np.mean([flat[i] for i in idx], axis=0)
+        aggs_avg.append(g_c)
+        corr = np.mean([flat[i] - h_arr[i] for i in idx], axis=0)
+        aggs_cv.append(h_arr.mean(axis=0) + corr)
+    v_avg = float(np.mean(np.var(aggs_avg, axis=0)))
+    v_cv = float(np.mean(np.var(aggs_cv, axis=0)))
+    print(f"var3,fedavg_cohort_var={v_avg:.6e},stale_cv_var={v_cv:.6e},"
+          f"reduction_x={v_avg / max(v_cv, 1e-12):.2f}")
+    # bias check: both estimators' means should match the full mean direction
+    b_avg = float(np.linalg.norm(np.mean(aggs_avg, 0) - full_mean))
+    b_cv = float(np.linalg.norm(np.mean(aggs_cv, 0) - full_mean))
+    print(f"var3_bias,fedavg={b_avg:.5f},stale_cv={b_cv:.5f} (both ~0 = unbiased)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure plus the
+systems benches.  Prints ``name,value,derived`` CSV lines per benchmark.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Set BENCH_FAST=0 for the full-size (slow) protocol.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("variance", "benchmarks.bench_variance"),     # core claim (Props 1-3)
+    ("kernels", "benchmarks.bench_kernels"),       # Pallas kernels
+    ("roofline", "benchmarks.bench_roofline"),     # §Roofline table
+    ("fl_table1_fig1", "benchmarks.bench_fl"),     # Table 1 + Figure 1
+    ("scalability_fig2", "benchmarks.bench_scalability"),  # Figure 2
+    ("ablation", "benchmarks.bench_ablation"),     # alpha / K sweeps
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only")
+    args = ap.parse_args()
+    failures = 0
+    for name, module in BENCHES:
+        if args.only and args.only != name:
+            continue
+        print(f"\n==== bench:{name} ({module}) ====", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"bench:{name},ok,{time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"bench:{name},FAILED,{time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: FedNCV vs FedAvg on synthetic Dirichlet(0.1) non-IID data.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains LeNet-5 federatedly for 15 rounds with each method and prints the
+pre-/post-personalization accuracy — the paper's Table-1 protocol in
+miniature.
+"""
+import jax
+
+from repro.data import federated_splits
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.models import lenet
+
+
+def main():
+    spec, train, test = federated_splits("cifar10", n_clients=12, alpha=0.1,
+                                         seed=0, scale=0.15, noise=1.2,
+                                         class_sep=0.8)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    for method in ("fedavg", "fedncv"):
+        params = lenet.init(cfg, jax.random.PRNGKey(0))
+        fl = FLConfig(method=method, n_clients=12, cohort=6, k_micro=4,
+                      micro_batch=16, server_lr=0.5,
+                      mc=MethodConfig(name=method, local_lr=0.05,
+                                      local_epochs=2, ncv_alpha0=0.3,
+                                      ncv_alpha_lr=1e-5, ncv_beta=0.0))
+        sim = Simulator(task, params, train, fl, seed=0)
+        for r in range(15):
+            sim.run_round()
+        pre = sim.evaluate(test)
+        post = sim.evaluate(test, personalize_steps=3)
+        extra = ""
+        if method == "fedncv":
+            import numpy as np
+            extra = f"  mean alpha_u={float(np.mean(sim.alphas)):.3f}"
+        print(f"{method:8s} pre-test={pre:.4f}  post-test={post:.4f}{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Batched serving example: prefill + KV-cache decode on a small gemma2-style
+model (sliding-window + global alternating attention, logit softcap).
+
+    PYTHONPATH=src python examples/serve.py --batch 8 --decode 64
+
+Runs greedy decoding for a batch of requests and reports tokens/s — the same
+`decode_step` the dry-run lowers as `serve_step` for decode_32k/long_500k.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--decode", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = configs.get("gemma2-9b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    cache_len = args.prompt + args.decode
+    cache = api.init_cache(cfg, args.batch, cache_len)
+
+    prompt = jax.random.randint(key, (args.batch, args.prompt), 0, cfg.vocab)
+    decode = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos))
+
+    # prefill by stepping the decoder over the prompt (teacher-forced)
+    tok = prompt[:, :1]
+    for i in range(args.prompt):
+        logits, cache = decode(params, cache, prompt[:, i:i + 1],
+                               jnp.int32(i))
+    # greedy decode
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    t0 = time.time()
+    for i in range(args.decode):
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(args.prompt + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    toks = args.batch * args.decode
+    seq = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.decode} tokens x batch {args.batch} "
+          f"in {dt:.2f}s -> {toks / dt:.1f} tok/s (1 CPU core, reduced model)")
+    print("sample token ids:", seq[0, :16].tolist())
+    assert not bool(jnp.isnan(logits).any())
+    print("no NaNs; sliding-window ring caches exercised "
+          f"(local cache len {cfg.sliding_window})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-parameter llama-style LM with the
+production FedNCV train step (the same `make_train_step` the dry-run lowers
+for the 256-chip mesh, here on one host device).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Data: synthetic Zipf token stream with local bigram structure (offline env).
+The loss must fall well below the unigram entropy to show learning, and the
+RLOO statistics (S1, S2, alpha) are logged — the paper's technique running
+as a first-class feature of the trainer.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import make_token_dataset
+from repro.launch.train import make_train_step
+from repro.models import api
+from repro import checkpoint
+
+
+def model_100m() -> ArchConfig:
+    # ~100M params: 12 x (d=768, ff=2048) + 32k vocab tied embedding
+    return ArchConfig(name="llama-100m", family="dense", n_layers=12,
+                      d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+                      vocab=32768, head_dim=64, tie_embeddings=True,
+                      dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params")
+
+    toks = make_token_dataset(cfg.vocab, 4_000_000, seed=0)
+    rng = np.random.default_rng(0)
+
+    step_fn = jax.jit(make_train_step(cfg, k_micro=4, lr=args.lr, ncv=True,
+                                      alpha_lr=1e-4))
+    alpha = jnp.float32(0.25)
+
+    def draw():
+        starts = rng.integers(0, len(toks) - args.seq - 1, size=args.batch)
+        x = np.stack([toks[s:s + args.seq] for s in starts])
+        y = np.stack([toks[s + 1:s + args.seq + 1] for s in starts])
+        return dict(tokens=jnp.asarray(x), labels=jnp.asarray(y))
+
+    t0 = time.time()
+    for step in range(args.steps):
+        params, alpha, m = step_fn(params, alpha, draw())
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:4d} loss={float(m['loss']):.4f} "
+                  f"alpha={float(m['alpha']):.4f} S1={float(m['s1']):.3e} "
+                  f"rloo_var={float(m['rloo_var']):.3e} "
+                  f"({dt / max(step, 1):.2f}s/step)", flush=True)
+    checkpoint.save_step(args.ckpt_dir, args.steps, params,
+                         meta={"loss": float(m["loss"])})
+    print(f"checkpoint saved to {args.ckpt_dir}; "
+          f"final loss {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    latest_step, restore, restore_step, save, save_step,
+)

@@ -1,0 +1,85 @@
+"""Msgpack-based pytree checkpointing (no external deps beyond msgpack).
+
+Layout: <dir>/<step>.ckpt — a msgpack map {flat_key: {dtype, shape, data}}
+plus a '_meta' entry.  Keys are '/'-joined tree paths, so any nesting of
+dicts/lists/namedtuples round-trips.  Arrays are raw little-endian bytes.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, meta: dict | None = None):
+    flat = _flatten(tree)
+    payload = {k: dict(dtype=str(v.dtype), shape=list(v.shape),
+                       data=v.tobytes())
+               for k, v in flat.items()}
+    payload["_meta"] = meta or {}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)          # atomic publish
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (a template pytree)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = payload.pop("_meta", {})
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(payload)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    restored = {}
+    for k, spec in payload.items():
+        arr = np.frombuffer(spec["data"], dtype=np.dtype(spec["dtype"]))
+        restored[k] = jnp.asarray(arr.reshape(spec["shape"]))
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_, leaf in leaves_paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        new_leaves.append(restored[key])
+    return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves), meta
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"(\d+)\.ckpt", f))]
+    return max(steps) if steps else None
+
+
+def save_step(directory: str, step: int, tree, meta=None, keep: int = 3):
+    save(os.path.join(directory, f"{step}.ckpt"), tree,
+         dict(meta or {}, step=step))
+    # retention
+    steps = sorted(int(re.fullmatch(r"(\d+)\.ckpt", f).group(1))
+                   for f in os.listdir(directory)
+                   if re.fullmatch(r"\d+\.ckpt", f))
+    for s in steps[:-keep]:
+        os.remove(os.path.join(directory, f"{s}.ckpt"))
+
+
+def restore_step(directory: str, like, step: int | None = None):
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    return restore(os.path.join(directory, f"{step}.ckpt"), like)

@@ -1,0 +1,1 @@
+from repro.core import control_variates  # noqa: F401

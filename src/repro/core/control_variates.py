@@ -1,0 +1,211 @@
+"""RLOO control-variate primitives — the mathematical core of FedNCV.
+
+Two implementations of every quantity:
+
+* a **naive oracle** that materializes all K leave-one-out baselines exactly as
+  written in the paper (Eq. 8-9) — used in tests and as the Pallas-kernel
+  reference, and
+* a **reduced form** that exploits the identities
+
+      c_{D\\i}          = (K * gbar - g_i) / (K - 1)
+      mean_i g'_i       = (1 - alpha) * gbar
+      sum_i <g_i, c_i>  = (K^2 * S1 - S2) / (K - 1)
+      sum_i ||c_i||^2   = (K^2 (K-2) S1 + S2) / (K - 1)^2
+
+  with S1 = ||gbar||^2 and S2 = sum_i ||g_i||^2, so the entire client-side
+  RLOO pass costs one streaming mean + two scalars.  This is what the
+  production (mesh-distributed) path uses.
+
+Server-side leave-one-out (Eq. 10) similarly reduces to a single weighted
+all-reduce plus a local rank correction:
+
+      c_{V\\u} = (n * gbar_w - n_u * g_u) / (n - n_u),
+      gbar_w   = sum_v (n_v / n) * g_v.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree_math import (
+    tree_dot, tree_mean, tree_norm_sq, tree_scale, tree_sub,
+)
+
+
+# ---------------------------------------------------------------------------
+# Client level: RLOO over K microbatch (paper: per-sample) gradients
+# ---------------------------------------------------------------------------
+
+def loo_baselines(g_stack):
+    """Naive leave-one-out baselines c_{D\\i} (paper Eq. 8-9).
+
+    g_stack: pytree whose leaves are stacked along axis 0 with K entries.
+    Returns a pytree of the same stacked shape: c_i = mean_{j != i} g_j.
+    """
+    def per_leaf(x):
+        k = x.shape[0]
+        total = jnp.sum(x, axis=0, keepdims=True)
+        return (total - x) / (k - 1)
+    return jax.tree.map(per_leaf, g_stack)
+
+
+def rloo_reshape(g_stack, alpha):
+    """g'_i = g_i - alpha * c_{D\\i} (paper Eq. 9), naive form."""
+    c = loo_baselines(g_stack)
+    return jax.tree.map(lambda g, ci: g - alpha * ci, g_stack, c)
+
+
+class ClientCVStats(NamedTuple):
+    """Sufficient statistics of a client's RLOO pass (all scalars + mean grad).
+
+    mean_grad    : gbar_u (pytree) — the only tensor communicated.
+    k            : number of RLOO units (microbatches).
+    mean_norm_sq : S1 = ||gbar_u||^2.
+    sum_norm_sq  : S2 = sum_i ||g_u^i||^2.
+    """
+    mean_grad: object
+    k: jnp.ndarray
+    mean_norm_sq: jnp.ndarray
+    sum_norm_sq: jnp.ndarray
+
+
+def client_stats_from_stack(g_stack) -> ClientCVStats:
+    """Compute ClientCVStats by one pass over stacked gradients."""
+    gbar = tree_mean(g_stack, axis=0)
+    leaves = jax.tree.leaves(g_stack)
+    k = leaves[0].shape[0]
+    s2 = jnp.sum(jnp.stack([
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves]))
+    s1 = tree_norm_sq(gbar)
+    return ClientCVStats(gbar, jnp.asarray(k, jnp.float32), s1, s2)
+
+
+def client_message(stats: ClientCVStats, alpha):
+    """The gradient a client uploads: mean_i (g_i - alpha c_{D\\i}) = (1-alpha) gbar."""
+    return tree_scale(stats.mean_grad, 1.0 - alpha)
+
+
+def rloo_scalar_moments(stats: ClientCVStats):
+    """Closed-form second moments of the RLOO pair, from the two scalars.
+
+    Returns (E[g_i c_i], E[c_i^2]) where E is the empirical mean over i and
+    products are global inner products / squared norms.
+    """
+    k, s1, s2 = stats.k, stats.mean_norm_sq, stats.sum_norm_sq
+    e_gc = (k * k * s1 - s2) / (k * (k - 1.0))
+    e_cc = (k * k * (k - 2.0) * s1 + s2) / (k * (k - 1.0) ** 2)
+    return e_gc, e_cc
+
+
+def optimal_alpha_single(stats: ClientCVStats):
+    """Variance-optimal alpha for the single (client-side) control variate.
+
+    alpha* = Cov(g, c)/Var(c); following the paper's Eq. (7) optimum with the
+    zero-mean-CV simplification E[c] = 0 used throughout the paper, this is
+    E[g c] / E[c^2], computed from the reduced statistics.
+    """
+    e_gc, e_cc = rloo_scalar_moments(stats)
+    return e_gc / jnp.maximum(e_cc, 1e-20)
+
+
+def alpha_sqnorm_grad(stats: ClientCVStats, alpha):
+    """d ||g_u(alpha)||^2 / d alpha for Algorithm 1 line 12.
+
+    g_u(alpha) = (1 - alpha) gbar_u exactly, so the derivative is
+    -2 (1 - alpha) ||gbar_u||^2.
+    """
+    return -2.0 * (1.0 - alpha) * stats.mean_norm_sq
+
+
+def alpha_descent_update(alpha, stats: ClientCVStats, lr, alpha_max=1.0):
+    """Algorithm 1 line 12: alpha_u <- alpha_u - gamma * d||g_u||^2/d alpha.
+
+    Clamped to [0, alpha_max]: the unclamped iteration drives alpha -> 1
+    (which zeroes the client message — see DESIGN.md §1.1); the clamp is the
+    practical guard the paper leaves implicit.
+    """
+    new = alpha - lr * alpha_sqnorm_grad(stats, alpha)
+    return jnp.clip(new, 0.0, alpha_max)
+
+
+# ---------------------------------------------------------------------------
+# Server level: RLOO over participating clients (paper Eq. 10-12)
+# ---------------------------------------------------------------------------
+
+def server_loo_baselines(client_grads, n_samples):
+    """Naive c_{V\\u} = sum_{v != u} n_v/(n - n_u) g_v (paper Eq. 10).
+
+    client_grads: list of pytrees; n_samples: 1-d array of per-client n_u.
+    Returns a list of pytrees.
+    """
+    n = jnp.sum(n_samples)
+    out = []
+    for u in range(len(client_grads)):
+        acc = None
+        for v, g_v in enumerate(client_grads):
+            if v == u:
+                continue
+            w = n_samples[v] / (n - n_samples[u])
+            term = tree_scale(g_v, w)
+            acc = term if acc is None else jax.tree.map(jnp.add, acc, term)
+        out.append(acc)
+    return out
+
+
+def server_loo_from_mean(gbar_w, g_u, n_u, n):
+    """Reduced c_{V\\u} = (n gbar_w - n_u g_u)/(n - n_u).
+
+    gbar_w = sum_v (n_v/n) g_v is one weighted all-reduce; the correction is
+    local to each client shard — no all-to-all needed.
+    """
+    scale = 1.0 / (n - n_u)
+    return jax.tree.map(lambda m, g: (n * m - n_u * g) * scale, gbar_w, g_u)
+
+
+def networked_aggregate(client_grads, n_samples, beta=1.0):
+    """Full FedNCV server step (Eq. 10-12): g = sum_u p_u (g_u - beta c_{V\\u}).
+
+    beta is the server-side CV coefficient (paper uses beta=1 implicitly).
+    Under full participation and equal weights the beta=1 aggregate is exactly
+    zero (DESIGN.md §1.1) — this function is meant to run on a *sampled
+    cohort*, where c_{V\\u} is a genuine variance-reducing baseline.
+    """
+    n_samples = jnp.asarray(n_samples, jnp.float32)
+    n = jnp.sum(n_samples)
+    p = n_samples / n
+    gbar_w = None
+    for w, g in zip(p, client_grads):
+        term = tree_scale(g, w)
+        gbar_w = term if gbar_w is None else jax.tree.map(jnp.add, gbar_w, term)
+    agg = None
+    for u, g_u in enumerate(client_grads):
+        c_u = server_loo_from_mean(gbar_w, g_u, n_samples[u], n)
+        g_prime = jax.tree.map(lambda g, c: g - beta * c, g_u, c_u)
+        term = tree_scale(g_prime, p[u])
+        agg = term if agg is None else jax.tree.map(jnp.add, agg, term)
+    return agg
+
+
+def networked_aggregate_stacked(g_stack, n_samples, beta=1.0):
+    """Same as `networked_aggregate` but over leaves stacked on axis 0.
+
+    This is the vmap/simulator-friendly form: one pass, no Python loop over
+    clients inside jit.
+    """
+    n_samples = jnp.asarray(n_samples, jnp.float32)
+    n = jnp.sum(n_samples)
+    p = n_samples / n
+
+    def per_leaf(x):
+        # x: (M, ...) stacked client gradients.
+        bshape = (-1,) + (1,) * (x.ndim - 1)
+        pw = p.reshape(bshape)
+        nu = n_samples.reshape(bshape)
+        gbar_w = jnp.sum(pw * x, axis=0, keepdims=True)
+        c = (n * gbar_w - nu * x) / (n - nu)
+        g_prime = x - beta * c
+        return jnp.sum(pw * g_prime, axis=0)
+
+    return jax.tree.map(per_leaf, g_stack)

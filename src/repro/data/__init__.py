@@ -1,0 +1,4 @@
+from repro.data.dirichlet import dirichlet_partition, label_distribution  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    SPECS, federated_splits, make_image_dataset, make_token_dataset,
+)

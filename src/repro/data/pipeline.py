@@ -1,0 +1,88 @@
+"""Batching/prefetch pipeline: host-side iterators feeding the train loops.
+
+Design: numpy-side random access (synthetic arrays or memmaps), fixed-shape
+batches (jit-stable), optional double-buffered prefetch on a background
+thread so host batch assembly overlaps device compute — the standard
+single-host input pipeline shape, minus tf.data.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+class TokenBatcher:
+    """Next-token batches from a flat token stream.
+
+    Yields dict(tokens (B, S) int32, labels (B, S) int32) forever.
+    """
+
+    def __init__(self, tokens: np.ndarray, batch: int, seq: int, seed=0):
+        assert len(tokens) > seq + 1
+        self.tokens = np.asarray(tokens, np.int32)
+        self.batch, self.seq = batch, seq
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        starts = self.rng.integers(0, len(self.tokens) - self.seq - 1,
+                                   size=self.batch)
+        x = np.stack([self.tokens[s:s + self.seq] for s in starts])
+        y = np.stack([self.tokens[s + 1:s + self.seq + 1] for s in starts])
+        return dict(tokens=x, labels=y)
+
+
+class ClientBatcher:
+    """FL microbatch draws: (K, b) index picks from one client's shard."""
+
+    def __init__(self, data: dict, client_idx: np.ndarray, k_micro: int,
+                 micro_batch: int, seed=0):
+        self.data = data
+        pool = np.asarray(client_idx)
+        self.pool = pool[pool >= 0]
+        self.k, self.b = k_micro, micro_batch
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        need = self.k * self.b
+        take = self.rng.choice(self.pool, size=need,
+                               replace=len(self.pool) < need)
+        picks = take.reshape(self.k, self.b)
+        return {k: np.asarray(v)[picks] for k, v in self.data.items()
+                if k not in ("client_idx", "client_sizes")}
+
+
+def prefetch(iterator, depth: int = 2):
+    """Double-buffered background prefetch; yields device arrays."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = object()
+
+    def worker():
+        try:
+            for item in iterator:
+                q.put(jax.tree.map(jax.numpy.asarray, item))
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item
+
+
+def take(iterator, n: int):
+    for i, item in enumerate(iterator):
+        if i >= n:
+            return
+        yield item

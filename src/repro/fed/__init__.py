@@ -1,0 +1,2 @@
+from repro.fed.methods import MethodConfig, Task  # noqa: F401
+from repro.fed.simulator import FLConfig, Simulator  # noqa: F401

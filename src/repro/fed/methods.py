@@ -1,0 +1,329 @@
+"""Federated optimization methods: FedNCV (the paper) + the six comparison
+baselines from Table 1 (FedAvg, FedProx, SCAFFOLD, FedRep, FedPer, pFedSim)
++ the beyond-paper FedNCV+ (stale server control variates, FedVARP-style).
+
+Every method is factored into two pure, vmap/pjit-friendly functions:
+
+    client_update(task, params, cstate, batches, key) -> ClientOut
+    server_update(task, params, souts, n_samples)     -> (params, sstate)
+
+`batches` is a pytree whose leaves are stacked (K, micro_batch, ...) — the K
+RLOO units.  All methods consume the same structure so the simulator and the
+distributed runtime can swap methods without re-plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing as tp
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import control_variates as cv
+from repro.utils.tree_math import (
+    tree_axpy, tree_mean, tree_scale, tree_sub, tree_zeros_like, tree_dot,
+    tree_norm_sq,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """Binds a model to the FL runtime."""
+    loss: tp.Callable            # (params, batch) -> scalar
+    head_keys: tuple = ()        # top-level param keys that stay personal
+    accuracy: tp.Callable | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodConfig:
+    name: str
+    local_lr: float = 0.05
+    local_epochs: int = 1
+    prox_mu: float = 0.1         # FedProx
+    ncv_alpha0: float = 0.5      # FedNCV initial alpha_u
+    ncv_alpha_lr: float = 1e-3   # Algorithm 1 line 12 step size
+    ncv_beta: float = 1.0        # server-side CV coefficient (paper: 1)
+    ncv_alpha_mode: str = "descent"   # "descent" (Alg.1) | "optimal" (Prop.2)
+    head_local_steps: int = 3    # FedRep: head-only steps before body pass
+
+
+class ClientOut(tp.NamedTuple):
+    grad: tp.Any                 # uploaded gradient-like pytree
+    cstate: tp.Any               # new per-client state
+    aux: tp.Any                  # scalar diagnostics dict
+
+
+def _body_mask(task: Task, params):
+    """1.0 for body (aggregated) leaves, 0.0 for personal-head leaves."""
+    return {k: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32) if k in
+                            task.head_keys else jnp.ones_like(x, jnp.float32),
+                            v) for k, v in params.items()} \
+        if isinstance(params, dict) else jax.tree.map(
+            lambda x: jnp.ones_like(x, jnp.float32), params)
+
+
+def _microbatch_grads(task: Task, params, batches):
+    """Per-microbatch gradients at fixed params: leaves (K, ...)."""
+    return jax.vmap(lambda mb: jax.grad(task.loss)(params, mb))(batches)
+
+
+def _sgd_epoch(task: Task, params, batches, lr, grad_tx=None):
+    """One pass of sequential SGD over the K microbatches."""
+    def step(p, mb):
+        g = jax.grad(task.loss)(p, mb)
+        if grad_tx is not None:
+            g = grad_tx(p, g)
+        return jax.tree.map(lambda pi, gi: pi - lr * gi, p, g), None
+
+    params, _ = jax.lax.scan(step, params, batches)
+    return params
+
+
+def _k_of(batches) -> int:
+    return jax.tree.leaves(batches)[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# FedAvg
+# ---------------------------------------------------------------------------
+
+def fedavg_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
+    """local_epochs == 1 reproduces the paper's Eq. (2) exactly: one mean
+    gradient evaluated at theta_t.  local_epochs > 1 is McMahan-style
+    multi-step local SGD (cumulative gradient upload)."""
+    del key
+    if mc.local_epochs == 1:
+        grad = tree_mean(_microbatch_grads(task, params, batches), axis=0)
+        return ClientOut(grad, cstate, dict())
+    p_local = params
+    for _ in range(mc.local_epochs):
+        p_local = _sgd_epoch(task, p_local, batches, mc.local_lr)
+    k = _k_of(batches)
+    denom = mc.local_lr * mc.local_epochs * k
+    grad = jax.tree.map(lambda a, b: (a - b) / denom, params, p_local)
+    return ClientOut(grad, cstate, dict())
+
+
+def fedavg_server(mc, task, params, grads_stacked, n_samples, sstate, lr):
+    agg = cv.networked_aggregate_stacked(grads_stacked, n_samples, beta=0.0)
+    params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
+    return params, sstate, dict(agg_norm=tree_norm_sq(agg))
+
+
+# ---------------------------------------------------------------------------
+# FedProx: proximal term mu/2 ||p - p_t||^2 in the local objective
+# ---------------------------------------------------------------------------
+
+def fedprox_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
+    del key
+    anchor = params
+
+    def prox_grad(p, g):
+        return jax.tree.map(lambda gi, pi, ai: gi + mc.prox_mu * (pi - ai),
+                            g, p, anchor)
+
+    p_local = params
+    for _ in range(mc.local_epochs):
+        p_local = _sgd_epoch(task, p_local, batches, mc.local_lr,
+                             grad_tx=prox_grad)
+    k = _k_of(batches)
+    denom = mc.local_lr * mc.local_epochs * k
+    grad = jax.tree.map(lambda a, b: (a - b) / denom, params, p_local)
+    return ClientOut(grad, cstate, dict())
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD: local gradients corrected by (c - c_u); client keeps c_u
+# ---------------------------------------------------------------------------
+
+def scaffold_client(mc: MethodConfig, task: Task, params, cstate, batches,
+                    key):
+    del key
+    c_global, c_u = cstate["c_global"], cstate["c_u"]
+
+    def corr(p, g):
+        return jax.tree.map(lambda gi, cg, cu: gi - cu + cg, g, c_global, c_u)
+
+    p_local = params
+    for _ in range(mc.local_epochs):
+        p_local = _sgd_epoch(task, p_local, batches, mc.local_lr, grad_tx=corr)
+    k = _k_of(batches)
+    steps = mc.local_epochs * k
+    denom = mc.local_lr * steps
+    grad = jax.tree.map(lambda a, b: (a - b) / denom, params, p_local)
+    # c_u+ = c_u - c + (1/(steps*lr)) (x - y_local)  (SCAFFOLD option II)
+    c_u_new = jax.tree.map(lambda cu, cg, g: cu - cg + g, c_u, c_global, grad)
+    delta_c = tree_sub(c_u_new, c_u)
+    return ClientOut(grad, dict(cstate, c_u=c_u_new), dict(delta_c=delta_c))
+
+
+def scaffold_init_cstate(params):
+    return dict(c_global=tree_zeros_like(params), c_u=tree_zeros_like(params))
+
+
+# ---------------------------------------------------------------------------
+# FedNCV (the paper, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
+    """Client side of Algorithm 1 (lines 3-8).
+
+    Computes per-microbatch gradients (the RLOO units), reshapes them with the
+    leave-one-out baseline scaled by alpha_u, optionally takes local SGD steps
+    with the reshaped gradients, and uploads the expectation gradient plus the
+    two sufficient statistics the server needs to adapt alpha_u
+    (DESIGN.md §1.2 — the whole RLOO pass costs 2 extra scalars).
+    """
+    del key
+    alpha = cstate["alpha"]
+    g_stack = _microbatch_grads(task, params, batches)
+    stats = cv.client_stats_from_stack(g_stack)
+
+    if mc.local_epochs > 1:
+        # Multi-step variant: apply RLOO-reshaped gradients sequentially.
+        reshaped = cv.rloo_reshape(g_stack, alpha)
+        p_local = params
+
+        def step(p, g):
+            return jax.tree.map(lambda pi, gi: pi - mc.local_lr * gi, p, g), None
+        for _ in range(mc.local_epochs - 1):
+            p_local, _ = jax.lax.scan(step, p_local, reshaped)
+            g_stack = _microbatch_grads(task, p_local, batches)
+            reshaped = cv.rloo_reshape(g_stack, alpha)
+        stats = cv.client_stats_from_stack(g_stack)
+        k = _k_of(batches)
+        base = jax.tree.map(
+            lambda a, b: (a - b) / (mc.local_lr * (mc.local_epochs - 1) * k),
+            params, p_local)
+        grad = tree_axpy(1.0, cv.client_message(stats, alpha), base)
+        grad = tree_scale(grad, 0.5)   # average drift + final reshaped grad
+    else:
+        grad = cv.client_message(stats, alpha)     # == mean_i (g_i - a c_i)
+
+    aux = dict(mean_norm_sq=stats.mean_norm_sq, sum_norm_sq=stats.sum_norm_sq,
+               k=stats.k, alpha=alpha)
+    return ClientOut(grad, cstate, aux)
+
+
+def fedncv_server(mc: MethodConfig, task, params, grads_stacked, n_samples,
+                  aux, sstate, lr):
+    """Server side of Algorithm 1 (lines 9-13): networked aggregation (Eq.
+    10-12) + alpha_u adaptation (line 12, or Prop. 2 closed form)."""
+    agg = cv.networked_aggregate_stacked(grads_stacked, n_samples,
+                                         beta=mc.ncv_beta)
+    params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
+
+    stats = cv.ClientCVStats(None, aux["k"], aux["mean_norm_sq"],
+                             aux["sum_norm_sq"])
+    if mc.ncv_alpha_mode == "optimal":
+        alpha_new = jax.vmap(cv.optimal_alpha_single)(stats)
+    else:
+        alpha_new = jax.vmap(
+            lambda a, k, s1, s2: cv.alpha_descent_update(
+                a, cv.ClientCVStats(None, k, s1, s2), mc.ncv_alpha_lr))(
+            aux["alpha"], aux["k"], aux["mean_norm_sq"], aux["sum_norm_sq"])
+    return params, sstate, dict(alpha=alpha_new, agg_norm=tree_norm_sq(agg))
+
+
+def fedncv_init_cstate(params, mc: MethodConfig):
+    return dict(alpha=jnp.float32(mc.ncv_alpha0))
+
+
+# ---------------------------------------------------------------------------
+# FedNCV+ (beyond paper): stale per-client control variates at the server.
+# Under partial participation the within-round LOO baseline only sees the
+# cohort; keeping h_u = last uploaded gradient per client gives the SAGA-style
+# estimator  g = mean_all(h) + mean_cohort(g_u - h_u), unbiased and lower
+# variance when client gradients are temporally correlated.
+# ---------------------------------------------------------------------------
+
+def fedncv_plus_server(mc, task, params, grads_stacked, n_samples, idx,
+                       sstate, lr, m_total):
+    h_all = sstate["h"]                      # leaves (M_total, ...)
+    h_mean = tree_mean(h_all, axis=0)
+    h_cohort = jax.tree.map(lambda h: h[idx], h_all)
+    corr = jax.tree.map(lambda g, h: jnp.mean(g - h, axis=0),
+                        grads_stacked, h_cohort)
+    agg = jax.tree.map(jnp.add, h_mean, corr)
+    params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
+    h_all = jax.tree.map(lambda h, g: h.at[idx].set(g), h_all, grads_stacked)
+    return params, dict(sstate, h=h_all), dict(agg_norm=tree_norm_sq(agg))
+
+
+# ---------------------------------------------------------------------------
+# Personalization baselines: FedRep / FedPer / pFedSim
+# ---------------------------------------------------------------------------
+
+def _split_update(task, params, personal):
+    """Overlay personal head leaves onto global params."""
+    return {k: (personal[k] if k in task.head_keys else v)
+            for k, v in params.items()}
+
+
+def fedper_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
+    """FedPer: train body+head locally; upload body delta; keep head."""
+    del key
+    p_local = _split_update(task, params, cstate["personal"])
+    start = p_local
+    for _ in range(mc.local_epochs):
+        p_local = _sgd_epoch(task, p_local, batches, mc.local_lr)
+    k = _k_of(batches)
+    denom = mc.local_lr * mc.local_epochs * k
+    grad = jax.tree.map(lambda a, b: (a - b) / denom, start, p_local)
+    grad = {kk: (tree_zeros_like(v) if kk in task.head_keys else v)
+            for kk, v in grad.items()}
+    personal = {kk: p_local[kk] for kk in task.head_keys}
+    return ClientOut(grad, dict(cstate, personal=personal), dict())
+
+
+def fedrep_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
+    """FedRep: first fit the personal head (body frozen), then the body."""
+    del key
+    p_local = _split_update(task, params, cstate["personal"])
+
+    def head_only(p, g):
+        return {kk: (gv if kk in task.head_keys else tree_zeros_like(gv))
+                for kk, gv in g.items()}
+
+    def body_only(p, g):
+        return {kk: (tree_zeros_like(gv) if kk in task.head_keys else gv)
+                for kk, gv in g.items()}
+
+    for _ in range(mc.head_local_steps):
+        p_local = _sgd_epoch(task, p_local, batches, mc.local_lr,
+                             grad_tx=head_only)
+    start = p_local
+    for _ in range(mc.local_epochs):
+        p_local = _sgd_epoch(task, p_local, batches, mc.local_lr,
+                             grad_tx=body_only)
+    k = _k_of(batches)
+    denom = mc.local_lr * mc.local_epochs * k
+    grad = jax.tree.map(lambda a, b: (a - b) / denom, start, p_local)
+    grad = {kk: (tree_zeros_like(v) if kk in task.head_keys else v)
+            for kk, v in grad.items()}
+    personal = {kk: p_local[kk] for kk in task.head_keys}
+    return ClientOut(grad, dict(cstate, personal=personal), dict())
+
+
+def pfedsim_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
+    """pFedSim (simplified): FedAvg-style body training with a personal
+    classifier; the similarity-weighted classifier aggregation happens
+    server-side from the uploaded head vectors."""
+    out = fedper_client(mc, task, params, cstate, batches, key)
+    head_flat = jnp.concatenate([jnp.ravel(cstate["personal"][k])
+                                 for k in task.head_keys])
+    return out._replace(aux=dict(head=head_flat))
+
+
+def personal_init_cstate(task: Task, params):
+    return dict(personal={k: params[k] for k in task.head_keys})
+
+
+def pfedsim_server_mix(heads, personals, temp=5.0):
+    """Similarity-aware mixing of personal heads (pFedSim's model-similarity
+    aggregation, on the classifier only). heads: (M, d) flattened."""
+    norm = heads / (jnp.linalg.norm(heads, axis=1, keepdims=True) + 1e-8)
+    sim = norm @ norm.T                                   # (M, M)
+    w = jax.nn.softmax(temp * sim, axis=1)                # row-stochastic
+    return jax.tree.map(
+        lambda ph: jnp.einsum("mn,n...->m...", w, ph), personals)

@@ -1,0 +1,199 @@
+"""In-process FL simulator: the cohort dimension is vmapped on one device.
+
+Reproduces the paper's experimental protocol: M clients with Dirichlet(α)
+non-IID shards, a sampled cohort per round, local training, server
+aggregation per method, and pre-/post-personalization evaluation
+("test before" / "test after" in Table 1).
+
+The same `methods.py` client/server functions are reused by the
+mesh-distributed runtime (fed/distributed.py), so what this simulator
+validates is exactly what runs on the pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import methods as M
+from repro.utils.tree_math import tree_axpy, tree_zeros_like
+
+CLIENT_FNS = {
+    "fedavg": M.fedavg_client,
+    "fedprox": M.fedprox_client,
+    "scaffold": M.scaffold_client,
+    "fedncv": M.fedncv_client,
+    "fedncv+": M.fedavg_client,          # plain grads; server does the work
+    "fedrep": M.fedrep_client,
+    "fedper": M.fedper_client,
+    "pfedsim": M.pfedsim_client,
+}
+
+PERSONAL_METHODS = ("fedrep", "fedper", "pfedsim")
+
+
+@dataclasses.dataclass
+class FLConfig:
+    method: str = "fedncv"
+    n_clients: int = 100
+    cohort: int = 10                  # sampled clients per round
+    k_micro: int = 8                  # K microbatches (RLOO units)
+    micro_batch: int = 16
+    server_lr: float = 1.0
+    mc: M.MethodConfig = dataclasses.field(
+        default_factory=lambda: M.MethodConfig(name="fedncv"))
+
+
+class Simulator:
+    def __init__(self, task: M.Task, params, data, fl: FLConfig, seed=0):
+        """data: dict(images (N,...), labels (N,), client_idx (M, n_max) int32
+        padded with -1, client_sizes (M,))."""
+        self.task, self.fl = task, fl
+        self.params = params
+        self.data = data
+        self.rng = np.random.default_rng(seed)
+        m = fl.n_clients
+
+        # per-client state
+        if fl.method == "scaffold":
+            self.c_u = jax.vmap(lambda _: tree_zeros_like(params))(
+                jnp.arange(m))
+            self.c_global = tree_zeros_like(params)
+        elif fl.method == "fedncv":
+            self.alphas = jnp.full((m,), fl.mc.ncv_alpha0, jnp.float32)
+        elif fl.method in PERSONAL_METHODS:
+            self.personal = jax.vmap(
+                lambda _: {k: params[k] for k in task.head_keys})(
+                jnp.arange(m))
+        if fl.method == "fedncv+":
+            self.h = jax.vmap(lambda _: tree_zeros_like(params))(
+                jnp.arange(m))
+
+        self.round_fn = self._build_round_fn()
+        self.round_idx = 0
+
+    # ------------------------------------------------------------------
+    def _draw_cohort(self):
+        """Numpy-side data selection: cohort ids + (cohort,K,b,...) batches."""
+        fl = self.fl
+        idx = self.rng.choice(fl.n_clients, size=fl.cohort, replace=False)
+        sizes = np.asarray(self.data["client_sizes"])[idx]
+        picks = []
+        for u in idx:
+            pool = np.asarray(self.data["client_idx"][u])
+            pool = pool[pool >= 0]
+            need = fl.k_micro * fl.micro_batch
+            take = self.rng.choice(pool, size=need, replace=len(pool) < need)
+            picks.append(take.reshape(fl.k_micro, fl.micro_batch))
+        picks = np.stack(picks)                         # (cohort, K, b)
+        batch = {k: jnp.asarray(np.asarray(v)[picks])
+                 for k, v in self.data.items()
+                 if k not in ("client_idx", "client_sizes")}
+        return jnp.asarray(idx), batch, jnp.asarray(sizes, jnp.float32)
+
+    # ------------------------------------------------------------------
+    def _build_round_fn(self):
+        task, fl = self.task, self.fl
+        client_fn = CLIENT_FNS[fl.method]
+        mc = fl.mc
+
+        @jax.jit
+        def round_fn(params, cstates, batches, n_samples, key):
+            keys = jax.random.split(key, fl.cohort)
+            outs = jax.vmap(
+                lambda cs, b, k: client_fn(mc, task, params, cs, b, k)
+            )(cstates, batches, keys)
+            grads, new_cstates, aux = outs.grad, outs.cstate, outs.aux
+
+            if fl.method == "fedncv":
+                params, _, diag = M.fedncv_server(
+                    mc, task, params, grads, n_samples, aux, dict(),
+                    fl.server_lr)
+            else:
+                params, _, diag = M.fedavg_server(
+                    mc, task, params, grads, n_samples, dict(), fl.server_lr)
+                if fl.method == "scaffold":
+                    diag["c_delta"] = jax.tree.map(
+                        lambda d: jnp.mean(d, 0), aux["delta_c"])
+                if fl.method == "pfedsim":
+                    diag["heads"] = aux["head"]
+            return params, new_cstates, grads, diag
+
+        return round_fn
+
+    # ------------------------------------------------------------------
+    def _cohort_cstates(self, idx):
+        fl = self.fl
+        if fl.method == "scaffold":
+            return dict(
+                c_u=jax.tree.map(lambda x: x[idx], self.c_u),
+                c_global=jax.vmap(lambda _: self.c_global)(idx))
+        if fl.method == "fedncv":
+            return dict(alpha=self.alphas[idx])
+        if fl.method in PERSONAL_METHODS:
+            return dict(personal=jax.tree.map(lambda x: x[idx],
+                                              self.personal))
+        return dict(dummy=jnp.zeros(len(idx)))
+
+    def run_round(self, key=None):
+        fl = self.fl
+        key = key if key is not None else jax.random.PRNGKey(self.round_idx)
+        self.round_idx += 1
+        idx, batches, sizes = self._draw_cohort()
+        cstates = self._cohort_cstates(idx)
+        params, new_cstates, grads, diag = self.round_fn(
+            self.params, cstates, batches, sizes, key)
+
+        if fl.method == "fedncv+":
+            # server-side stale-CV aggregation replaces the FedAvg update
+            params, sstate, diag2 = M.fedncv_plus_server(
+                fl.mc, self.task, self.params, grads, sizes, idx,
+                dict(h=self.h), fl.server_lr, fl.n_clients)
+            self.h = sstate["h"]
+            diag.update(diag2)
+        self.params = params
+
+        # write back per-client state
+        if fl.method == "scaffold":
+            self.c_u = jax.tree.map(lambda a, n: a.at[idx].set(n),
+                                    self.c_u, new_cstates["c_u"])
+            self.c_global = tree_axpy(fl.cohort / fl.n_clients,
+                                      diag.pop("c_delta"), self.c_global)
+        elif fl.method == "fedncv":
+            self.alphas = self.alphas.at[idx].set(diag.pop("alpha"))
+        elif fl.method in PERSONAL_METHODS:
+            personal_new = new_cstates["personal"]
+            if fl.method == "pfedsim" and self.round_idx % 10 == 0:
+                mixed = M.pfedsim_server_mix(diag.pop("heads"), personal_new)
+                personal_new = mixed
+            self.personal = jax.tree.map(lambda a, n: a.at[idx].set(n),
+                                         self.personal, personal_new)
+        return {k: v for k, v in diag.items()
+                if isinstance(v, (int, float)) or getattr(v, "ndim", 1) == 0}
+
+    # ------------------------------------------------------------------
+    def evaluate(self, eval_data, personalize_steps=0):
+        """Mean per-client accuracy; personalize_steps>0 == "test after"."""
+        task, fl = self.task, self.fl
+        accs = []
+        for u in range(fl.n_clients):
+            pool = np.asarray(eval_data["client_idx"][u])
+            pool = pool[pool >= 0]
+            if len(pool) == 0:
+                continue
+            batch = {k: jnp.asarray(np.asarray(v)[pool])
+                     for k, v in eval_data.items()
+                     if k not in ("client_idx", "client_sizes")}
+            params = self.params
+            if fl.method in PERSONAL_METHODS:
+                personal = jax.tree.map(lambda x: x[u], self.personal)
+                params = M._split_update(task, params, personal)
+            if personalize_steps:
+                for _ in range(personalize_steps):
+                    g = jax.grad(task.loss)(params, batch)
+                    params = jax.tree.map(
+                        lambda p, gi: p - fl.mc.local_lr * gi, params, g)
+            accs.append(float(task.accuracy(params, batch)))
+        return float(np.mean(accs))

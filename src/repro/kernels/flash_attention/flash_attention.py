@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention forward.
+
+Supports GQA (H = r * KV query heads share KV heads), causal masking,
+sliding-window and logit-softcap variants — the attention flavors used by
+the assigned architectures (gemma2 local layers, llama4 chunked ~= window).
+
+TPU mapping:
+* grid = (B, H, nq, nk); the LAST grid axis is sequential on TPU, so the
+  (m, l, acc) online-softmax state lives in VMEM scratch carried across the
+  nk steps of one (b, h, iq) program — the classic TPU flash pattern
+  (vs. CUDA's warp-level reduction; DESIGN.md §2).
+* BlockSpecs tile q: (bq, hd), k/v: (bk, hd) into VMEM; hd padded to a
+  multiple of 128 upstream keeps MXU matmuls aligned.
+* scores/probs stay f32 in VMEM; only the final acc/l division is cast back.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, softcap, bq, bk, nk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = q @ k.T                                       # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + p @ v
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                              "block_q", "block_k",
+                                              "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    block_q=128, block_k=128, interpret=True):
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd); H % KV == 0.
+
+    Returns (B, S, H, hd). Forward only (training uses the pure-jnp blocked
+    path for AD; this kernel is the serving/prefill fast path).
+    """
+    b, s, h, hd = q.shape
+    s_kv, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(block_q, s)
+    bk = min(block_k, s_kv)
+    assert s % bq == 0 and s_kv % bk == 0
+    nq, nk = s // bq, s_kv // bk
+
+    # layout: (B, H, S, hd) per-head contiguous
+    qh = q.transpose(0, 2, 1, 3)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)

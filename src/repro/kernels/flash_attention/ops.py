@@ -1,0 +1,26 @@
+"""Jit'd public wrapper around the flash attention kernel, with automatic
+head-dim padding to MXU-aligned multiples of 128."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              interpret=True, block_q=128, block_k=128):
+    hd = q.shape[-1]
+    pad = (-hd) % 128
+    if pad:
+        # zero-pad hd; kernel scales by 1/sqrt(hd_padded), so pre-scale q to
+        # preserve the 1/sqrt(hd) softmax temperature.
+        fix = jnp.asarray(((hd + pad) / hd) ** 0.5, q.dtype)
+        padf = lambda x: jnp.pad(x, ((0, 0),) * 3 + ((0, pad),))
+        out = flash_attention(padf(q * fix), padf(k), padf(v), causal=causal,
+                              window=window, softcap=softcap,
+                              interpret=interpret, block_q=block_q,
+                              block_k=block_k)
+        return out[..., :hd]
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, interpret=interpret,
+                           block_q=block_q, block_k=block_k)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    b, s, h, hd = q.shape
+    s_kv, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    kh = jnp.repeat(k, rep, axis=2)
+    vh = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        kh.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s_kv)[None, :]
+    mask = jnp.ones((s, s_kv), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh.astype(jnp.float32))
+    return out.astype(q.dtype)

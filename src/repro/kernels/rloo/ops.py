@@ -1,0 +1,36 @@
+"""Jit'd public wrapper: RLOO over a gradient *pytree* using the fused kernel.
+
+Flattens the pytree into (K, N) chunks, runs the Pallas kernel, and
+reassembles ClientCVStats — drop-in for the reduced path in
+core/control_variates.py on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.control_variates import ClientCVStats
+from repro.kernels.rloo.rloo import rloo_combine
+from repro.utils.tree_math import tree_norm_sq
+
+
+def client_stats_fused(g_stack_tree, alpha, *, interpret: bool = True):
+    """g_stack_tree: pytree with leaves (K, ...).
+
+    Returns (ClientCVStats, gprime pytree). One HBM pass per leaf.
+    """
+    leaves, treedef = jax.tree.flatten(g_stack_tree)
+    k = leaves[0].shape[0]
+    means, gprimes, ssq = [], [], jnp.float32(0.0)
+    for leaf in leaves:
+        flat = leaf.reshape(k, -1)
+        m, gp, s = rloo_combine(flat, jnp.asarray(alpha, jnp.float32),
+                                interpret=interpret)
+        means.append(m.reshape(leaf.shape[1:]))
+        gprimes.append(gp.reshape(leaf.shape))
+        ssq = ssq + s
+    mean_tree = jax.tree.unflatten(treedef, means)
+    gp_tree = jax.tree.unflatten(treedef, gprimes)
+    s1 = tree_norm_sq(mean_tree)
+    stats = ClientCVStats(mean_tree, jnp.asarray(k, jnp.float32), s1, ssq)
+    return stats, gp_tree

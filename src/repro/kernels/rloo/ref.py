@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the rloo_combine kernel."""
+import jax.numpy as jnp
+
+
+def rloo_combine_ref(g_stack, alpha):
+    g = g_stack.astype(jnp.float32)
+    k = g.shape[0]
+    mean = jnp.mean(g, axis=0)
+    c = (k * mean[None, :] - g) / (k - 1)
+    gprime = g - alpha * c
+    sumsq = jnp.sum(g * g)
+    return mean, gprime, sumsq

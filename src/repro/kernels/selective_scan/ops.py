@@ -1,0 +1,21 @@
+"""Jit'd wrapper: selective scan over mamba-shaped states.
+
+Flattens (S, di, N) / (S, H, N, P) transition tensors to (S, C), runs the
+chunked Pallas kernel, and restores the shape — drop-in for
+models/ssm.selective_scan on TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.selective_scan import selective_scan
+
+
+def scan_states(a, b, *, chunk=128, interpret=True):
+    """a, b: (S, ...) broadcast-compatible; returns h with b's shape."""
+    b_shape = b.shape
+    s = b_shape[0]
+    a = jnp.broadcast_to(a, b_shape)
+    h = selective_scan(a.reshape(s, -1), b.reshape(s, -1), chunk=chunk,
+                       interpret=interpret)
+    return h.reshape(b_shape)

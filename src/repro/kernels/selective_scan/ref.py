@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: associative-scan selective scan (same as models/ssm.py)."""
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(a, b):
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=0)
+    return h

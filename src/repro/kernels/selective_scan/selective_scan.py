@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: chunked selective-state-space scan
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over channels)
+
+TPU adaptation of the Mamba CUDA kernel (DESIGN.md §2): instead of a
+warp-level sequential scan, the sequence is tiled into (chunk, block_c) VMEM
+tiles; within a chunk the scan runs as a log2(chunk)-step Blelloch doubling
+on the VPU (vector-parallel across channels), and the inter-chunk carry h
+rides in VMEM scratch across the sequential last grid axis.
+
+Grid = (n_channel_blocks, n_chunks): chunks iterate innermost (sequential on
+TPU) so the carry is live in VMEM for a whole channel block's sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, h_ref, carry_ref, *, rows):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[...].astype(jnp.float32)        # (rows, bc)
+    b = b_ref[...].astype(jnp.float32)
+    # inclusive scan by doubling: combine((A1,B1),(A2,B2)) = (A2 A1, A2 B1 + B2)
+    A, B = a, b
+    off = 1
+    while off < rows:
+        pad_a = jnp.ones((off, A.shape[1]), jnp.float32)
+        pad_b = jnp.zeros((off, B.shape[1]), jnp.float32)
+        A_prev = jnp.concatenate([pad_a, A[:-off]], axis=0)
+        B_prev = jnp.concatenate([pad_b, B[:-off]], axis=0)
+        A, B = A * A_prev, A * B_prev + B
+        off *= 2
+    h = A * carry_ref[...][None, :] + B       # fold in the inter-chunk carry
+    h_ref[...] = h.astype(h_ref.dtype)
+    carry_ref[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_c", "interpret"))
+def selective_scan(a, b, *, chunk: int = 128, block_c: int = 256,
+                   interpret: bool = True):
+    """a, b: (S, C) f32 -> h: (S, C) with h_t = a_t h_{t-1} + b_t.
+
+    S must be divisible by `chunk`; C is padded to `block_c` internally.
+    """
+    s, c = a.shape
+    assert s % chunk == 0, (s, chunk)
+    if c % block_c != 0:
+        pad = block_c - c % block_c
+        ap = jnp.pad(a, ((0, 0), (0, pad)))
+        bp = jnp.pad(b, ((0, 0), (0, pad)))
+        return selective_scan(ap, bp, chunk=chunk, block_c=block_c,
+                              interpret=interpret)[:, :c]
+    grid = (c // block_c, s // chunk)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, rows=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, block_c), lambda icb, ic: (ic, icb)),
+            pl.BlockSpec((chunk, block_c), lambda icb, ic: (ic, icb)),
+        ],
+        out_specs=pl.BlockSpec((chunk, block_c), lambda icb, ic: (ic, icb)),
+        out_shape=jax.ShapeDtypeStruct((s, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_c,), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,220 @@
+# The FIRST two lines must run before any other import (jax locks the device
+# count on first init): 512 placeholder host devices for the production mesh.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh, extract the roofline terms from the
+compiled artifact, and write a JSON record per combination.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+        --shape train_4k --mesh pod --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/
+
+No real memory is allocated: params/batches/caches enter .lower() as
+ShapeDtypeStructs with NamedShardings attached.
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch import train as train_lib
+
+from repro.launch.hlo_analysis import collective_totals
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (dense train) / 2 N D (inference), N = active
+    params (MoE: routed active + shared), D = tokens processed."""
+    p = train_lib.abstract_params(cfg)
+    total = sum(x.size for x in jax.tree.leaves(p))
+    if cfg.n_experts:
+        # subtract inactive expert weights
+        expert = sum(x.size for k, x in _named_leaves(p)
+                     if "/w_gate" in k or "/w_up" in k or "/w_down" in k)
+        active = expert * cfg.top_k / cfg.n_experts
+        total = total - expert + active
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * total * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * total * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * total * tokens
+
+
+def _named_leaves(tree):
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        yield ("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in kp), leaf)
+
+
+def apply_opts(opts):
+    """Perf-hillclimb toggles (EXPERIMENTS.md §Perf). Returns k_micro."""
+    from repro.sharding import specs as specs_lib
+    from repro.sharding import ctx as ctx_lib
+    mode = "baseline"
+    if "expert_parallel" in opts:
+        mode = "edata"
+    if "expert_model" in opts:
+        mode = "emodel"
+    if "expert_2d" in opts:
+        mode = "e2d"
+    specs_lib.set_expert_parallel(mode)
+    specs_lib.set_replicate_kv("replicate_kv" in opts)
+    ctx_lib.set_seq_parallel("seq_parallel" in opts)
+    ctx_lib.set_moe_chunked("moe_chunked" in opts)
+    ctx_lib.set_causal_skip("causal_skip" in opts)
+    return 1 if "k_micro1" in opts else 4
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool, opts=()):
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    kind = shape.kind
+    k_micro = apply_opts(opts)
+    args, in_shardings = train_lib.sharded_in_specs(cfg, mesh, shape, kind)
+    if kind == "train":
+        step = train_lib.make_train_step(
+            cfg, k_micro=k_micro,
+            grad_dtype=(jnp.bfloat16 if arch.startswith("kimi")
+                        else jnp.float32))
+    elif kind == "prefill":
+        step = train_lib.make_prefill_step(cfg)
+    else:
+        step = train_lib.make_serve_step(cfg)
+    from repro.sharding.ctx import activation_mesh
+    with mesh, activation_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        lowered = jitted.lower(*args)
+    return cfg, shape, mesh, lowered
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, opts=()) -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, lowered = build_lowered(arch, shape_name, multi_pod,
+                                              opts)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    from repro.launch import roofline as rl
+
+    n_chips = math.prod(mesh.devices.shape)
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_totals(hlo)       # trip-count-aware (hlo_analysis.py)
+
+    # raw cost_analysis (recorded for reference; undercounts scan bodies —
+    # they are counted once per while, see roofline.py docstring)
+    raw_flops = float(cost.get("flops", -1))
+    raw_bytes = float(cost.get("bytes accessed", -1))
+
+    mf = model_flops(cfg, shape)
+    train_mult = rl.TRAIN_MULT if shape.kind == "train" else 1.0
+    flops_dev = rl.flops_estimate(cfg, shape) * train_mult / n_chips
+    bytes_dev = rl.bytes_estimate(cfg, shape, n_chips)
+
+    compute_s = flops_dev / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_dev / mesh_lib.HBM_BW
+    collective_s = coll.get("effective_total", coll["total"]) \
+        / mesh_lib.ICI_BW
+
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+
+    mem_fields = {}
+    if mem is not None:
+        for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "generated_code_size_in_bytes"):
+            mem_fields[f] = getattr(mem, f, None)
+
+    return dict(
+        arch=arch, shape=shape_name, opts=sorted(opts),
+        mesh="2x16x16" if multi_pod else "16x16", n_chips=n_chips,
+        ok=True, t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        raw_cost_analysis=dict(flops=raw_flops, bytes_accessed=raw_bytes),
+        collective=coll, model_flops=mf,
+        useful_flops_ratio=(mf / (flops_dev * n_chips)
+                            if flops_dev > 0 else None),
+        roofline=dict(terms, dominant=dominant),
+        memory=mem_fields,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--opts", default="",
+                    help="comma list: expert_parallel,seq_parallel,k_micro1")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    os.makedirs(args.out, exist_ok=True)
+    jobs = []
+    archs = sorted(configs.REGISTRY) if args.all else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}
+    for a in archs:
+        cfg = configs.get(a)
+        for s in shapes:
+            if not configs.shape_applicable(cfg, s):
+                continue
+            for mp in meshes[args.mesh]:
+                jobs.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in jobs:
+        tag = f"{a}__{s}__{'2x16x16' if mp else '16x16'}"
+        if opts:
+            tag += "__" + "+".join(sorted(opts))
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            rec = run_one(a, s, mp, opts)
+        except Exception as e:  # noqa: BLE001 — record the failure
+            rec = dict(arch=a, shape=s, opts=sorted(opts),
+                       mesh="2x16x16" if mp else "16x16", ok=False,
+                       error=f"{type(e).__name__}: {e}")
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["ok"]:
+            r = rec["roofline"]
+            print(f"  ok: lower {rec['t_lower_s']}s compile "
+                  f"{rec['t_compile_s']}s dominant={r['dominant']} "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                  f"coll={r['collective_s']:.4f}s", flush=True)
+        else:
+            print(f"  FAIL: {rec['error'][:300]}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Static analysis of compiled HLO text: collective-byte totals that account
+for while-loop (scan) trip counts.
+
+`compiled.cost_analysis()` and a naive grep both count a while body ONCE —
+but a scan-over-layers body executes n_layers times, so its all-reduces move
+n_layers x the bytes.  This pass:
+
+1. splits the HLO module into computations,
+2. extracts per-computation collective result-bytes and references to other
+   computations (fusion calls / to_apply / while body+condition),
+3. extracts while trip counts from the condition computation's
+   `compare(..., constant(N)), direction=LT` pattern,
+4. DFS-accumulates bytes from ENTRY with multiplicity = product of enclosing
+   trip counts.
+
+Byte convention: the *result shape* bytes of each collective instruction —
+the per-participant payload (for all-gather this is the gathered result, for
+reduce-scatter the scattered shard, for all-reduce the full buffer; ring
+algorithms move ~2x the buffer, so treat these as lower bounds within 2x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|"
+    r"f8e5m2|c64|c128)\[([0-9,]*)\]")
+
+# computation headers start at column 0: `%name (params) -> type {` / `ENTRY %...`
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    collectives: list          # (op, bytes)
+    refs: list                 # (child_name, kind) kind: call|while
+    while_children: list       # (body_name, cond_name)
+    text: str
+
+
+def split_computations(hlo: str) -> dict:
+    """Split module text into computations keyed by name.
+
+    Computation headers start at column 0 (instructions are indented), so a
+    col-0 `%name (` or `ENTRY %name (` opens a new computation.
+    """
+    comps = {}
+    cur_name, cur_lines, cur_entry = None, [], False
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            if cur_name is not None:
+                comps[cur_name] = ("\n".join(cur_lines), cur_entry)
+            cur_name = m.group(2)
+            cur_entry = bool(m.group(1))
+            cur_lines = [line]
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = ("\n".join(cur_lines), cur_entry)
+    return comps
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w.\-]+)[^\n]*?body=%?([\w.\-]+)"
+    r"|while\(.*?\)[^\n]*?body=%?([\w.\-]+)[^\n]*?condition=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def parse(hlo: str):
+    raw = split_computations(hlo)
+    comps = {}
+    for name, (text, is_entry) in raw.items():
+        collectives = []
+        refs = []
+        whiles = []
+        # join wrapped instruction lines: an instruction starts at a line
+        # containing " = "; its continuation lines don't.
+        instrs = []
+        for line in text.splitlines()[1:]:
+            if " = " in line:
+                instrs.append(line.strip())
+            elif instrs:
+                instrs[-1] += " " + line.strip()
+        for ins in instrs:
+            lhs, rhs = ins.split(" = ", 1)
+            cm = re.search(
+                r"[\s)}\]] (all-reduce|all-gather|reduce-scatter|all-to-all|"
+                r"collective-permute)(-start)?\(", " " + rhs)
+            if cm:
+                collectives.append((cm.group(1),
+                                    shape_bytes(rhs[:cm.start()]) or
+                                    shape_bytes(lhs)))
+            if re.search(r"[\s)}\]] ?while\(", " " + rhs):
+                bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                cdm = re.search(r"condition=%?([\w.\-]+)", rhs)
+                # XLA records the trip count in backend_config when known
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rhs)
+                if bm and cdm:
+                    whiles.append((bm.group(1), cdm.group(1),
+                                   int(tm.group(1)) if tm else None))
+                    continue
+            for ref in _CALL_RE.findall(rhs):
+                refs.append(ref)
+        comps[name] = Computation(name, is_entry, collectives, refs, whiles,
+                                  text)
+    return comps
+
+
+def trip_count(comps, cond_name: str) -> int:
+    """Extract N from the condition's `compare(..., constant(N)) LT`."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    # find compare line, then constants on it / referenced
+    best = None
+    for line in comp.text.splitlines():
+        if "compare(" in line and ("direction=LT" in line
+                                   or "direction=GT" in line):
+            for c in _TRIP_RE.findall(line):
+                best = int(c)
+    if best is None:
+        cs = _TRIP_RE.findall(comp.text)
+        best = max((int(c) for c in cs), default=1)
+    return max(best, 1)
+
+
+def collective_totals(hlo: str) -> dict:
+    """Multiplicity-weighted collective bytes by op type."""
+    comps = parse(hlo)
+    totals = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts = {k: 0.0 for k in COLLECTIVE_OPS}
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        seen_stack.add(name)
+        for op, b in comp.collectives:
+            totals[op] += b * mult
+            counts[op] += mult
+        for body, cond, trips in comp.while_children:
+            trips = trips if trips is not None else trip_count(comps, cond)
+            visit(body, mult * trips)
+            visit(cond, mult)
+        for ref in comp.refs:
+            visit(ref, mult)
+        seen_stack.discard(name)
+
+    entries = [c for c in comps.values() if c.is_entry]
+    for e in entries:
+        visit(e.name, 1.0)
+    totals["total"] = sum(totals[k] for k in COLLECTIVE_OPS)
+    # effective ICI bytes: a ring all-reduce moves ~2x its buffer
+    # (reduce-scatter phase + all-gather phase); the others move ~1x their
+    # result.  This is the number the roofline's collective term uses.
+    totals["effective_total"] = (2.0 * totals["all-reduce"]
+                                 + totals["all-gather"]
+                                 + totals["reduce-scatter"]
+                                 + totals["all-to-all"]
+                                 + totals["collective-permute"])
+    totals["counts"] = counts
+    return totals

@@ -1,0 +1,23 @@
+"""Production meshes for the multi-pod dry-run.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state.
+"""
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data=2, n_model=2):
+    """Small mesh for CI tests (requires >= n_data*n_model host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,192 @@
+"""Analytic roofline model: per-device FLOPs and HBM bytes for every
+(arch × input shape × mesh), derived from the config and the sharding plan.
+
+Why analytic: XLA's HLO cost analysis counts a while-loop body ONCE, so with
+scan-over-layers (x scan-over-microbatches x scan-over-attention-blocks) the
+reported FLOPs undercount by the product of trip counts (measured ~3-4 orders
+of magnitude on these models).  The dry-run records the raw cost_analysis
+numbers for reference, but the roofline terms use this model; collective
+bytes come from the trip-count-aware HLO pass (hlo_analysis.py).
+
+Conventions (documented in EXPERIMENTS.md):
+* matmul flops = 2 m n k; backward = 2x forward; full remat adds 1x forward
+  => train multiplier 4x on forward flops (the framework remats every
+  microbatch body with `nothing_saveable`).
+* blocked attention computes ALL (q, kv) tiles — no causal block skipping —
+  so attention flops use the full S^2 (this 2x waste is a hillclimb target).
+* per-device = global / n_chips (batch and TP shard all dominant terms; the
+  few replicated ops are noise at these sizes).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import dense as dense_mod
+
+TRAIN_MULT = 4.0      # fwd + remat-fwd + 2x bwd
+MOE_GROUP = 1024
+
+
+def _attn_context(cfg: ArchConfig, kind: str, s: int) -> list:
+    """Effective KV context per layer (list over one pattern group)."""
+    if cfg.family in ("ssm",):
+        return []
+    if cfg.family == "hybrid":
+        # shared attn applied n_apps times
+        return ["full"]
+    g = dense_mod.group_size(cfg)
+    return [dense_mod.member_kind(cfg, j) for j in range(g)]
+
+
+def _ctx_len(cfg, kind_name, s, decode_cache):
+    if kind_name == "local":
+        return min(cfg.sliding_window or s, s if not decode_cache else s)
+    if kind_name == "chunked":
+        return min(cfg.attn_chunk or s, s)
+    return s
+
+
+def flops_estimate(cfg: ArchConfig, shape: InputShape) -> float:
+    """Global forward FLOPs for one step (train multiplier applied later)."""
+    s = shape.seq_len
+    if shape.kind == "decode":
+        b, q_len = shape.global_batch, 1
+        ctx = s
+    else:
+        b, q_len = shape.global_batch, s
+        ctx = s
+    d, v = cfg.d_model, cfg.vocab
+    hd = cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    tokens = b * q_len
+
+    total = 2.0 * tokens * d * v                       # unembed
+    n_attn_layers = 0
+    attn_flops = 0.0
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        n_attn_layers = cfg.n_layers
+    if cfg.family == "hybrid":
+        _, n_apps, _ = __import__("repro.models.hybrid",
+                                  fromlist=["plan"]).plan(cfg)
+        n_attn_layers = n_apps
+
+    if n_attn_layers:
+        g = dense_mod.group_size(cfg) if cfg.family in ("dense", "moe") else 1
+        kinds = ([dense_mod.member_kind(cfg, j) for j in range(g)]
+                 if cfg.family in ("dense", "moe") else ["full"])
+        per_group = 0.0
+        for kname in kinds:
+            if kname == "local" and cfg.sliding_window:
+                eff_ctx = min(cfg.sliding_window, ctx)
+            elif kname == "chunked" and cfg.attn_chunk:
+                eff_ctx = min(cfg.attn_chunk, ctx)
+            else:
+                eff_ctx = ctx
+            if shape.kind != "decode" and kname == "full":
+                eff_ctx = s                # blocked attn: full S^2, no skipping
+                from repro.sharding.ctx import causal_skip_enabled
+                if causal_skip_enabled():
+                    # static tile skipping visits (nq+1)/2nq of the kv blocks
+                    eff_ctx = s * 0.5 * (1.0 + 512.0 / max(s, 512))
+            proj = 2.0 * tokens * d * (2 * h * hd + 2 * kv * hd)
+            scores = 4.0 * b * q_len * eff_ctx * h * hd
+            per_group += proj + scores
+        n_groups = n_attn_layers // max(len(kinds), 1)
+        attn_flops = per_group * n_groups
+    total += attn_flops
+
+    # FFN / MoE / SSM per layer
+    if cfg.family in ("dense", "vlm"):
+        total += 6.0 * tokens * d * cfg.d_ff * cfg.n_layers
+    if cfg.family == "encdec":
+        total += 4.0 * tokens * d * cfg.d_ff * cfg.n_layers  # gelu mlp: 2 mats
+        # encoder (only train/prefill; decode reuses cached cross K/V)
+        if shape.kind != "decode":
+            te = b * cfg.enc_frames
+            total += (2.0 * te * d * (4 * h * hd)
+                      + 4.0 * b * cfg.enc_frames ** 2 * h * hd
+                      + 4.0 * te * d * cfg.d_ff) * cfg.n_enc_layers
+        # decoder cross-attn
+        total += (2.0 * tokens * d * (2 * h * hd)
+                  + 4.0 * b * q_len * cfg.enc_frames * h * hd) * cfg.n_layers
+    if cfg.family == "vlm":
+        # cross-attn layers: kv from image tokens
+        n_cross = cfg.n_layers // cfg.cross_attn_period
+        total += (4.0 * b * q_len * cfg.n_image_tokens * h * hd) * n_cross
+    if cfg.family == "moe":
+        cap_tokens = tokens * cfg.top_k * cfg.capacity_factor
+        total += (6.0 * cap_tokens * d * cfg.d_ff_expert
+                  + 2.0 * tokens * d * cfg.n_experts) * cfg.n_layers
+        if cfg.n_shared_experts:
+            total += 6.0 * tokens * d * cfg.d_ff * cfg.n_shared_experts \
+                * cfg.n_layers
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models import ssm as ssm_mod
+        if cfg.mamba_version == 1 and cfg.family == "ssm":
+            sh = ssm_mod.mamba1_shapes(cfg)
+            di, r, n = sh["d_inner"], sh["dt_rank"], sh["n"]
+            per = (2.0 * tokens * d * 2 * di              # in_proj
+                   + 2.0 * tokens * di * cfg.ssm_conv     # conv
+                   + 2.0 * tokens * di * (r + 2 * n)      # x_proj
+                   + 2.0 * tokens * r * di                # dt_proj
+                   + 14.0 * tokens * di * n               # scan + y
+                   + 2.0 * tokens * di * d)               # out_proj
+            total += per * cfg.n_layers
+        else:
+            sh = ssm_mod.mamba2_shapes(cfg)
+            di, nh, p, n = sh["d_inner"], sh["n_heads"], sh["p"], sh["n"]
+            n_mamba = cfg.n_layers
+            if cfg.family == "hybrid":
+                from repro.models.hybrid import plan
+                n_mamba, n_apps, _ = plan(cfg)
+                total += 6.0 * tokens * d * cfg.d_ff * n_apps  # shared MLP
+            per = (2.0 * tokens * d * (2 * di + 2 * n + nh)
+                   + 2.0 * tokens * (di + 2 * n) * cfg.ssm_conv
+                   + 14.0 * tokens * nh * n * p
+                   + 2.0 * tokens * di * d)
+            total += per * n_mamba
+    return total
+
+
+def params_count(cfg: ArchConfig) -> float:
+    import jax
+    from repro.launch.train import abstract_params
+    p = abstract_params(cfg)
+    return float(sum(x.size for x in jax.tree.leaves(p)))
+
+
+def bytes_estimate(cfg: ArchConfig, shape: InputShape, n_chips: int,
+                   k_micro: int = 4) -> float:
+    """Per-device HBM traffic (bytes) for one step — napkin model.
+
+    train:   4 reads of the weight shard per microbatch (fwd, remat-fwd,
+             2 bwd passes touch weights twice) + grad read/write (f32)
+             + activation traffic ~12 B·S·d bytes/layer/microbatch.
+    decode:  one weight-shard read + KV-cache/state shard read+write.
+    prefill: one weight read + activation traffic.
+    """
+    import jax
+    from repro.launch.train import abstract_params
+    p = abstract_params(cfg)
+    w_bytes = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(p)) / n_chips
+    d = cfg.d_model
+    # activations: batch sharded over client axes, d over model during TP ops
+    # => activation traffic divides by n_chips (approximation).
+    if shape.kind == "train":
+        toks_dev = shape.global_batch * shape.seq_len / n_chips
+        act = 12.0 * toks_dev * d * 2 * cfg.n_layers
+        return 4.0 * k_micro * w_bytes + 12.0 * w_bytes + act
+    if shape.kind == "prefill":
+        toks_dev = shape.global_batch * shape.seq_len / n_chips
+        act = 12.0 * toks_dev * d * 2 * cfg.n_layers
+        return w_bytes + act
+    # decode: weights + cache
+    from repro.models import api
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, shape.global_batch,
+                                                  shape.seq_len))
+    c_bytes = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(cache)) / n_chips
+    return w_bytes + 2.0 * c_bytes

@@ -1,0 +1,67 @@
+"""CLI serving driver: batched greedy decode against a KV cache / SSM state.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \\
+        --reduced --batch 8 --prompt 32 --decode 64
+
+This is the same `decode_step` the dry-run lowers as `serve_step` for the
+decode_32k / long_500k shapes; with --reduced it runs for real on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--decode", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    cache_len = args.prompt + args.decode
+    cache = api.init_cache(cfg, args.batch, cache_len)
+    batch = api.make_batch(cfg, key, args.batch, args.prompt)
+
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        cache = encdec.prefill_cross(cfg, params, cache, enc_out)
+    if cfg.family == "vlm":
+        from repro.models import vlm
+        cache = vlm.prefill_cross(cfg, params, cache, batch["image_embeds"])
+
+    step = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos))
+    # prefill by teacher-forcing the prompt through the decoder
+    logits = None
+    for i in range(args.prompt):
+        logits, cache = step(params, cache, batch["tokens"][:, i:i + 1],
+                             jnp.int32(i))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    t0 = time.time()
+    for i in range(args.decode):
+        logits, cache = step(params, cache, tok, jnp.int32(args.prompt + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    print(f"{cfg.name}: decoded {args.decode} x batch {args.batch} in "
+          f"{dt:.2f}s -> {args.batch * args.decode / dt:.1f} tok/s")
+    assert not bool(jnp.isnan(logits).any()), "NaN logits"
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Production train/serve step builders for the pjit (GSPMD) path.
+
+`make_train_step` builds the FedNCV training step used by the dry-run and the
+end-to-end driver:
+
+* the global batch is client-sharded over the ("pod","data") mesh axes;
+* K microbatches (the RLOO units) are scanned with rematerialized forwards,
+  accumulating the mean gradient plus the two RLOO sufficient statistics
+  S1 = ||gbar||^2 and S2 = sum_i ||g_i||^2 (DESIGN.md §1.2);
+* the server update is the networked-CV update.  Under the dry-run setting
+  (equal client weights, full participation) the server-side LOO term cancels
+  identically (paper Appendix A, Eq. 16), so the update is
+  theta <- theta - lr * (1 - alpha) * gbar with alpha adapted per Algorithm 1
+  line 12 — the faithful FedNCV update, at exactly FedAvg's collective cost.
+  Per-client (per-shard) statistics and unequal-weight server LOO live in
+  fed/distributed.py (shard_map path).
+
+`make_serve_step` builds the one-token decode step against a sharded KV cache
+(or SSM state), and `make_prefill_step` the full-sequence forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.sharding import (batch_shardings, cache_shardings,
+                            params_shardings)
+from repro.utils.tree_math import tree_norm_sq
+
+
+def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
+                    ncv: bool = True, alpha_lr: float = 1e-3,
+                    grad_dtype=jnp.float32):
+    """Returns train_step(params, alpha, batch) -> (params, alpha, metrics)."""
+
+    def train_step(params, alpha, batch):
+        def split(x):
+            b = x.shape[0]
+            return x.reshape((k_micro, b // k_micro) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        @functools.partial(jax.remat,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def micro_grad(p, mb):
+            return jax.value_and_grad(lambda q: api.loss(cfg, q, mb))(p)
+
+        def body(carry, mb):
+            gsum, s2, loss_sum = carry
+            loss, g = micro_grad(params, mb)
+            s2 = s2 + tree_norm_sq(g)
+            gsum = jax.tree.map(lambda a, b_: a + b_.astype(grad_dtype),
+                                gsum, g)
+            return (gsum, s2, loss_sum + loss), None
+
+        gsum0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+        (gsum, s2, loss_sum), _ = jax.lax.scan(
+            body, (gsum0, jnp.float32(0.0), jnp.float32(0.0)), micro)
+
+        gbar = jax.tree.map(lambda g: g / k_micro, gsum)
+        s1 = tree_norm_sq(gbar)                       # ||gbar||^2
+        k = jnp.float32(k_micro)
+
+        if ncv:
+            # client message mean_i (g_i - alpha c_i) == (1-alpha) gbar;
+            # server LOO cancels under equal weights (Appendix A Eq. 16).
+            scale = (1.0 - alpha) * lr
+            # Algorithm 1 line 12: alpha <- alpha - lr_a * d||g(alpha)||^2/da
+            alpha_new = jnp.clip(
+                alpha + alpha_lr * 2.0 * (1.0 - alpha) * s1, 0.0, 1.0)
+        else:
+            scale = lr
+            alpha_new = alpha
+        params = jax.tree.map(
+            lambda p, g: (p - scale * g).astype(p.dtype), params, gbar)
+        metrics = dict(loss=loss_sum / k_micro, s1=s1, s2=s2,
+                       rloo_var=(s2 - k * s1) / jnp.maximum(k - 1.0, 1.0),
+                       alpha=alpha_new)
+        return params, alpha_new, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return api.logits(cfg, params, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens, pos):
+        return api.decode_step(cfg, params, cache, tokens, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding plumbing shared by dryrun.py and the drivers
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def main():
+    """CLI driver: short FedNCV training run on a (reduced) architecture.
+
+        PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b \\
+            --reduced --steps 50 --batch 8 --seq 128
+    """
+    import argparse
+    import time
+
+    from repro import configs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test variant (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--k-micro", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--no-ncv", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n / 1e6:.1f}M params (reduced={args.reduced})")
+    step_fn = jax.jit(make_train_step(cfg, k_micro=args.k_micro, lr=args.lr,
+                                      ncv=not args.no_ncv))
+    alpha = jnp.float32(0.25)
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for step in range(args.steps):
+        key, sub = jax.random.split(key)
+        batch = api.make_batch(cfg, sub, args.batch, args.seq)
+        params, alpha, m = step_fn(params, alpha, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(m['loss']):.4f} "
+                  f"alpha={float(m['alpha']):.3f} "
+                  f"rloo_var={float(m['rloo_var']):.3e} "
+                  f"({(time.time() - t0) / max(step, 1):.2f}s/step)",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()
+
+
+def sharded_in_specs(cfg: ArchConfig, mesh, shape, kind: str):
+    """Returns (args_shape_structs, in_shardings) for .lower()."""
+    p_shapes = abstract_params(cfg)
+    p_shard = params_shardings(p_shapes, mesh)
+    if kind == "train":
+        batch = api.make_batch(cfg, None, shape.global_batch, shape.seq_len,
+                               as_shapes=True)
+        b_shard = batch_shardings(batch, mesh)
+        alpha = jax.ShapeDtypeStruct((), jnp.float32)
+        return ((p_shapes, alpha, batch),
+                (p_shard, None, b_shard))
+    if kind == "prefill":
+        batch = api.make_batch(cfg, None, shape.global_batch, shape.seq_len,
+                               as_shapes=True)
+        b_shard = batch_shardings(batch, mesh)
+        return (p_shapes, batch), (p_shard, b_shard)
+    if kind == "decode":
+        cache = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))
+        c_shard = cache_shardings(cache, mesh)
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        t_shard = batch_shardings({"t": tokens}, mesh)["t"]
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return ((p_shapes, cache, tokens, pos),
+                (p_shard, c_shard, t_shard, None))
+    raise ValueError(kind)

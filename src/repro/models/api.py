@@ -1,0 +1,92 @@
+"""Unified model API: every architecture family exposes the same five entry
+points, dispatched on `cfg.family`.
+
+    init_params(cfg, key)                      -> params
+    loss(cfg, params, batch)                   -> scalar
+    logits(cfg, params, batch)                 -> (B, S, V)
+    init_cache(cfg, batch_size, cache_len)     -> decode state
+    decode_step(cfg, params, cache, tok, pos)  -> (logits, new cache)
+
+`batch` is a dict: tokens/labels always; `frames` for audio (stub frontend
+embeddings), `image_embeds` for VLM (stub vision encoder output).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import dense, encdec, hybrid, moe, ssm, vlm
+
+_FAMILIES = {
+    "dense": dense,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def family_module(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init_params(cfg: ArchConfig, key):
+    return family_module(cfg).init(cfg, key)
+
+
+def loss(cfg: ArchConfig, params, batch):
+    return family_module(cfg).loss_fn(cfg, params, batch)
+
+
+def logits(cfg: ArchConfig, params, batch):
+    mod = family_module(cfg)
+    if cfg.family == "encdec":
+        return mod.forward(cfg, params, batch["tokens"], batch["frames"])
+    if cfg.family == "vlm":
+        return mod.forward(cfg, params, batch["tokens"], batch["image_embeds"])
+    return mod.forward(cfg, params, batch["tokens"])
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int, dtype=None):
+    return family_module(cfg).init_cache(cfg, batch_size, cache_len,
+                                         dtype=dtype)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    return family_module(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+def make_batch(cfg: ArchConfig, key_or_tokens, batch_size: int, seq_len: int,
+               as_shapes: bool = False):
+    """Construct a batch (real random data, or ShapeDtypeStructs for dry-run)."""
+    import jax
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    dtype = jnp.dtype(cfg.dtype)
+    if as_shapes:
+        batch = dict(tokens=sds((batch_size, seq_len), jnp.int32),
+                     labels=sds((batch_size, seq_len), jnp.int32))
+        if cfg.family == "encdec":
+            batch["frames"] = sds((batch_size, cfg.enc_frames, cfg.d_model),
+                                  dtype)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds(
+                (batch_size, cfg.n_image_tokens, cfg.d_model), dtype)
+        return batch
+
+    import jax.random as jr
+    key = key_or_tokens
+    k1, k2, k3 = jr.split(key, 3)
+    batch = dict(
+        tokens=jr.randint(k1, (batch_size, seq_len), 0, cfg.vocab, jnp.int32),
+        labels=jr.randint(k2, (batch_size, seq_len), 0, cfg.vocab, jnp.int32))
+    if cfg.family == "encdec":
+        batch["frames"] = jr.normal(k3, (batch_size, cfg.enc_frames,
+                                         cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jr.normal(
+            k3, (batch_size, cfg.n_image_tokens, cfg.d_model), dtype)
+    return batch

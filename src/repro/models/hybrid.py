@@ -1,0 +1,137 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a *shared* attention+MLP block
+applied every `hybrid_attn_period` mamba blocks (arXiv:2411.15242).
+
+Layer accounting: `n_layers` counts both mamba blocks and shared-block
+applications — n_layers = n_mamba + n_mamba/period.  The shared block has ONE
+weight set (not scanned) but a *per-application* KV cache at decode time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm
+
+
+def plan(cfg: ArchConfig):
+    period = cfg.hybrid_attn_period
+    n_mamba = cfg.n_layers * period // (period + 1)
+    n_apps = n_mamba // period
+    assert n_mamba + n_apps == cfg.n_layers, (cfg.n_layers, n_mamba, n_apps)
+    return n_mamba, n_apps, period
+
+
+def _attn_spec(cfg: ArchConfig) -> L.AttnParamsSpec:
+    return L.AttnParamsSpec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+
+
+def init(cfg: ArchConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    n_mamba, _, _ = plan(cfg)
+    k_embed, k_mamba, k_attn, k_mlp = jax.random.split(key, 4)
+    shared = dict(L.init_attn(k_attn, _attn_spec(cfg), dtype),
+                  **L.init_swiglu(k_mlp, cfg.d_model, cfg.d_ff, dtype),
+                  attn_norm=jnp.zeros((cfg.d_model,), dtype),
+                  ffn_norm=jnp.zeros((cfg.d_model,), dtype))
+    return {
+        "embed": L.embed_init(k_embed, (cfg.vocab, cfg.d_model), dtype),
+        "mamba": ssm.init_mamba2(k_mamba, cfg, n_mamba, dtype),
+        "shared": shared,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def forward(cfg: ArchConfig, params, tokens):
+    b, s = tokens.shape
+    _, _, period = plan(cfg)
+    x = L.shard_batch(params["embed"][tokens])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    shared = params["shared"]
+    spec = _attn_spec(cfg)
+
+    def superblock(x, p_group):
+        for j in range(period):
+            p_j = jax.tree.map(lambda t: t[j], p_group)
+            h = L.rmsnorm(x, p_j["norm"])
+            x = x + ssm.mamba2_block(p_j, cfg, h)
+        # shared attention + MLP block (weights closed over, not scanned)
+        h = L.rmsnorm(x, shared["attn_norm"])
+        x = x + L.attention_block(shared, h, positions, spec, causal=True,
+                                  rope_theta=cfg.rope_theta)
+        h = L.rmsnorm(x, shared["ffn_norm"])
+        x = x + L.swiglu(shared, h)
+        return x, None
+
+    n_mamba, n_apps, _ = plan(cfg)
+    grouped = jax.tree.map(
+        lambda t: t.reshape((n_apps, period) + t.shape[1:]), params["mamba"])
+    x, _ = jax.lax.scan(superblock, x, grouped)
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.shard_logits((x @ params["embed"].T).astype(jnp.float32))
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    return L.softmax_xent(forward(cfg, params, batch["tokens"]),
+                          batch["labels"])
+
+
+def _attn_cache_len(cache_len: int) -> int:
+    """Shared-attn cache; windowed at long decode contexts (DESIGN.md §4 —
+    same LONG_DECODE_GLOBAL_WINDOW deviation as gemma2's global layers)."""
+    from repro.models.dense import LONG_DECODE_GLOBAL_WINDOW
+    return min(cache_len, LONG_DECODE_GLOBAL_WINDOW)
+
+
+def init_cache(cfg: ArchConfig, batch, cache_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_mamba, n_apps, period = plan(cfg)
+    s = ssm.mamba2_shapes(cfg)
+    conv_dim = s["d_inner"] + 2 * s["n"]
+    return dict(
+        conv=jnp.zeros((n_apps, period, batch, cfg.ssm_conv - 1, conv_dim),
+                       dtype),
+        h=jnp.zeros((n_apps, period, batch, s["n_heads"], s["n"], s["p"]),
+                    jnp.float32),
+        attn=L.init_kv_cache(n_apps, batch, _attn_cache_len(cache_len),
+                             cfg.n_kv_heads, cfg.hd, dtype),
+    )
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    _, n_apps, period = plan(cfg)
+    x = L.shard_batch(params["embed"][tokens])
+    shared = params["shared"]
+    spec = _attn_spec(cfg)
+
+    def superblock(x, xs):
+        p_group, conv, h, ck, cv = xs
+        new_conv, new_h = [], []
+        for j in range(period):
+            p_j = jax.tree.map(lambda t: t[j], p_group)
+            hin = L.rmsnorm(x, p_j["norm"])
+            y, cj, hj = ssm.mamba2_decode(p_j, cfg, hin, conv[j], h[j])
+            x = x + y
+            new_conv.append(cj)
+            new_h.append(hj)
+        hin = L.rmsnorm(x, shared["attn_norm"])
+        # ring == full while pos < cache_len, and wraps (windowed) beyond it —
+        # covers both the 32k case and the windowed long_500k case.
+        out, ck, cv = L.decode_attention_block(shared, hin, ck, cv, pos, spec,
+                                               mode="ring",
+                                               rope_theta=cfg.rope_theta)
+        x = x + out
+        hin = L.rmsnorm(x, shared["ffn_norm"])
+        x = x + L.swiglu(shared, hin)
+        return x, (jnp.stack(new_conv), jnp.stack(new_h), ck, cv)
+
+    n_mamba, _, _ = plan(cfg)
+    grouped = jax.tree.map(
+        lambda t: t.reshape((n_apps, period) + t.shape[1:]), params["mamba"])
+    x, (conv, h, ck, cv) = jax.lax.scan(
+        superblock, x, (grouped, cache["conv"], cache["h"],
+                        cache["attn"]["k"], cache["attn"]["v"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, dict(conv=conv, h=h, attn=dict(k=ck, v=cv))

@@ -1,0 +1,371 @@
+"""Shared transformer building blocks: norms, RoPE, GQA attention (full /
+sliding-window / chunked, optional logit softcap), SwiGLU/GELU FFNs, KV caches.
+
+Conventions
+-----------
+* Weights live in bf16 (configurable); norms/softmax/statistics accumulate f32.
+* Layer weights are *stacked* along a leading layer axis and consumed by
+  `jax.lax.scan` — constant-size HLO regardless of depth (TPU adaptation, see
+  DESIGN.md §2).
+* Attention layouts: activations (B, S, D); q/k/v (B, S, H, hd).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+# Activation-sharding hooks (no-ops unless the launch layer installed a mesh
+# via repro.sharding.ctx) — see sharding/ctx.py.
+from repro.sharding.ctx import (  # noqa: E402,F401
+    shard_batch, shard_logits, shard_residual,
+)
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale=1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta=10000.0):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (hd/2,)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len, d_model):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _make_mask(q_len, kv_len, *, causal, window=None, chunk=None,
+               q_offset=0):
+    """Boolean (q_len, kv_len) mask; True = attend."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    if chunk is not None:
+        mask &= (qi // chunk) == (kj // chunk)
+    return mask
+
+
+def attend(q, k, v, mask, *, softcap=None, scale=None):
+    """Core masked attention. q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd) with H % KV == 0.
+
+    mask broadcastable to (B, H, Sq, Skv) (or (Sq,Skv)).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(b, sq, kv, rep, hd)
+    logits = jnp.einsum("bqkrh,bskh->bkrqs", qh.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None]
+    else:
+        mask_b = mask.reshape(b, kv, rep, *mask.shape[-2:]) \
+            if mask.ndim == 4 else mask
+    logits = jnp.where(mask_b, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParamsSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def attn_param_shapes(spec: AttnParamsSpec):
+    d, h, kv, hd = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim
+    return dict(
+        wq=(d, h * hd), wk=(d, kv * hd), wv=(d, kv * hd), wo=(h * hd, d))
+
+
+def init_attn(key, spec: AttnParamsSpec, dtype):
+    shapes = attn_param_shapes(spec)
+    keys = jax.random.split(key, len(shapes))
+    return {name: dense_init(k, shp, dtype)
+            for (name, shp), k in zip(sorted(shapes.items()), keys)}
+
+
+def attention_block(params, x, positions, spec: AttnParamsSpec, *,
+                    causal=True, window=None, chunk=None, softcap=None,
+                    rope_theta=10000.0, use_rope=True, kv_x=None,
+                    q_scale=None):
+    """Full-sequence attention (training / prefill). kv_x enables cross-attn."""
+    b, s, _ = x.shape
+    h, kvh, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    src = x if kv_x is None else kv_x
+    s_kv = src.shape[1]
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (src @ params["wk"]).reshape(b, s_kv, kvh, hd)
+    v = (src @ params["wv"]).reshape(b, s_kv, kvh, hd)
+    if use_rope and kv_x is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if kv_x is None and s >= _BLOCKED_ATTN_THRESHOLD:
+        # Long sequences: never materialize (S, S) scores.
+        out = blocked_attention(q, k, v, causal=causal, window=window,
+                                chunk=chunk, softcap=softcap, scale=q_scale)
+    else:
+        if kv_x is None:
+            mask = _make_mask(s, s_kv, causal=causal, window=window,
+                              chunk=chunk)
+        else:
+            mask = jnp.ones((s, s_kv), bool)  # cross-attn: all of memory
+        out = attend(q, k, v, mask, softcap=softcap, scale=q_scale)
+    return out.reshape(b, s, h * hd) @ params["wo"]
+
+
+def blocked_attention(q, k, v, *, causal=True, window=None, chunk=None,
+                      softcap=None, scale=None, q_block=512, kv_block=512,
+                      q_offset=0):
+    """Flash-style online-softmax attention over (q_block, kv_block) tiles.
+
+    Never materializes the (S, S) score matrix — peak live memory is one
+    (B, KV, rep, q_block, kv_block) tile.  This is the pure-JAX analogue of
+    the Pallas flash kernel (kernels/flash_attention) and doubles as its
+    oracle for large shapes.  q: (B,S,H,hd); k/v: (B,Skv,KV,hd).
+    """
+    b, s, h, hd = q.shape
+    s_kv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s_kv)
+    nq, nk = s // q_block, s_kv // kv_block
+    assert s % q_block == 0 and s_kv % kv_block == 0, (s, q_block, s_kv, kv_block)
+
+    qb = q.reshape(b, nq, q_block, kvh, rep, hd).astype(jnp.float32) * scale
+    kb = k.reshape(b, nk, kv_block, kvh, hd).astype(jnp.float32)
+    vb = v.reshape(b, nk, kv_block, kvh, hd).astype(jnp.float32)
+
+    def mask_tile(iq, ik):
+        qi = iq * q_block + jnp.arange(q_block)[:, None] + q_offset
+        kj = ik * kv_block + jnp.arange(kv_block)[None, :]
+        m = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            m &= kj <= qi
+        if window is not None:
+            m &= (qi - kj) < window
+        if chunk is not None:
+            m &= (qi // chunk) == (kj // chunk)
+        return m
+
+    def q_tile(qt, iq, kv_range):
+        def kv_step(carry, ik):
+            m_run, l_run, acc = carry
+            kt, vt = kb[:, ik], vb[:, ik]                  # (B,bk,KV,hd)
+            logits = jnp.einsum("bqkrh,bskh->bkrqs", qt, kt)
+            if softcap is not None:
+                logits = softcap * jnp.tanh(logits / softcap)
+            logits = jnp.where(mask_tile(iq, ik)[None, None, None], logits,
+                               -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkrqs,bskh->bkrqh", p, vt)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((b, kvh, rep, q_block), -jnp.inf, jnp.float32),
+                jnp.zeros((b, kvh, rep, q_block), jnp.float32),
+                jnp.zeros((b, kvh, rep, q_block, hd), jnp.float32))
+        (m_run, l_run, acc), _ = jax.lax.scan(kv_step, init, kv_range)
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)   # (B,KV,rep,bq,hd)
+        return out.transpose(0, 3, 1, 2, 4)                # (B,bq,KV,rep,hd)
+
+    from repro.sharding.ctx import causal_skip_enabled
+    if (causal_skip_enabled() and causal and window is None and chunk is None
+            and q_block == kv_block and s == s_kv):
+        # static causal tile skipping: q block iq only visits kv blocks
+        # 0..iq (perf opt `causal_skip` — halves attention FLOPs, unrolls
+        # the q loop; EXPERIMENTS.md §Perf).
+        tiles = [q_tile(qb[:, iq], iq, jnp.arange(iq + 1))
+                 for iq in range(nq)]
+        out = jnp.stack(tiles, axis=1)                 # (B,nq,bq,KV,rep,hd)
+        out = out.reshape(b, s, h, hd)
+        return out.astype(v.dtype)
+
+    def q_step(_, iq):
+        return None, q_tile(qb[:, iq], iq, jnp.arange(nk))
+
+    _, tiles = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq,B,bq,KV,rep,hd)
+    out = tiles.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return out.astype(v.dtype)
+
+
+# Sequences longer than this use blocked attention inside attention_block.
+_BLOCKED_ATTN_THRESHOLD = 2048
+
+
+# ---------------------------------------------------------------------------
+# KV caches (full and ring/sliding-window)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(n_layers, batch, cache_len, n_kv, head_dim, dtype):
+    shape = (n_layers, batch, cache_len, n_kv, head_dim)
+    return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_update_layer(cache_k, cache_v, k_new, v_new, pos, *, ring=False):
+    """Insert one token's k/v at position `pos` (scalar int32) for one layer.
+
+    cache_k/v: (B, C, KV, hd); k_new/v_new: (B, 1, KV, hd).
+    ring=True wraps pos modulo cache length (sliding-window ring buffer).
+    """
+    c = cache_k.shape[1]
+    idx = pos % c if ring else pos
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new, (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new, (0, idx, 0, 0))
+    return ck, cv
+
+
+def decode_attention_block(params, x, cache_k, cache_v, pos,
+                           spec: AttnParamsSpec, *, mode="full", softcap=None,
+                           rope_theta=10000.0, use_rope=True, q_scale=None):
+    """Single-token decode. x: (B,1,D); cache: (B,C,KV,hd); pos: scalar int32.
+
+    mode:
+      "full"       — cache holds positions [0, C); valid slots <= pos.
+      "ring"       — sliding-window ring buffer of the last C tokens.
+      "chunk_ring" — llama4 chunked attention: ring of size C == chunk,
+                     valid slots are the current chunk's prefix.
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    b, _, _ = x.shape
+    h, kvh, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    c = cache_k.shape[1]
+    ring = mode in ("ring", "chunk_ring")
+    q = (x @ params["wq"]).reshape(b, 1, h, hd)
+    k = (x @ params["wk"]).reshape(b, 1, kvh, hd)
+    v = (x @ params["wv"]).reshape(b, 1, kvh, hd)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    cache_k, cache_v = cache_update_layer(cache_k, cache_v, k, v, pos,
+                                          ring=ring)
+    slots = jnp.arange(c)
+    if mode == "ring":
+        valid = slots < jnp.minimum(pos + 1, c)   # last C tokens, any order
+    elif mode == "chunk_ring":
+        valid = slots <= pos % c                  # current chunk's prefix
+    else:
+        valid = slots <= pos
+    mask = jnp.broadcast_to(valid[None, :], (1, c))  # (Sq=1, C)
+    out = attend(q, cache_k, cache_v, mask, softcap=softcap, scale=q_scale)
+    return out.reshape(b, 1, h * hd) @ params["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(w_gate=dense_init(k1, (d_model, d_ff), dtype),
+                w_up=dense_init(k2, (d_model, d_ff), dtype),
+                w_down=dense_init(k3, (d_ff, d_model), dtype))
+
+
+def swiglu(params, x):
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    up = (x @ params["w_up"]).astype(jnp.float32)
+    return ((gate * up).astype(x.dtype)) @ params["w_down"]
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key, 2)
+    return dict(w_in=dense_init(k1, (d_model, d_ff), dtype),
+                b_in=jnp.zeros((d_ff,), dtype),
+                w_out=dense_init(k2, (d_ff, d_model), dtype),
+                b_out=jnp.zeros((d_model,), dtype))
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu((x @ params["w_in"] + params["b_in"]).astype(jnp.float32))
+    return h.astype(x.dtype) @ params["w_out"] + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """logits (..., V) f32-accumulated cross entropy; labels int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

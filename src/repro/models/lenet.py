@@ -1,0 +1,112 @@
+"""LeNet-5 (LeCun et al. 2015) — the model the paper's experiments use — plus
+a small MLP; both classify (B, H, W, C) images.  Used by the FL benchmarks
+(Table 1 / Figures 1-3 reproductions) on synthetic Dirichlet-non-IID data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class LeNetConfig:
+    n_classes: int = 10
+    image_size: int = 32
+    channels: int = 3
+    # FedRep/FedPer/pFedSim need a body/head split: the final dense layer is
+    # the "personal" head; everything before is the shared body.
+
+
+def _conv_init(key, shape):  # (kh, kw, cin, cout)
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+
+def init(cfg: LeNetConfig, key):
+    ks = jax.random.split(key, 5)
+    s = cfg.image_size
+    s_after = ((s - 4) // 2 - 4) // 2          # two conv5+pool2 stages
+    flat = s_after * s_after * 16
+    return {
+        "conv1": _conv_init(ks[0], (5, 5, cfg.channels, 6)),
+        "conv2": _conv_init(ks[1], (5, 5, 6, 16)),
+        "fc1": jax.random.normal(ks[2], (flat, 120), jnp.float32) / math.sqrt(flat),
+        "fc2": jax.random.normal(ks[3], (120, 84), jnp.float32) / math.sqrt(120),
+        "head": jax.random.normal(ks[4], (84, cfg.n_classes), jnp.float32) / math.sqrt(84),
+        "b1": jnp.zeros((6,)), "b2": jnp.zeros((16,)),
+        "bf1": jnp.zeros((120,)), "bf2": jnp.zeros((84,)),
+        "bh": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+HEAD_KEYS = ("head", "bh")          # personalization split (FedRep/FedPer)
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def forward(cfg: LeNetConfig, params, images):
+    x = images
+    x = jnp.tanh(_conv(x, params["conv1"], params["b1"]))
+    x = _pool(x)
+    x = jnp.tanh(_conv(x, params["conv2"], params["b2"]))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ params["fc1"] + params["bf1"])
+    x = jnp.tanh(x @ params["fc2"] + params["bf2"])
+    return x @ params["head"] + params["bh"]
+
+
+def loss_fn(cfg: LeNetConfig, params, batch):
+    logits = forward(cfg, params, batch["images"])
+    return softmax_xent(logits, batch["labels"])
+
+
+def accuracy(cfg: LeNetConfig, params, batch):
+    logits = forward(cfg, params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+
+
+# ----------------------------- tiny MLP ------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    n_classes: int = 10
+    in_dim: int = 64
+    hidden: int = 128
+
+
+def init_mlp(cfg: MLPConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (cfg.in_dim, cfg.hidden)) / math.sqrt(cfg.in_dim),
+        "w2": jax.random.normal(k2, (cfg.hidden, cfg.hidden)) / math.sqrt(cfg.hidden),
+        "head": jax.random.normal(k3, (cfg.hidden, cfg.n_classes)) / math.sqrt(cfg.hidden),
+        "b1": jnp.zeros((cfg.hidden,)), "b2": jnp.zeros((cfg.hidden,)),
+        "bh": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def forward_mlp(cfg: MLPConfig, params, x):
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    x = jax.nn.relu(x @ params["w2"] + params["b2"])
+    return x @ params["head"] + params["bh"]
+
+
+def loss_mlp(cfg: MLPConfig, params, batch):
+    return softmax_xent(forward_mlp(cfg, params, batch["images"]),
+                        batch["labels"])

@@ -1,0 +1,321 @@
+"""Mixture-of-Experts decoder family (llama4-scout-17b-a16e, kimi-k2-1t-a32b).
+
+TPU-native GShard/Switch-style dispatch: tokens are processed in fixed-size
+*groups*; within a group each token's top-k experts are resolved to a
+(token, expert, capacity-slot) one-hot dispatch tensor, experts run as a
+batched einsum over stacked expert weights, and results are combined with the
+(renormalized) router gates.  Groups are scanned (with remat) so the dispatch
+tensors never exceed one group's footprint.  When expert weights are sharded
+over the mesh, the dispatch/combine einsums lower to all-to-all — the
+collective profile the roofline analysis tracks.
+
+Attention pattern: llama4 uses chunked local attention with every
+`global_period`-th layer global (cfg.attn_chunk / cfg.global_period); kimi-k2
+uses uniform full attention with the first layer dense (cfg: first dense layer
+folded into the scanned stack as experts-bypass is not worth a separate code
+path — see configs/kimi_k2_1t_a32b.py notes).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import dense as D
+
+MOE_GROUP = 1024          # tokens per dispatch group
+AUX_LOSS_WEIGHT = 0.01    # Switch-style load-balance loss weight
+
+
+def _capacity(cfg: ArchConfig, group: int) -> int:
+    c = math.ceil(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, int(2 ** math.ceil(math.log2(c))))   # pow2, >=8 (MXU-friendly)
+
+
+def _make_one_group(cfg: ArchConfig, p, group: int, cap: int):
+    """Build the single-group dispatch/compute/combine closure."""
+    e, k = cfg.n_experts, cfg.top_k
+
+    @jax.checkpoint
+    def one_group(xt):
+        logits = (xt @ p["router"]).astype(jnp.float32)        # (g, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, k)                   # (g, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        # Load-balance aux loss (Switch): E * sum_e f_e * P_e.
+        f_e = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+        aux = e * jnp.sum(f_e * jnp.mean(probs, axis=0))
+        # Position-in-expert via cumsum over (token, slot) in order.
+        oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)         # (g, k, E)
+        flat = oh.reshape(group * k, e)
+        pos = jnp.cumsum(flat, axis=0) - flat                  # (g*k, E)
+        pos_in_e = jnp.sum(pos * flat, axis=-1)                # (g*k,)
+        keep = (pos_in_e < cap).astype(jnp.float32)
+        disp = (flat * keep[:, None])[:, :, None] \
+            * jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap,
+                             dtype=jnp.float32)[:, None, :]
+        disp = disp.reshape(group, k, e, cap)
+        # Dispatch -> per-expert batches.
+        disp_tok = jnp.sum(disp, axis=1)                       # (g, E, cap)
+        x_disp = jnp.einsum("tec,td->ecd", disp_tok,
+                            xt.astype(jnp.float32)).astype(xt.dtype)
+        x_disp = _shard_e(x_disp, 0)           # pin expert dim -> model axis
+        gate_h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_disp, p["w_gate"])
+                             .astype(jnp.float32))
+        up_h = jnp.einsum("ecd,edf->ecf", x_disp, p["w_up"]).astype(jnp.float32)
+        h = (gate_h * up_h).astype(xt.dtype)
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # (E, cap, D)
+        # Combine, weighted by gates.
+        comb = jnp.sum(disp * gates[:, :, None, None], axis=1)  # (g, E, cap)
+        comb = _shard_e(comb, 1)
+        y = jnp.einsum("tec,ecd->td", comb.astype(out.dtype), out)
+        return y, aux
+
+    return one_group
+
+
+def _shard_e(x, e_dim):
+    """Expert-dim sharding constraint — active only under moe_chunked."""
+    from repro.sharding import ctx
+    if ctx.moe_chunk_shards() > 0:
+        return ctx.shard_expert_axis(x, e_dim)
+    return x
+
+
+def _make_one_chunk(cfg: ArchConfig, p, group: int, cap: int):
+    """Batched (gc, group, d) dispatch/compute/combine with explicit group
+    and expert dims in every einsum, so the sharding constraints (group ->
+    client axes, experts -> model axis) survive tracing (vmap silently drops
+    with_sharding_constraint specs — EXPERIMENTS.md §Perf kimi iter 3/4)."""
+    from repro.sharding import ctx
+    e, k = cfg.n_experts, cfg.top_k
+
+    @jax.checkpoint
+    def one_chunk(xc):                                     # (gc, t, d)
+        gc = xc.shape[0]
+        logits = jnp.einsum("gtd,de->gte", xc,
+                            p["router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, k)               # (gc, t, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        f_e = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32),
+                       axis=1)                             # (gc, E)
+        aux = jnp.mean(e * jnp.sum(f_e * jnp.mean(probs, axis=1), axis=-1))
+        oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)     # (gc, t, k, E)
+        flat = oh.reshape(gc, group * k, e)
+        pos = jnp.cumsum(flat, axis=1) - flat
+        pos_in_e = jnp.sum(pos * flat, axis=-1)            # (gc, t*k)
+        keep = (pos_in_e < cap).astype(jnp.float32)
+        disp = (flat * keep[..., None])[..., None] \
+            * jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap,
+                             dtype=jnp.float32)[..., None, :]
+        disp = disp.reshape(gc, group, k, e, cap)
+        disp_tok = jnp.sum(disp, axis=2)                   # (gc, t, E, cap)
+        x_disp = jnp.einsum("gtec,gtd->gecd", disp_tok,
+                            xc.astype(jnp.float32)).astype(xc.dtype)
+        x_disp = ctx.shard_moe_dispatch(x_disp, 0, 1)      # g->clients, e->model
+        gate_h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_disp, p["w_gate"])
+                             .astype(jnp.float32))
+        up_h = jnp.einsum("gecd,edf->gecf", x_disp,
+                          p["w_up"]).astype(jnp.float32)
+        h = (gate_h * up_h).astype(xc.dtype)
+        out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+        comb = jnp.sum(disp * gates[..., None, None], axis=2)  # (gc,t,E,cap)
+        comb = ctx.shard_moe_dispatch(comb, 0, 2)
+        y = jnp.einsum("gtec,gecd->gtd", comb.astype(out.dtype), out)
+        return y, aux
+
+    return one_chunk
+
+
+def moe_ffn(cfg: ArchConfig, p, x):
+    """Routed expert FFN. x: (T, D) -> (y (T, D), aux_loss scalar).
+
+    p: router (D, E); w_gate/w_up (E, D, F); w_down (E, F, D).
+    """
+    t, d = x.shape
+    group = min(MOE_GROUP, t)
+    assert t % group == 0, (t, group)
+    n_groups = t // group
+    cap = _capacity(cfg, group)
+    xg = x.reshape(n_groups, group, d)
+    one_group = _make_one_group(cfg, p, group, cap)
+
+    def scan_body(acc, xt):
+        y, aux = one_group(xt)
+        return acc + aux, y
+
+    aux_total, yg = jax.lax.scan(scan_body, jnp.float32(0.0), xg)
+    return yg.reshape(t, d), aux_total / n_groups
+
+
+def moe_ffn_chunked(cfg: ArchConfig, p, x, gc: int):
+    """Sharding-aware variant: groups are laid out so the *group* axis within
+    a chunk aligns with the data/client shards (gc = number of client shards)
+    and the scan runs over chunks that every device owns a slice of.
+
+    Reshape path: (T, d) -> (gc, n_chunks * group, d) keeps each device's
+    token slice local (T is batch-major sharded over data), then a local
+    transpose gives (n_chunks, gc, group, d); the scan axis is unsharded and
+    the gc axis carries the data sharding — so each scan step processes one
+    group per device instead of one group per *mesh* (the baseline scan's
+    pathology; EXPERIMENTS.md §Perf, kimi iteration 2).
+    """
+    t, d = x.shape
+    group = min(MOE_GROUP, t // gc) if t >= gc else t
+    n_chunks = t // (gc * group)
+    if n_chunks == 0 or t % (gc * group) != 0:
+        return moe_ffn(cfg, p, x)
+    xg = x.reshape(gc, n_chunks * group, d)
+    from repro.models.layers import shard_batch
+    xg = shard_batch(xg)                       # pin gc -> client axes
+    xg = xg.reshape(gc, n_chunks, group, d).transpose(1, 0, 2, 3)
+
+    cap = _capacity(cfg, group)
+    one = _make_one_chunk(cfg, p, group, cap)
+
+    def scan_body(acc, xc):                    # xc: (gc, group, d)
+        y, aux = one(xc)
+        return acc + aux, y
+
+    aux_total, yc = jax.lax.scan(scan_body, jnp.float32(0.0), xg)
+    y = yc.transpose(1, 0, 2, 3).reshape(gc, n_chunks * group, d)
+    return y.reshape(t, d), aux_total / n_chunks
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init(cfg: ArchConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_moe, k_shared, k_out = jax.random.split(key, 5)
+    n, d, e, f = cfg.n_layers, cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    layers = D._stacked_layer_params(cfg, k_layers, n, dtype)
+    # Replace the dense FFN weights with shared-expert ones (or drop them).
+    for nm in ("w_gate", "w_up", "w_down"):
+        del layers[nm]
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff * cfg.n_shared_experts
+        ks = jax.random.split(k_shared, 3)
+        layers["ws_gate"] = L.dense_init(ks[0], (n, d, fs), dtype)
+        layers["ws_up"] = L.dense_init(ks[1], (n, d, fs), dtype)
+        layers["ws_down"] = L.dense_init(ks[2], (n, fs, d), dtype)
+    km = jax.random.split(k_moe, 4)
+    layers["router"] = L.dense_init(km[0], (n, d, e), dtype)
+    layers["w_gate"] = L.dense_init(km[1], (n, e, d, f), dtype)
+    layers["w_up"] = L.dense_init(km[2], (n, e, d, f), dtype)
+    layers["w_down"] = L.dense_init(km[3], (n, e, f, d), dtype)
+    params = {
+        "embed": L.embed_init(k_embed, (cfg.vocab, d), dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, (d, cfg.vocab), dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _routed_ffn(cfg, p_j, h2d):
+    from repro.sharding.ctx import moe_chunk_shards
+    gc = moe_chunk_shards()
+    if gc > 1 and h2d.shape[0] % gc == 0:
+        return moe_ffn_chunked(cfg, p_j, h2d, gc)
+    return moe_ffn(cfg, p_j, h2d)
+
+
+def _layer_body(cfg: ArchConfig, p_j, x, positions, j):
+    b, s, d = x.shape
+    h = L.rmsnorm(x, p_j["attn_norm"])
+    x = x + D._member_attn(cfg, p_j, h, positions, j)
+    h = L.rmsnorm(x, p_j["ffn_norm"])
+    y, aux = _routed_ffn(cfg, p_j, h.reshape(b * s, d))
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        shared = L.swiglu(dict(w_gate=p_j["ws_gate"], w_up=p_j["ws_up"],
+                               w_down=p_j["ws_down"]), h)
+        y = y + shared
+    return L.shard_residual(x + y), aux
+
+
+def forward_with_aux(cfg: ArchConfig, params, tokens):
+    b, s = tokens.shape
+    x = L.shard_batch(params["embed"][tokens])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    g = D.group_size(cfg)
+
+    def body(carry, p_group):
+        x, aux = carry
+        for j in range(g):
+            p_j = jax.tree.map(lambda t: t[j], p_group)
+            x, aux_j = _layer_body(cfg, p_j, x, positions, j)
+            aux = aux + aux_j
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               D._group_xs(cfg, params["layers"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    unembed = params["unembed"] if "unembed" in params else params["embed"].T
+    logits = L.shard_logits((x @ unembed).astype(jnp.float32))
+    return logits, aux / cfg.n_layers
+
+
+def forward(cfg: ArchConfig, params, tokens):
+    return forward_with_aux(cfg, params, tokens)[0]
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, aux = forward_with_aux(cfg, params, batch["tokens"])
+    return L.softmax_xent(logits, batch["labels"]) + AUX_LOSS_WEIGHT * aux
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+init_cache = D.init_cache   # same attention cache layout
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    b = tokens.shape[0]
+    x = L.shard_batch(params["embed"][tokens])
+    g = D.group_size(cfg)
+    spec = D._attn_spec(cfg)
+    cache_len = max(c["k"].shape[2] for c in cache.values())
+
+    def body(x, xs):
+        p_group, cache_group = xs
+        new_cache = {}
+        for j in range(g):
+            p_j = jax.tree.map(lambda t: t[j], p_group)
+            ck, cv = cache_group[f"m{j}"]["k"], cache_group[f"m{j}"]["v"]
+            h = L.rmsnorm(x, p_j["attn_norm"])
+            out, ck, cv = L.decode_attention_block(
+                p_j, h, ck, cv, pos, spec,
+                mode=D._member_mode(cfg, j, cache_len),
+                softcap=cfg.softcap, rope_theta=cfg.rope_theta)
+            x = x + out
+            h = L.rmsnorm(x, p_j["ffn_norm"])
+            y, _ = _routed_ffn(cfg, p_j, h.reshape(b, -1))
+            y = y.reshape(b, 1, -1)
+            if cfg.n_shared_experts:
+                y = y + L.swiglu(dict(w_gate=p_j["ws_gate"],
+                                      w_up=p_j["ws_up"],
+                                      w_down=p_j["ws_down"]), h)
+            x = x + y
+            new_cache[f"m{j}"] = dict(k=ck, v=cv)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (D._group_xs(cfg, params["layers"]),
+                                          cache))
+    x = L.rmsnorm(x, params["final_norm"])
+    unembed = params["unembed"] if "unembed" in params else params["embed"].T
+    logits = (x @ unembed).astype(jnp.float32)
+    return logits, new_cache

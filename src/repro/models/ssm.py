@@ -1,0 +1,275 @@
+"""Selective state-space models: Mamba-1 blocks (falcon-mamba-7b) and Mamba-2
+blocks (used by the zamba2 hybrid).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel of the original
+is replaced by `jax.lax.associative_scan` (parallel prefix — log-depth, maps
+onto the VPU) over per-step transition pairs
+
+    h_t = a_t * h_{t-1} + b_t,   (a1,b1)•(a2,b2) = (a2*a1, a2*b1 + b2)
+
+with f32 state.  A Pallas chunked-scan kernel (kernels/selective_scan)
+implements the blocked HBM->VMEM variant; this module is its oracle.
+
+Decode is the O(1) recurrent update: one state FMA per token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def selective_scan(a, b, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t along axis 0.
+
+    a, b: (S, ...) f32. Returns h: (S, ...).
+    """
+    if h0 is not None:
+        b = b.at[0].set(a[0] * h0 + b[0])
+        a = a.at[0].set(jnp.zeros_like(a[0]))
+    _, h = jax.lax.associative_scan(_combine, (a, b), axis=0)
+    return h
+
+
+def causal_conv1d(x, w, bias=None):
+    """Depthwise causal conv. x: (S, C); w: (K, C). Returns (S, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((k - 1, 0), (0, 0)))
+    out = sum(xp[i:i + x.shape[0]] * w[i] for i in range(k))
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 block
+# --------------------------------------------------------------------------
+
+def mamba1_shapes(cfg: ArchConfig):
+    d, n = cfg.d_model, cfg.ssm_state
+    di = cfg.ssm_expand * d
+    dt_rank = math.ceil(d / 16)
+    return dict(d_inner=di, dt_rank=dt_rank, n=n)
+
+
+def init_mamba1(key, cfg: ArchConfig, n_layers, dtype):
+    s = mamba1_shapes(cfg)
+    d, di, r, n = cfg.d_model, s["d_inner"], s["dt_rank"], s["n"]
+    k = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return dict(
+        in_proj=L.dense_init(k[0], (n_layers, d, 2 * di), dtype),
+        conv_w=L.dense_init(k[1], (n_layers, cfg.ssm_conv, di), dtype),
+        conv_b=jnp.zeros((n_layers, di), dtype),
+        x_proj=L.dense_init(k[2], (n_layers, di, r + 2 * n), dtype),
+        dt_proj=L.dense_init(k[3], (n_layers, r, di), dtype),
+        dt_bias=jnp.full((n_layers, di), -4.0, jnp.float32),
+        A_log=jnp.tile(jnp.log(A)[None], (n_layers, 1, 1)),      # (L, di, N)
+        D=jnp.ones((n_layers, di), jnp.float32),
+        out_proj=L.dense_init(k[4], (n_layers, di, d), dtype),
+        norm=jnp.zeros((n_layers, d), dtype),
+    )
+
+
+def mamba1_block(p, cfg: ArchConfig, x):
+    """x: (B, S, D) -> (B, S, D). Vectorized over batch via vmap."""
+    s_info = mamba1_shapes(cfg)
+    r, n = s_info["dt_rank"], s_info["n"]
+
+    def single(xb):                                   # (S, D)
+        xz = xb @ p["in_proj"]
+        xi, z = jnp.split(xz, 2, axis=-1)             # (S, di)
+        xi = causal_conv1d(xi, p["conv_w"], p["conv_b"])
+        xi = jax.nn.silu(xi.astype(jnp.float32))
+        proj = (xi.astype(xb.dtype) @ p["x_proj"]).astype(jnp.float32)
+        dt_raw, b_mat, c_mat = jnp.split(proj, [r, r + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(jnp.float32)
+                             + p["dt_bias"])          # (S, di)
+        A = -jnp.exp(p["A_log"])                      # (di, N)
+        a = jnp.exp(dt[..., None] * A[None])          # (S, di, N)
+        b = (dt * xi)[..., None] * b_mat[:, None, :]  # (S, di, N)
+        h = selective_scan(a, b)                      # (S, di, N)
+        y = jnp.einsum("sdn,sn->sd", h, c_mat) + p["D"] * xi
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        return (y.astype(xb.dtype)) @ p["out_proj"]
+
+    return jax.vmap(single)(x)
+
+
+def mamba1_decode(p, cfg: ArchConfig, x, conv_state, h_state):
+    """One-token recurrent update.
+
+    x: (B, 1, D); conv_state: (B, K-1, di); h_state: (B, di, N) f32.
+    Returns (y (B,1,D), conv_state, h_state).
+    """
+    s_info = mamba1_shapes(cfg)
+    r, n = s_info["dt_rank"], s_info["n"]
+    xz = x[:, 0] @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                 # (B, di)
+    # conv ring: window = [conv_state, xi]
+    win = jnp.concatenate([conv_state, xi[:, None]], axis=1)  # (B, K, di)
+    conv_state = win[:, 1:]
+    xi = jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"]
+    xi = jax.nn.silu(xi.astype(jnp.float32))
+    proj = (xi.astype(x.dtype) @ p["x_proj"]).astype(jnp.float32)
+    dt_raw, b_mat, c_mat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])              # (B, di)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A[None])              # (B, di, N)
+    b = (dt * xi)[..., None] * b_mat[:, None, :]
+    h_state = a * h_state + b
+    y = jnp.einsum("bdn,bn->bd", h_state, c_mat) + p["D"] * xi
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x.dtype) @ p["out_proj"])[:, None], conv_state, h_state
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 block (scalar A per head, shared B/C across heads)
+# --------------------------------------------------------------------------
+
+def mamba2_shapes(cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    p_head = cfg.ssm_head_dim
+    nh = di // p_head
+    return dict(d_inner=di, n_heads=nh, p=p_head, n=cfg.ssm_state)
+
+
+def init_mamba2(key, cfg: ArchConfig, n_layers, dtype):
+    s = mamba2_shapes(cfg)
+    d, di, nh, n = cfg.d_model, s["d_inner"], s["n_heads"], s["n"]
+    conv_dim = di + 2 * n
+    k = jax.random.split(key, 4)
+    return dict(
+        in_proj=L.dense_init(k[0], (n_layers, d, 2 * di + 2 * n + nh), dtype),
+        conv_w=L.dense_init(k[1], (n_layers, cfg.ssm_conv, conv_dim), dtype),
+        conv_b=jnp.zeros((n_layers, conv_dim), dtype),
+        dt_bias=jnp.full((n_layers, nh), -4.0, jnp.float32),
+        A_log=jnp.zeros((n_layers, nh), jnp.float32),
+        D=jnp.ones((n_layers, nh), jnp.float32),
+        ssm_norm=jnp.zeros((n_layers, di), dtype),
+        out_proj=L.dense_init(k[2], (n_layers, di, d), dtype),
+        norm=jnp.zeros((n_layers, d), dtype),
+    )
+
+
+def mamba2_block(p, cfg: ArchConfig, x):
+    s_info = mamba2_shapes(cfg)
+    di, nh, ph, n = (s_info["d_inner"], s_info["n_heads"], s_info["p"],
+                     s_info["n"])
+
+    def single(xb):                                   # (S, D)
+        proj = xb @ p["in_proj"]
+        z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+        xbc = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+        xbc = jax.nn.silu(xbc.astype(jnp.float32))
+        xi, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (S,H)
+        A = -jnp.exp(p["A_log"])                      # (H,)
+        a = jnp.exp(dt * A[None])                     # (S, H)
+        xh = xi.reshape(-1, nh, ph)                   # (S, H, P)
+        b = dt[..., None, None] * (b_mat[:, None, :, None]
+                                   * xh[:, :, None, :])  # (S, H, N, P)
+        h = selective_scan(a[..., None, None] * jnp.ones_like(b), b)
+        y = jnp.einsum("shnp,sn->shp", h, c_mat) + p["D"][None, :, None] * xh
+        y = y.reshape(-1, di)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y = L.rmsnorm(y.astype(xb.dtype), p["ssm_norm"])
+        return y @ p["out_proj"]
+
+    return jax.vmap(single)(x)
+
+
+def mamba2_decode(p, cfg: ArchConfig, x, conv_state, h_state):
+    """x: (B,1,D); conv_state: (B,K-1,conv_dim); h_state: (B,H,N,P) f32."""
+    s_info = mamba2_shapes(cfg)
+    di, nh, ph, n = (s_info["d_inner"], s_info["n_heads"], s_info["p"],
+                     s_info["n"])
+    proj = x[:, 0] @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    win = jnp.concatenate([conv_state, xbc[:, None]], axis=1)
+    conv_state = win[:, 1:]
+    xbc = jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xi, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None])                         # (B, H)
+    xh = xi.reshape(-1, nh, ph)
+    b = dt[..., None, None] * (b_mat[:, None, :, None] * xh[:, :, None, :])
+    h_state = a[..., None, None] * h_state + b
+    y = jnp.einsum("bhnp,bn->bhp", h_state, c_mat) + p["D"][None, :, None] * xh
+    y = y.reshape(-1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm(y.astype(x.dtype), p["ssm_norm"])
+    return (y @ p["out_proj"])[:, None], conv_state, h_state
+
+
+# --------------------------------------------------------------------------
+# falcon-mamba-7b: pure Mamba-1 LM
+# --------------------------------------------------------------------------
+
+def init(cfg: ArchConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_layers = jax.random.split(key)
+    return {
+        "embed": L.embed_init(k_embed, (cfg.vocab, cfg.d_model), dtype),
+        "layers": init_mamba1(k_layers, cfg, cfg.n_layers, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def forward(cfg: ArchConfig, params, tokens):
+    x = L.shard_batch(params["embed"][tokens])
+
+    def body(x, p_l):
+        h = L.rmsnorm(x, p_l["norm"])
+        return x + mamba1_block(p_l, cfg, h), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.shard_logits((x @ params["embed"].T).astype(jnp.float32))
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    return L.softmax_xent(forward(cfg, params, batch["tokens"]),
+                          batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch, cache_len, dtype=None):
+    """SSM 'cache' = recurrent state; cache_len is irrelevant (O(1) state)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    s = mamba1_shapes(cfg)
+    nl = cfg.n_layers
+    return dict(
+        conv=jnp.zeros((nl, batch, cfg.ssm_conv - 1, s["d_inner"]), dtype),
+        h=jnp.zeros((nl, batch, s["d_inner"], s["n"]), jnp.float32),
+    )
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    del pos  # recurrent state; position-free
+    x = L.shard_batch(params["embed"][tokens])
+
+    def body(x, xs):
+        p_l, conv, h = xs
+        hin = L.rmsnorm(x, p_l["norm"])
+        y, conv, h = mamba1_decode(p_l, cfg, hin, conv, h)
+        return x + y, (conv, h)
+
+    x, (conv, h) = jax.lax.scan(body, x, (params["layers"], cache["conv"],
+                                          cache["h"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, dict(conv=conv, h=h)

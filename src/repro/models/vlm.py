@@ -1,0 +1,165 @@
+"""Llama-3.2-Vision-style VLM decoder: a llama dense backbone where every
+`cross_attn_period`-th layer is a *gated cross-attention* layer consuming
+vision-encoder output (hf:meta-llama/Llama-3.2-11B-Vision).
+
+The ViT/projector frontend is a STUB per the assignment: `batch["image_embeds"]`
+carries precomputed patch embeddings (B, n_image_tokens, d_model).  The
+language side — self-attn layers, gated cross-attn layers, caches — is real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import dense as D
+from repro.models import layers as L
+
+
+def plan(cfg: ArchConfig):
+    period = cfg.cross_attn_period
+    n_groups = cfg.n_layers // period
+    n_self = n_groups * (period - 1)
+    return n_groups, n_self, period
+
+
+def init(cfg: ArchConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    n_groups, n_self, period = plan(cfg)
+    k_embed, k_self, k_cross, k_xffn = jax.random.split(key, 4)
+    spec = D._attn_spec(cfg)
+    # stacked cross-attn layer params: attn + own FFN + gates
+    shapes = dict(L.attn_param_shapes(spec), w_gate=(cfg.d_model, cfg.d_ff),
+                  w_up=(cfg.d_model, cfg.d_ff), w_down=(cfg.d_ff, cfg.d_model))
+    keys = jax.random.split(k_cross, len(shapes))
+    cross = {n: L.dense_init(kk, (n_groups,) + s, dtype)
+             for (n, s), kk in zip(sorted(shapes.items()), keys)}
+    cross["attn_norm"] = jnp.zeros((n_groups, cfg.d_model), dtype)
+    cross["ffn_norm"] = jnp.zeros((n_groups, cfg.d_model), dtype)
+    cross["attn_gate"] = jnp.zeros((n_groups,), jnp.float32)
+    cross["ffn_gate"] = jnp.zeros((n_groups,), jnp.float32)
+    return {
+        "embed": L.embed_init(k_embed, (cfg.vocab, cfg.d_model), dtype),
+        "self_layers": D._stacked_layer_params(cfg, k_self, n_self, dtype),
+        "cross_layers": cross,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _self_layer(cfg, p_j, x, positions):
+    spec = D._attn_spec(cfg)
+    h = L.rmsnorm(x, p_j["attn_norm"])
+    x = x + L.attention_block(p_j, h, positions, spec, causal=True,
+                              rope_theta=cfg.rope_theta)
+    h = L.rmsnorm(x, p_j["ffn_norm"])
+    return x + L.swiglu(p_j, h)
+
+
+def _cross_layer(cfg, p_c, x, positions, image_embeds):
+    spec = D._attn_spec(cfg)
+    h = L.rmsnorm(x, p_c["attn_norm"])
+    attn = L.attention_block(p_c, h, positions, spec, kv_x=image_embeds,
+                             use_rope=False)
+    x = x + jnp.tanh(p_c["attn_gate"]).astype(x.dtype) * attn
+    h = L.rmsnorm(x, p_c["ffn_norm"])
+    x = x + jnp.tanh(p_c["ffn_gate"]).astype(x.dtype) * L.swiglu(p_c, h)
+    return x
+
+
+def forward(cfg: ArchConfig, params, tokens, image_embeds):
+    b, s = tokens.shape
+    n_groups, n_self, period = plan(cfg)
+    x = L.shard_batch(params["embed"][tokens])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    self_grouped = jax.tree.map(
+        lambda t: t.reshape((n_groups, period - 1) + t.shape[1:]),
+        params["self_layers"])
+
+    def body(x, xs):
+        p_selfs, p_cross = xs
+        for j in range(period - 1):
+            p_j = jax.tree.map(lambda t: t[j], p_selfs)
+            x = _self_layer(cfg, p_j, x, positions)
+        x = _cross_layer(cfg, p_cross, x, positions, image_embeds)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (self_grouped, params["cross_layers"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.shard_logits((x @ params["embed"].T).astype(jnp.float32))
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits = forward(cfg, params, batch["tokens"], batch["image_embeds"])
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch, cache_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_groups, n_self, period = plan(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return dict(
+        self=L.init_kv_cache(n_self, batch, cache_len, kv, hd, dtype),
+        cross_k=jnp.zeros((n_groups, batch, cfg.n_image_tokens, kv, hd), dtype),
+        cross_v=jnp.zeros((n_groups, batch, cfg.n_image_tokens, kv, hd), dtype),
+    )
+
+
+def prefill_cross(cfg: ArchConfig, params, cache, image_embeds):
+    """Precompute cross-attn K/V from the (stub) vision embeddings."""
+    b, t, _ = image_embeds.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+
+    def per_group(p_c):
+        k = (image_embeds @ p_c["wk"]).reshape(b, t, kv, hd)
+        v = (image_embeds @ p_c["wv"]).reshape(b, t, kv, hd)
+        return k, v
+
+    ks, vs = jax.vmap(per_group)(params["cross_layers"])
+    return dict(cache, cross_k=ks, cross_v=vs)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    b = tokens.shape[0]
+    n_groups, n_self, period = plan(cfg)
+    spec = D._attn_spec(cfg)
+    x = L.shard_batch(params["embed"][tokens])
+    self_grouped = jax.tree.map(
+        lambda t: t.reshape((n_groups, period - 1) + t.shape[1:]),
+        params["self_layers"])
+    self_cache_grouped = jax.tree.map(
+        lambda t: t.reshape((n_groups, period - 1) + t.shape[1:]),
+        cache["self"])
+
+    def body(x, xs):
+        p_selfs, p_cross, sc, xk, xv = xs
+        cks, cvs = [], []
+        for j in range(period - 1):
+            p_j = jax.tree.map(lambda t: t[j], p_selfs)
+            h = L.rmsnorm(x, p_j["attn_norm"])
+            out, ck, cv = L.decode_attention_block(
+                p_j, h, sc["k"][j], sc["v"][j], pos, spec,
+                rope_theta=cfg.rope_theta)
+            x = x + out
+            h = L.rmsnorm(x, p_j["ffn_norm"])
+            x = x + L.swiglu(p_j, h)
+            cks.append(ck)
+            cvs.append(cv)
+        # gated cross-attn against precomputed image K/V
+        h = L.rmsnorm(x, p_cross["attn_norm"])
+        q = (h @ p_cross["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+        mask = jnp.ones((1, xk.shape[1]), bool)
+        attn = L.attend(q, xk, xv, mask).reshape(b, 1, -1) @ p_cross["wo"]
+        x = x + jnp.tanh(p_cross["attn_gate"]).astype(x.dtype) * attn
+        h = L.rmsnorm(x, p_cross["ffn_norm"])
+        x = x + jnp.tanh(p_cross["ffn_gate"]).astype(x.dtype) \
+            * L.swiglu(p_cross, h)
+        return x, dict(k=jnp.stack(cks), v=jnp.stack(cvs))
+
+    x, new_self = jax.lax.scan(
+        body, x, (self_grouped, params["cross_layers"], self_cache_grouped,
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    new_self = jax.tree.map(
+        lambda t: t.reshape((n_self,) + t.shape[2:]), new_self)
+    return logits, dict(cache, self=new_self)

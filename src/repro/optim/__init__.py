@@ -1,0 +1,5 @@
+from repro.optim.optimizer import (  # noqa: F401
+    Optimizer, adam, adamw, apply_updates, chain, clip_by_global_norm, scale,
+    scale_by_adam, scale_by_schedule, sgd, trace, add_decayed_weights,
+)
+from repro.optim import schedules  # noqa: F401

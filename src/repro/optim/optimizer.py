@@ -1,0 +1,149 @@
+"""Minimal optax-style optimizer library, built from scratch in pure JAX.
+
+An optimizer is a pair (init, update):
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+`update` returns the *delta* to add to params (i.e. already negated).
+"""
+from __future__ import annotations
+
+import typing as tp
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree_math import tree_norm_sq
+
+Schedule = tp.Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda _: jnp.asarray(lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: tp.Callable
+    update: tp.Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+# ----------------------------- transforms ----------------------------------
+
+def scale(factor) -> Optimizer:
+    return Optimizer(
+        init=lambda params: (),
+        update=lambda g, s, p=None: (jax.tree.map(lambda x: x * factor, g), s))
+
+
+def scale_by_schedule(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(g, step, p=None):
+        factor = -sched(step)
+        return jax.tree.map(lambda x: x * factor, g), step + 1
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm) -> Optimizer:
+    def update(g, s, p=None):
+        norm = jnp.sqrt(tree_norm_sq(g))
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree.map(lambda x: x * factor, g), s
+
+    return Optimizer(lambda p: (), update)
+
+
+def trace(decay: float, nesterov: bool = False) -> Optimizer:
+    """Momentum accumulator."""
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(g, mom, p=None):
+        mom = jax.tree.map(lambda m, x: decay * m + x.astype(jnp.float32), mom, g)
+        if nesterov:
+            out = jax.tree.map(lambda m, x: decay * m + x.astype(jnp.float32), mom, g)
+        else:
+            out = mom
+        return out, mom
+
+    return Optimizer(init, update)
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return dict(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+    def update(g, s, p=None):
+        count = s["count"] + 1
+        mu = jax.tree.map(lambda m, x: b1 * m + (1 - b1) * x.astype(jnp.float32),
+                          s["mu"], g)
+        nu = jax.tree.map(lambda v, x: b2 * v + (1 - b2)
+                          * jnp.square(x.astype(jnp.float32)), s["nu"], g)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        out = jax.tree.map(lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return out, dict(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)
+
+
+def add_decayed_weights(weight_decay: float) -> Optimizer:
+    def update(g, s, p):
+        return jax.tree.map(lambda x, pi: x + weight_decay
+                            * pi.astype(jnp.float32), g, p), s
+
+    return Optimizer(lambda p: (), update)
+
+
+def chain(*transforms: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(g, states, p=None):
+        new_states = []
+        for t, s in zip(transforms, states):
+            g, s = t.update(g, s, p)
+            new_states.append(s)
+        return g, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+# ----------------------------- aliases -------------------------------------
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    parts = []
+    if momentum:
+        parts.append(trace(momentum, nesterov))
+    parts.append(scale_by_schedule(lr))
+    return chain(*parts)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return chain(scale_by_adam(b1, b2, eps), scale_by_schedule(lr))
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          clip_norm=None) -> Optimizer:
+    parts = []
+    if clip_norm is not None:
+        parts.append(clip_by_global_norm(clip_norm))
+    parts += [scale_by_adam(b1, b2, eps), add_decayed_weights(weight_decay),
+              scale_by_schedule(lr)]
+    return chain(*parts)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear(init_value: float, end_value: float, steps: int):
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(steps, 1), 0.0, 1.0)
+        return init_value + frac * (end_value - init_value)
+    return sched
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cos + alpha)
+    return sched
+
+
+def warmup_cosine(peak_value: float, warmup_steps: int, total_steps: int,
+                  end_value: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_value * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = end_value + 0.5 * (peak_value - end_value) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched

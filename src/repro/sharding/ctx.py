@@ -1,0 +1,168 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launch layer (dryrun / train / serve
+builders) installs the active mesh here, and `shard_batch` /`shard_logits`
+become `with_sharding_constraint`s pinning activations to batch-sharded
+layout over the client axes.  Outside a mesh context they are no-ops, so
+tests and the single-device simulator run unchanged.
+
+Without these constraints GSPMD propagates *parameter* shardings into
+activations (e.g. the embedding's feature dim) and replicates the batch —
+measured 115x collective inflation on llama3.2-3b train_4k (EXPERIMENTS.md
+§Perf, iteration 0).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+_SEQ_PARALLEL = False
+
+
+def set_activation_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+_MOE_CHUNKED = False
+_CAUSAL_SKIP = False
+
+
+def set_causal_skip(on: bool):
+    """Static causal tile skipping in blocked attention: unroll the q-block
+    loop so each q block only scans kv blocks <= its own index — halves
+    attention FLOPs at the cost of nq-times-larger attention HLO."""
+    global _CAUSAL_SKIP
+    _CAUSAL_SKIP = on
+
+
+def causal_skip_enabled() -> bool:
+    return _CAUSAL_SKIP
+
+
+def set_moe_chunked(on: bool):
+    """Route MoE layers through moe_ffn_chunked (group axis aligned with the
+    client shards; see models/moe.py and EXPERIMENTS.md §Perf)."""
+    global _MOE_CHUNKED
+    _MOE_CHUNKED = on
+
+
+def moe_chunk_shards() -> int:
+    """Number of client shards for MoE group alignment (0 = use baseline)."""
+    if not _MOE_CHUNKED or _MESH is None:
+        return 0
+    n = 1
+    for a in _client_axes(_MESH):
+        n *= _MESH.shape[a]
+    return n
+
+
+def shard_moe_dispatch(x, g_dim: int, e_dim: int):
+    """Pin a (group-batched) dispatch/combine tensor: group dim -> client
+    axes, expert dim -> model axis."""
+    if _MESH is None:
+        return x
+    spec = [None] * x.ndim
+    ca = _client_axes(_MESH)
+    n = 1
+    for a in ca:
+        n *= _MESH.shape[a]
+    if x.shape[g_dim] % n == 0:
+        spec[g_dim] = ca
+    if "model" in _MESH.axis_names and \
+            x.shape[e_dim] % _MESH.shape["model"] == 0:
+        spec[e_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*spec)))
+
+
+def shard_expert_axis(x, e_dim: int):
+    """Pin an expert-indexed activation (dispatch/combine tensors) to the
+    model axis on its expert dim.  Without this, GSPMD prefers to all-gather
+    the (huge) expert weights over the model axis instead of slicing the
+    (small) dispatched activations (measured +14.8 TB all-gather on kimi;
+    EXPERIMENTS.md §Perf kimi iter 3)."""
+    if _MESH is None or "model" not in _MESH.axis_names:
+        return x
+    if x.shape[e_dim] % _MESH.shape["model"] != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[e_dim] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))
+
+
+def set_seq_parallel(on: bool):
+    """Megatron-style sequence parallelism: between blocks, the residual
+    stream (B, S, D) is sharded S->model, turning each TP output all-reduce
+    into reduce-scatter + all-gather (half the ICI bytes; EXPERIMENTS.md
+    §Perf, mistral iteration)."""
+    global _SEQ_PARALLEL
+    _SEQ_PARALLEL = on
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    global _MESH
+    prev, _MESH = _MESH, mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def _client_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_batch(x):
+    """Constrain a (B, ...) activation to batch-sharding over client axes."""
+    if _MESH is None:
+        return x
+    ca = _client_axes(_MESH)
+    n = 1
+    for a in ca:
+        n *= _MESH.shape[a]
+    if x.shape[0] % n != 0:
+        if "data" in _MESH.axis_names and x.shape[0] % _MESH.shape["data"] == 0:
+            ca, n = ("data",), _MESH.shape["data"]
+        else:
+            return x
+    spec = P(ca, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def shard_residual(x):
+    """Constrain a (B, S, D) residual activation between transformer blocks.
+
+    seq-parallel off: batch over clients (same as shard_batch).
+    seq-parallel on:  batch over clients AND S over model.
+    """
+    if _MESH is None:
+        return x
+    if not _SEQ_PARALLEL or x.ndim != 3 or \
+            x.shape[1] % _MESH.shape.get("model", 1) != 0 or x.shape[1] == 1:
+        return shard_batch(x)
+    ca = _client_axes(_MESH)
+    n = 1
+    for a in ca:
+        n *= _MESH.shape[a]
+    batch_ax = ca if x.shape[0] % n == 0 else None
+    spec = P(batch_ax, "model", None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def shard_logits(x):
+    """(B, S, V) logits: batch over clients, vocab over model."""
+    if _MESH is None:
+        return x
+    ca = _client_axes(_MESH)
+    n = 1
+    for a in ca:
+        n *= _MESH.shape[a]
+    batch_ax = ca if x.shape[0] % n == 0 else None
+    vocab_ax = "model" if x.shape[-1] % _MESH.shape["model"] == 0 else None
+    spec = P(batch_ax, *([None] * (x.ndim - 2)), vocab_ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

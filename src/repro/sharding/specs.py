@@ -1,0 +1,171 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a
+PartitionSpec on the production mesh.
+
+Axis roles
+----------
+* "model"          — tensor parallelism (Megatron-style): out-dims of up
+                     projections, in-dims of down projections, vocab.
+* "data"           — FL clients AND FSDP: batch is client-sharded here, and
+                     parameter storage is sharded here too (GSPMD inserts the
+                     FSDP all-gather/reduce-scatter pair around each layer).
+* "pod"            — second client axis (multi-pod): batch sharded, params
+                     replicated across pods (DP between pods, FSDP within).
+
+Divisibility is checked per-dim; a rule that doesn't divide falls back to
+None for that dim (honest baseline — the perf pass tightens these).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --- optimization toggles (perf hillclimb; see EXPERIMENTS.md §Perf) -------
+# Expert-weight sharding mode for (L, E, D, F)-shaped tensors:
+#   "baseline": D->data, F->model — FSDP-style, but D is the CONTRACTING dim
+#               of every expert matmul -> partial-sum all-reduce per matmul
+#               (measured 11.6 TB/step on kimi-k2 train_4k).
+#   "edata":    E->data (expert parallelism on the data axis) — conflicts
+#               with token/group sharding on the same axis (measured: only
+#               ~9% better; EXPERIMENTS.md §Perf kimi iter 1).
+#   "emodel":   E->model + out-dim->data — experts parallel on the model
+#               axis, orthogonal to token sharding; out-dim FSDP for storage.
+_EXPERT_MODE = "baseline"
+
+_EXPERT_NAMES = ("w_gate", "w_up", "w_down")
+
+# replicate the (small) KV projections instead of sharding them over model:
+# for GQA archs with n_kv_heads < model-axis size, sharding KV*hd misaligns
+# head boundaries and forces per-tile resharding inside attention.
+_REPLICATE_KV = False
+
+
+def set_replicate_kv(on: bool):
+    global _REPLICATE_KV
+    _REPLICATE_KV = on
+
+
+def set_expert_parallel(mode):
+    global _EXPERT_MODE
+    if mode is True:
+        mode = "edata"
+    if mode is False or mode is None:
+        mode = "baseline"
+    assert mode in ("baseline", "edata", "emodel", "e2d"), mode
+    _EXPERT_MODE = mode
+
+
+def client_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(mesh, axis, dim):
+    return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
+
+
+def _spec(mesh, shape, wants):
+    """wants: list of (dim_index, axis_name) preferences."""
+    out = [None] * len(shape)
+    used = set()
+    for d, ax in wants:
+        if d < len(shape) and ax not in used and _fits(mesh, ax, shape[d]):
+            out[d] = ax
+            used.add(ax)
+    return P(*out)
+
+
+# names whose LAST matmul dim is the *input* (down/out projections)
+_DOWN_NAMES = ("wo", "w_down", "ws_down", "w_out", "out_proj", "x_wo")
+# names that are plain up projections (in-dim -> fsdp, out-dim -> model)
+_UP_NAMES = ("wq", "wk", "wv", "w_gate", "w_up", "ws_gate", "ws_up", "w_in",
+             "in_proj", "x_proj", "dt_proj", "router", "x_wq", "x_wk", "x_wv",
+             "fc1", "fc2", "head")
+
+
+def param_spec(path: str, shape, mesh: Mesh) -> P:
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if name == "embed":                         # (V, D)
+        # vocab-parallel only: sharding D over "data" would propagate a
+        # feature-dim sharding into the embedding gather's output and
+        # replicate the batch (measured — EXPERIMENTS.md §Perf iter 0).
+        return _spec(mesh, shape, [(0, "model")])
+    if name == "unembed":                       # (D, V)
+        return _spec(mesh, shape, [(1, "model")])
+    if name == "conv_w":                        # (L, K, C)
+        return _spec(mesh, shape, [(nd - 1, "model")])
+    if name in ("A_log", "D", "ssm_norm", "dt_bias", "conv_b") and nd >= 2:
+        return _spec(mesh, shape, [(nd - 1, "model")])
+    if nd == 4 and name in _EXPERT_NAMES and _EXPERT_MODE != "baseline":
+        if _EXPERT_MODE == "edata":
+            # experts over data, wide dim over model
+            wide = nd - 1 if name != "w_down" else nd - 2
+            return _spec(mesh, shape, [(1, "data"), (wide, "model")])
+        if _EXPERT_MODE == "emodel":
+            # experts over model, OUT dim over data (FSDP storage).
+            # Measured pathology: FSDP gathers + weight-grad reduces fire per
+            # chunk-scan iteration (11 TB/step on kimi) — see "e2d".
+            out_dim = nd - 1
+            return _spec(mesh, shape, [(1, "model"), (out_dim, "data")])
+        # "e2d": 2D expert sharding — E over model x D over data.  Weights
+        # are FULLY sharded (no gathers, weight-grads stay local); only
+        # activation-sized partial-sum all-reduces remain.
+        if name == "w_down":                  # (L, E, F, D): out D -> data
+            return _spec(mesh, shape, [(1, "model"), (3, "data")])
+        return _spec(mesh, shape, [(1, "model"), (2, "data")])  # in D -> data
+    if name in _DOWN_NAMES:
+        # (..., in=F|X, out=D): in -> model (matches upstream out), out -> data
+        if nd >= 2:
+            return _spec(mesh, shape, [(nd - 2, "model"), (nd - 1, "data")])
+    if name in _UP_NAMES:
+        if _REPLICATE_KV and name in ("wk", "wv", "x_wk", "x_wv"):
+            return _spec(mesh, shape, [(nd - 2, "data")])  # out replicated
+        # (..., in=D, out=F|X): in -> data (fsdp), out -> model
+        if nd >= 2:
+            return _spec(mesh, shape, [(nd - 1, "model"), (nd - 2, "data")])
+    return P()                                  # norms, biases, gates, scalars
+
+
+def params_shardings(params_shapes, mesh: Mesh):
+    """params_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    def one(kp, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in kp)
+        return NamedSharding(mesh, param_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh):
+    """Batch dim -> client axes (pod,data); everything else replicated."""
+    ca = client_axes(mesh)
+
+    def one(leaf):
+        b = leaf.shape[0]
+        n_clients = 1
+        for a in ca:
+            n_clients *= mesh.shape[a]
+        if b % n_clients == 0:
+            return NamedSharding(mesh, P(ca, *([None] * (len(leaf.shape) - 1))))
+        # fall back to sharding over 'data' only, then replicate
+        if "data" in mesh.axis_names and b % mesh.shape["data"] == 0:
+            return NamedSharding(mesh, P("data",
+                                         *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    """KV caches (G,B,C,KV,hd), SSM states (L,B,...,di,...): batch -> data,
+    the widest feature dim -> model."""
+    def one(leaf):
+        shape = leaf.shape
+        out = [None] * len(shape)
+        # batch is dim 1 for stacked caches (dim 0 = layer stack)
+        if len(shape) >= 2 and _fits(mesh, "data", shape[1]) and shape[1] > 1:
+            out[1] = "data"
+        # try feature dims from the end: hd, KV, d_inner...
+        for d in range(len(shape) - 1, 1, -1):
+            if _fits(mesh, "model", shape[d]) and shape[d] > 1:
+                out[d] = "model"
+                break
+        return NamedSharding(mesh, P(*out))
+    return jax.tree.map(one, cache_shapes)

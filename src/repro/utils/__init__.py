@@ -1,0 +1,1 @@
+from repro.utils import tree_math  # noqa: F401

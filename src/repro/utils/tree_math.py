@@ -1,0 +1,69 @@
+"""Pytree arithmetic used throughout the framework.
+
+All gradient-level algebra in FedNCV (leave-one-out baselines, scalar
+statistics, server aggregation) is expressed over parameter pytrees; these
+helpers keep that algebra readable and jit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(s, x, y):
+    """y + s * x (like BLAS axpy)."""
+    return jax.tree.map(lambda xi, yi: yi + s * xi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Global inner product <a, b> over all leaves, accumulated in f32."""
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b))
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.float32(0.0)
+
+
+def tree_norm_sq(a):
+    return tree_dot(a, a)
+
+
+def tree_stack(trees, axis=0):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=axis), *trees)
+
+
+def tree_unstack(tree, axis=0):
+    n = jax.tree.leaves(tree)[0].shape[axis]
+    return [jax.tree.map(lambda x: jnp.take(x, i, axis=axis), tree)
+            for i in range(n)]
+
+
+def tree_mean(tree, axis=0):
+    """Mean along a stacked axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=axis), tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_size(tree):
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,71 @@
+"""Smoke tests: every assigned architecture instantiates a REDUCED variant
+(2 layers, d_model<=512, <=4 experts) and runs one forward/train step and one
+decode step on CPU, asserting output shapes and the absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.optim import sgd, apply_updates
+
+ARCHS = sorted(configs.REGISTRY)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch, key):
+    cfg = configs.get(arch).reduced()
+    params = api.init_params(cfg, key)
+    batch = api.make_batch(cfg, key, batch_size=2, seq_len=16)
+
+    logits = api.logits(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    loss, grads = jax.value_and_grad(lambda p: api.loss(cfg, p, batch))(params)
+    assert jnp.isfinite(loss)
+    assert not any(bool(jnp.isnan(g).any()) for g in jax.tree.leaves(grads))
+
+    # one optimizer step moves the loss
+    opt = sgd(0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params2 = apply_updates(params, updates)
+    loss2 = api.loss(cfg, params2, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) < float(loss) + 1.0  # no explosion
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, key):
+    cfg = configs.get(arch).reduced()
+    params = api.init_params(cfg, key)
+    batch = api.make_batch(cfg, key, batch_size=2, seq_len=16)
+    cache = api.init_cache(cfg, batch_size=2, cache_len=32)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        cache = encdec.prefill_cross(cfg, params, cache, enc_out)
+    if cfg.family == "vlm":
+        from repro.models import vlm
+        cache = vlm.prefill_cross(cfg, params, cache, batch["image_embeds"])
+    logits, cache2 = api.decode_step(cfg, params, cache,
+                                     batch["tokens"][:, :1], jnp.int32(0))
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = configs.get(arch).reduced()
+    assert cfg.n_layers <= 3
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4

@@ -1,0 +1,177 @@
+"""Unit + property tests for the RLOO control-variate core (paper Eq. 8-14).
+
+These tests pin down both the identities the production (reduced) path relies
+on and the degeneracies documented in DESIGN.md §1.1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import control_variates as cv
+from repro.utils.tree_math import tree_mean, tree_norm_sq, tree_stack, tree_sub
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_stack(rng, k, shapes=((3, 4), (7,))):
+    """A stacked gradient pytree with K entries."""
+    return {f"w{j}": jnp.asarray(rng.standard_normal((k,) + s), jnp.float32)
+            for j, s in enumerate(shapes)}
+
+
+# ----------------------------- client level --------------------------------
+
+@given(k=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_loo_baseline_reduced_identity(k, seed):
+    """c_{D\\i} == (K gbar - g_i)/(K-1)."""
+    rng = np.random.default_rng(seed)
+    g = _rand_stack(rng, k)
+    naive = cv.loo_baselines(g)
+    gbar = tree_mean(g, axis=0)
+    reduced = jax.tree.map(lambda x, m: (k * m[None] - x) / (k - 1), g, gbar)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6),
+                 naive, reduced)
+
+
+@given(k=st.integers(2, 8), alpha=st.floats(-1.0, 2.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_client_message_collapse(k, alpha, seed):
+    """mean_i (g_i - alpha c_i) == (1 - alpha) gbar  (DESIGN.md §1.1)."""
+    rng = np.random.default_rng(seed)
+    g = _rand_stack(rng, k)
+    reshaped = cv.rloo_reshape(g, alpha)
+    msg_naive = tree_mean(reshaped, axis=0)
+    stats = cv.client_stats_from_stack(g)
+    msg_reduced = cv.client_message(stats, alpha)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-6),
+                 msg_naive, msg_reduced)
+
+
+@given(k=st.integers(3, 10), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_scalar_moments_closed_form(k, seed):
+    """E[g c] and E[c^2] from two scalars match the naive computation."""
+    rng = np.random.default_rng(seed)
+    g = _rand_stack(rng, k)
+    stats = cv.client_stats_from_stack(g)
+    e_gc, e_cc = cv.rloo_scalar_moments(stats)
+
+    c = cv.loo_baselines(g)
+    gi = [jax.tree.map(lambda x: x[i], g) for i in range(k)]
+    ci = [jax.tree.map(lambda x: x[i], c) for i in range(k)]
+    e_gc_naive = np.mean([float(cv.tree_dot(a, b)) for a, b in zip(gi, ci)])
+    e_cc_naive = np.mean([float(tree_norm_sq(b)) for b in ci])
+    np.testing.assert_allclose(float(e_gc), e_gc_naive, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(e_cc), e_cc_naive, rtol=1e-4, atol=1e-5)
+
+
+def test_optimal_alpha_minimizes_variance_scalar():
+    """Prop. 2 sanity: alpha* = E[gc]/E[cc] minimizes the empirical variance of
+    the reshaped per-unit estimator in the scalar case."""
+    rng = np.random.default_rng(0)
+    k = 64
+    g = {"w": jnp.asarray(rng.standard_normal((k, 1)) + 3.0, jnp.float32)}
+    stats = cv.client_stats_from_stack(g)
+    a_star = float(cv.optimal_alpha_single(stats))
+
+    # The paper's Prop. 2 derivation drops E[c] terms (zero-mean-CV
+    # simplification), so alpha* minimizes the *second moment* E[(g - a c)^2],
+    # not the empirical variance.
+    def second_moment(alpha):
+        r = cv.rloo_reshape(g, alpha)["w"][:, 0]
+        return float(jnp.mean(jnp.square(r)))
+
+    assert second_moment(a_star) <= second_moment(a_star + 0.2) + 1e-9
+    assert second_moment(a_star) <= second_moment(a_star - 0.2) + 1e-9
+    assert second_moment(a_star) <= second_moment(0.0) + 1e-9
+
+
+def test_alpha_descent_moves_toward_one():
+    """Algorithm 1 line 12 drives alpha upward (and is clamped)."""
+    rng = np.random.default_rng(1)
+    g = _rand_stack(rng, 4)
+    stats = cv.client_stats_from_stack(g)
+    a = jnp.float32(0.1)
+    for _ in range(5):
+        a_new = cv.alpha_descent_update(a, stats, lr=1e-3)
+        assert float(a_new) >= float(a)
+        a = a_new
+    big = cv.alpha_descent_update(jnp.float32(0.9), stats, lr=1e3)
+    assert float(big) <= 1.0  # clamp
+
+
+# ----------------------------- server level --------------------------------
+
+@given(m=st.integers(2, 6), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_server_loo_reduced_identity(m, seed):
+    """Naive Eq. 10 baseline == all-reduce + rank-correction form."""
+    rng = np.random.default_rng(seed)
+    grads = [{"w": jnp.asarray(rng.standard_normal((3,)), jnp.float32)}
+             for _ in range(m)]
+    n_u = jnp.asarray(rng.integers(1, 50, size=m), jnp.float32)
+    n = jnp.sum(n_u)
+    p = n_u / n
+    gbar_w = jax.tree.map(lambda *xs: sum(w * x for w, x in zip(p, xs)), *grads)
+    naive = cv.server_loo_baselines(grads, n_u)
+    for u in range(m):
+        red = cv.server_loo_from_mean(gbar_w, grads[u], n_u[u], n)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5),
+                     naive[u], red)
+
+
+def test_full_participation_equal_weight_degeneracy():
+    """DESIGN.md §1.1: beta=1, equal weights -> aggregate is exactly 0."""
+    rng = np.random.default_rng(2)
+    grads = [{"w": jnp.asarray(rng.standard_normal((5,)), jnp.float32)}
+             for _ in range(4)]
+    n_u = jnp.ones(4, jnp.float32) * 10
+    agg = cv.networked_aggregate(grads, n_u, beta=1.0)
+    np.testing.assert_allclose(np.asarray(agg["w"]), 0.0, atol=1e-5)
+
+
+def test_beta_zero_is_fedavg():
+    rng = np.random.default_rng(3)
+    grads = [{"w": jnp.asarray(rng.standard_normal((5,)), jnp.float32)}
+             for _ in range(4)]
+    n_u = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    agg = cv.networked_aggregate(grads, n_u, beta=0.0)
+    p = np.asarray(n_u) / float(np.sum(n_u))
+    expected = sum(pi * np.asarray(g["w"]) for pi, g in zip(p, grads))
+    np.testing.assert_allclose(np.asarray(agg["w"]), expected, rtol=1e-5, atol=1e-6)
+
+
+@given(m=st.integers(2, 6), beta=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_stacked_aggregate_matches_listwise(m, beta, seed):
+    rng = np.random.default_rng(seed)
+    grads = [{"w": jnp.asarray(rng.standard_normal((4,)), jnp.float32)}
+             for _ in range(m)]
+    n_u = jnp.asarray(rng.integers(1, 30, size=m), jnp.float32)
+    a = cv.networked_aggregate(grads, n_u, beta=beta)
+    b = cv.networked_aggregate_stacked(tree_stack(grads), n_u, beta=beta)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5),
+                 a, b)
+
+
+def test_server_loo_correction_is_drift_direction():
+    """With equal weights, g_u - c_{V\\u} == M/(M-1) * (g_u - gbar): the server
+    CV isolates client u's drift from the cohort mean (the SCAFFOLD-like
+    direction), which is what makes it useful as a per-client correction."""
+    rng = np.random.default_rng(4)
+    m = 6
+    grads = [{"w": jnp.asarray(rng.standard_normal((5,)), jnp.float32)}
+             for _ in range(m)]
+    n_u = jnp.ones(m, jnp.float32) * 8
+    gbar = jax.tree.map(lambda *xs: sum(xs) / m, *grads)
+    baselines = cv.server_loo_baselines(grads, n_u)
+    for u in range(m):
+        corrected = tree_sub(grads[u], baselines[u])
+        expected = jax.tree.map(lambda g, mbar: (m / (m - 1)) * (g - mbar),
+                                grads[u], gbar)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4,
+                                                             atol=1e-5),
+                     corrected, expected)

@@ -1,0 +1,98 @@
+"""Launch-layer tests: sharding specs, HLO collective analysis, and a
+small-mesh lower+compile in a subprocess (4 forced host devices).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_param_spec_rules():
+    from repro.sharding.specs import param_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))  # divisibility always ok
+    assert param_spec("embed", (512, 128), mesh) == P("model", None)
+    assert param_spec("layers/wq", (4, 128, 256), mesh) == P(None, "data",
+                                                             "model")
+    assert param_spec("layers/wo", (4, 256, 128), mesh) == P(None, "model",
+                                                             "data")
+    assert param_spec("layers/attn_norm", (4, 128), mesh) == P()
+    # experts: (L, E, D, F) baseline — D fsdp, F model
+    assert param_spec("layers/w_gate", (4, 8, 128, 64), mesh) == \
+        P(None, None, "data", "model")
+
+
+def test_param_spec_divisibility_fallback():
+    from repro.sharding.specs import param_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # dims not divisible by axis sizes fall back to None
+    big = jax.make_mesh((1, 1), ("data", "model"))
+    spec = param_spec("layers/wq", (4, 127, 255), big)  # 127/255 odd sizes
+    assert spec == P(None, "data", "model")  # axis size 1 divides anything
+
+
+def test_hlo_collective_totals_synthetic():
+    from repro.launch.hlo_analysis import collective_totals
+    hlo = """HloModule test
+
+%body.1 (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %ar = f32[4]{0} all-reduce(%x), replica_groups={}
+  ROOT %t = tuple(...)
+}
+
+%cond.1 (p: (s32[], f32[4])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %ag = f32[8]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[4]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %r = f32[8]{0} copy(%ag)
+}
+"""
+    tot = collective_totals(hlo)
+    assert tot["all-gather"] == 32                  # 8 f32
+    assert tot["all-reduce"] == 7 * 16              # 4 f32 x 7 trips
+    assert tot["counts"]["all-reduce"] == 7.0
+
+
+@pytest.mark.slow
+def test_small_mesh_compile_subprocess():
+    """Lower+compile a reduced arch train step on a 2x2 mesh (4 host devs)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.configs.base import InputShape
+from repro.launch import train as T
+from repro.sharding.ctx import activation_mesh
+
+cfg = configs.get("gemma2-9b").reduced()
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+shape = InputShape("tiny", 64, 8, "train")
+args, shard = T.sharded_in_specs(cfg, mesh, shape, "train")
+step = T.make_train_step(cfg, k_micro=2)
+with mesh, activation_mesh(mesh):
+    compiled = jax.jit(step, in_shardings=shard).lower(*args).compile()
+print("COMPILED_OK", compiled.cost_analysis() is not None)
+
+# decode path too
+shape_d = InputShape("tinyd", 64, 8, "decode")
+args_d, shard_d = T.sharded_in_specs(cfg, mesh, shape_d, "decode")
+serve = T.make_serve_step(cfg)
+with mesh, activation_mesh(mesh):
+    compiled_d = jax.jit(serve, in_shardings=shard_d).lower(*args_d).compile()
+print("DECODE_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert "COMPILED_OK" in out.stdout, out.stderr[-2000:]
+    assert "DECODE_OK" in out.stdout, out.stderr[-2000:]

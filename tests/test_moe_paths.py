@@ -1,0 +1,69 @@
+"""The sharding-aware chunked MoE path must agree numerically with the
+baseline grouped path (same routing, same capacity drops for aligned group
+boundaries)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import moe
+
+
+def _cfg():
+    return ArchConfig(name="m", family="moe", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=1, d_ff=64, vocab=64, head_dim=16,
+                      n_experts=4, top_k=2, d_ff_expert=16,
+                      dtype="float32")
+
+
+def _layer_params(cfg, key):
+    p = moe.init(cfg, key)["layers"]
+    return jax.tree.map(lambda x: x[0], p)
+
+
+def test_chunked_equals_baseline():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p = _layer_params(cfg, key)
+    t = 8 * moe.MOE_GROUP // moe.MOE_GROUP * 256  # 2048 tokens
+    x = jax.random.normal(jax.random.PRNGKey(1), (2048, cfg.d_model))
+
+    # gc such that group == MOE_GROUP boundaries align: gc=2 -> group=1024
+    y_base, aux_base = moe.moe_ffn(cfg, p, x)
+    y_chunk, aux_chunk = moe.moe_ffn_chunked(cfg, p, x, gc=2)
+    np.testing.assert_allclose(np.asarray(y_base), np.asarray(y_chunk),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_base), float(aux_chunk), rtol=1e-3)
+
+
+def test_chunked_multi_chunk():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(2)
+    p = _layer_params(cfg, key)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4096, cfg.d_model))
+    # gc=2, group=1024 -> 2 chunks; tokens are re-ordered across chunks vs
+    # the baseline's sequential groups, so compare against a baseline on the
+    # equivalently re-ordered input.
+    gc, group = 2, 1024
+    n_chunks = 4096 // (gc * group)
+    y_chunk, _ = moe.moe_ffn_chunked(cfg, p, x, gc=gc)
+    # reference: emulate the (gc, n_chunks*group) layout groupings
+    xg = x.reshape(gc, n_chunks, group, cfg.d_model).transpose(1, 0, 2, 3)
+    ys = []
+    for c in range(n_chunks):
+        yc = jnp.stack([moe.moe_ffn(cfg, p, xg[c, g])[0]
+                        for g in range(gc)])
+        ys.append(yc)
+    y_ref = jnp.stack(ys).transpose(1, 0, 2, 3).reshape(4096, cfg.d_model)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_fallback_on_indivisible():
+    cfg = _cfg()
+    p = _layer_params(cfg, jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (96, cfg.d_model))
+    y_chunk, _ = moe.moe_ffn_chunked(cfg, p, x, gc=7)   # 96 % 7 != 0
+    y_base, _ = moe.moe_ffn(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_base),
+                               rtol=2e-4, atol=2e-4)

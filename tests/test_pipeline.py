@@ -1,0 +1,34 @@
+"""Tests for the data pipeline (batching, prefetch)."""
+import numpy as np
+
+from repro.data.pipeline import ClientBatcher, TokenBatcher, prefetch, take
+
+
+def test_token_batcher_shapes_and_shift():
+    toks = np.arange(1000, dtype=np.int32) % 97
+    it = TokenBatcher(toks, batch=4, seq=16, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    # labels are tokens shifted by one
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_client_batcher_respects_shard():
+    data = dict(images=np.arange(50, dtype=np.float32),
+                labels=np.arange(50, dtype=np.int32))
+    idx = np.full(20, -1, np.int32)
+    idx[:7] = np.asarray([3, 5, 8, 13, 21, 34, 44])
+    it = ClientBatcher(data, idx, k_micro=2, micro_batch=4, seed=0)
+    b = next(it)
+    assert b["images"].shape == (2, 4)
+    assert set(np.unique(b["labels"])).issubset({3, 5, 8, 13, 21, 34, 44})
+
+
+def test_prefetch_preserves_order_and_count():
+    toks = np.arange(500, dtype=np.int32)
+    it = take(TokenBatcher(toks, batch=2, seq=8, seed=1), 5)
+    ref = list(take(TokenBatcher(toks, batch=2, seq=8, seed=1), 5))
+    out = list(prefetch(iter(ref), depth=2))
+    assert len(out) == 5
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a["tokens"], np.asarray(b["tokens"]))

@@ -1,0 +1,142 @@
+"""Tests for substrate layers: optimizers, schedules, Dirichlet partitioner,
+synthetic data, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import restore_step, save_step, latest_step
+from repro.data import dirichlet_partition, label_distribution, \
+    make_image_dataset, make_token_dataset, SPECS
+from repro.optim import schedules
+
+
+# ----------------------------- optimizers ----------------------------------
+
+def _quad_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    return params, loss, target
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: optim.sgd(0.1),
+    lambda: optim.sgd(0.05, momentum=0.9),
+    lambda: optim.adam(0.1),
+    lambda: optim.adamw(0.1, weight_decay=1e-4, clip_norm=10.0),
+])
+def test_optimizer_converges(make_opt):
+    params, loss, target = _quad_problem()
+    opt = make_opt()
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_clip_by_global_norm():
+    opt = optim.clip_by_global_norm(1.0)
+    g = {"w": jnp.asarray([3.0, 4.0])}
+    out, _ = opt.update(g, opt.init(g), None)
+    np.testing.assert_allclose(float(jnp.linalg.norm(out["w"])), 1.0,
+                               rtol=1e-5)
+
+
+def test_schedules_shapes():
+    for sched in [schedules.constant(0.1),
+                  schedules.linear(0.1, 0.0, 100),
+                  schedules.cosine_decay(0.1, 100),
+                  schedules.warmup_cosine(0.1, 10, 100)]:
+        vals = [float(sched(jnp.asarray(s))) for s in [0, 5, 50, 100, 200]]
+        assert all(np.isfinite(v) and v >= 0 for v in vals)
+    wc = schedules.warmup_cosine(1.0, 10, 100)
+    assert float(wc(jnp.asarray(5))) < float(wc(jnp.asarray(10)))  # warming
+    assert float(wc(jnp.asarray(99))) < float(wc(jnp.asarray(11)))  # decaying
+
+
+# ----------------------------- data ----------------------------------------
+
+@given(alpha=st.sampled_from([0.1, 0.5, 10.0]), m=st.integers(4, 16),
+       seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_dirichlet_partition_complete(alpha, m, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=500)
+    idx, sizes = dirichlet_partition(labels, m, alpha, rng)
+    all_assigned = idx[idx >= 0]
+    assert len(all_assigned) == 500                 # complete
+    assert len(np.unique(all_assigned)) == 500      # disjoint
+    assert (sizes >= 2).all()                       # min shard size
+
+
+def test_dirichlet_skew_increases_with_small_alpha():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, size=5000)
+
+    def skew(alpha):
+        idx, _ = dirichlet_partition(labels, 10, alpha,
+                                     np.random.default_rng(1))
+        hist = label_distribution(labels, idx, 10).astype(float)
+        hist /= np.maximum(hist.sum(1, keepdims=True), 1)
+        # mean per-client entropy; lower = more skew
+        ent = -(hist * np.log(hist + 1e-12)).sum(1)
+        return ent.mean()
+
+    assert skew(0.1) < skew(10.0) - 0.3
+
+
+def test_image_dataset_learnable_structure():
+    spec = SPECS["mnist"]
+    rng = np.random.default_rng(0)
+    images, labels = make_image_dataset(spec, rng, n_override=2000,
+                                        noise=0.8, class_sep=1.0,
+                                        label_noise=0.0)
+    assert images.shape == (2000, 28, 28, 1)
+    # same-class images more similar than cross-class (signal exists)
+    c0 = images[labels == 0][:50].reshape(-1, 28 * 28 * 1)
+    c1 = images[labels == 1][:50].reshape(-1, 28 * 28 * 1)
+    within = np.linalg.norm(c0[:25] - c0[25:50], axis=1).mean()
+    across = np.linalg.norm(c0[:25] - c1[:25], axis=1).mean()
+    assert across > within
+
+
+def test_token_dataset():
+    toks = make_token_dataset(1000, 10_000)
+    assert toks.min() >= 0 and toks.max() < 1000
+    # injected bigram structure
+    assert (toks[3::4] == toks[2::4][: len(toks[3::4])]).mean() > 0.99
+
+
+# ----------------------------- checkpoint ----------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.asarray([1, 2], jnp.int32)}}
+    d = str(tmp_path / "ckpts")
+    save_step(d, 10, tree, meta={"loss": 1.5})
+    save_step(d, 20, tree)
+    restored, meta = restore_step(d, tree)
+    assert meta["step"] == 20
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                            np.asarray(b)),
+                 tree, restored)
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention(tmp_path):
+    tree = {"w": jnp.zeros(3)}
+    d = str(tmp_path / "ckpts")
+    for s in range(6):
+        save_step(d, s, tree, keep=3)
+    assert latest_step(d) == 5
+    files = sorted(os.listdir(d))
+    assert files == ["3.ckpt", "4.ckpt", "5.ckpt"]
