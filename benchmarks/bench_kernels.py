@@ -16,8 +16,7 @@ import numpy as np
 
 
 def timeit(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))     # one warmup, block on whole output
     t0 = time.time()
     for _ in range(n):
         jax.block_until_ready(fn(*args))
@@ -38,6 +37,18 @@ def main():
     us_ref = timeit(jax.jit(rloo_combine_ref), g, a)
     print(f"rloo_ref_jnp,{us_ref:.0f},K=8 N=65536 (oracle wall time)")
     print("rloo_kernel,validated,allclose vs oracle at bench size")
+
+    # ncv_aggregate: fused server reduction vs per-leaf stacked oracle
+    from repro.kernels.rloo.rloo import ncv_aggregate
+    from repro.kernels.rloo.ref import ncv_aggregate_ref
+    gm = jax.random.normal(key, (10, 1 << 16), jnp.float32)
+    ns = jnp.arange(1.0, 11.0)
+    agg, nrm = ncv_aggregate(gm, ns, 1.0)
+    agg_r, nrm_r = ncv_aggregate_ref(gm, ns, 1.0)
+    np.testing.assert_allclose(agg, agg_r, rtol=1e-4, atol=1e-5)
+    us_agg = timeit(jax.jit(ncv_aggregate_ref), gm, ns)
+    print(f"ncv_agg_ref_jnp,{us_agg:.0f},M=10 N=65536 (oracle wall time)")
+    print("ncv_agg_kernel,validated,allclose vs oracle at bench size")
 
     # attention: naive vs blocked (jnp) + kernel validation
     from repro.models.layers import attend, blocked_attention, _make_mask

@@ -1,5 +1,7 @@
 """Benchmark orchestrator — one benchmark per paper table/figure plus the
-systems benches.  Prints ``name,value,derived`` CSV lines per benchmark.
+systems benches.  Prints ``name,value,derived`` CSV lines per benchmark and
+mirrors each benchmark's output into a machine-readable ``BENCH_<name>.json``
+(wall time + parsed CSV rows) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
 
@@ -8,6 +10,9 @@ Set BENCH_FAST=0 for the full-size (slow) protocol.
 from __future__ import annotations
 
 import argparse
+import io
+import json
+import os
 import sys
 import time
 import traceback
@@ -22,6 +27,53 @@ BENCHES = [
 ]
 
 
+class _Tee(io.TextIOBase):
+    """Mirror writes to the real stdout while buffering for JSON capture."""
+
+    def __init__(self, real):
+        self._real = real
+        self._buf = io.StringIO()
+
+    def write(self, s):
+        self._real.write(s)
+        self._buf.write(s)
+        return len(s)
+
+    def flush(self):
+        self._real.flush()
+
+    def captured(self) -> str:
+        return self._buf.getvalue()
+
+
+def _parse_rows(text: str):
+    """CSV-ish lines (>= 2 comma fields, not a comment) -> row dicts."""
+    rows = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split(",")
+        if len(parts) < 2:
+            continue
+        rows.append({"name": parts[0], "fields": parts[1:]})
+    return rows
+
+
+def _emit_json(name: str, ok: bool, wall_s: float, stdout_text: str):
+    path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
+    payload = {
+        "bench": name,
+        "ok": ok,
+        "wall_time_s": round(wall_s, 3),
+        "fast": os.environ.get("BENCH_FAST", "1") == "1",
+        "rows": _parse_rows(stdout_text),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"bench:{name},json,{path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only")
@@ -32,14 +84,22 @@ def main() -> None:
             continue
         print(f"\n==== bench:{name} ({module}) ====", flush=True)
         t0 = time.time()
+        tee = _Tee(sys.stdout)
+        sys.stdout = tee
         try:
             mod = __import__(module, fromlist=["main"])
             mod.main()
-            print(f"bench:{name},ok,{time.time() - t0:.1f}s", flush=True)
+            ok = True
         except Exception:
             failures += 1
+            ok = False
             traceback.print_exc()
-            print(f"bench:{name},FAILED,{time.time() - t0:.1f}s", flush=True)
+        finally:
+            sys.stdout = tee._real
+        wall = time.time() - t0
+        status = "ok" if ok else "FAILED"
+        print(f"bench:{name},{status},{wall:.1f}s", flush=True)
+        _emit_json(name, ok, wall, tee.captured())
     sys.exit(1 if failures else 0)
 
 

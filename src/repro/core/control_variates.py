@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.utils.tree_math import (
-    tree_dot, tree_mean, tree_norm_sq, tree_scale, tree_sub,
+    ravel_stack, tree_dot, tree_mean, tree_norm_sq, tree_scale, tree_sub,
+    unravel, unravel_stack,
 )
 
 
@@ -85,6 +86,41 @@ def client_stats_from_stack(g_stack) -> ClientCVStats:
 def client_message(stats: ClientCVStats, alpha):
     """The gradient a client uploads: mean_i (g_i - alpha c_{D\\i}) = (1-alpha) gbar."""
     return tree_scale(stats.mean_grad, 1.0 - alpha)
+
+
+def client_pass_flat(g_stack, alpha, *, want_reshaped: bool = False,
+                     use_pallas: bool | None = None):
+    """Entire client-side RLOO pass over the flat (K, N) substrate.
+
+    g_stack: pytree with leaves (K, ...).  Ravels it into one contiguous
+    (K, N) f32 buffer, runs the fused combine (Pallas on TPU, one fused jnp
+    body elsewhere — auto-detected), and returns
+
+        (message pytree, ClientCVStats, reshaped pytree | None)
+
+    message == (1 - alpha) * gbar (Eq. 9 collapsed), stats carry S1/S2, and
+    `want_reshaped=True` additionally unravels g'_i = g_i - alpha c_{D\\i}
+    for multi-step local training.  One read of the gradient stack replaces
+    the 3-4 per-leaf passes of the naive composition.
+    """
+    flat, spec = ravel_stack(g_stack)
+    k = flat.shape[0]
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if use_pallas is None:
+        from repro.kernels import default_interpret
+        use_pallas = not default_interpret()
+    if use_pallas:
+        from repro.kernels.rloo.rloo import rloo_combine
+        mean, gp, s2 = rloo_combine(flat, alpha, interpret=False)
+    else:
+        from repro.kernels.rloo.ref import rloo_combine_ref
+        mean, gp, s2 = rloo_combine_ref(flat, alpha)
+    s1 = jnp.sum(mean * mean)
+    stats = ClientCVStats(unravel(mean, spec), jnp.asarray(k, jnp.float32),
+                          s1, s2)
+    msg = unravel((1.0 - alpha) * mean, spec)
+    reshaped = unravel_stack(gp, spec) if want_reshaped else None
+    return msg, stats, reshaped
 
 
 def rloo_scalar_moments(stats: ClientCVStats):
@@ -209,3 +245,25 @@ def networked_aggregate_stacked(g_stack, n_samples, beta=1.0):
         return jnp.sum(pw * g_prime, axis=0)
 
     return jax.tree.map(per_leaf, g_stack)
+
+
+def networked_aggregate_flat(g_stack, n_samples, beta=1.0, *,
+                             use_pallas: bool | None = None):
+    """FedNCV server step (Eq. 10-12) over the flat (cohort, N) substrate.
+
+    g_stack: pytree with leaves (M, ...) — stacked cohort uploads.  Ravels
+    into one (M, N) buffer and runs the fused `ncv_aggregate` reduction
+    (weighted mean + LOO correction + norm diagnostic in one read; Pallas on
+    TPU, fused jnp elsewhere).  Returns (aggregate pytree, ||agg||^2).
+    """
+    flat, spec = ravel_stack(g_stack)
+    if use_pallas is None:
+        from repro.kernels import default_interpret
+        use_pallas = not default_interpret()
+    if use_pallas:
+        from repro.kernels.rloo.rloo import ncv_aggregate
+        agg, nrm = ncv_aggregate(flat, n_samples, beta, interpret=False)
+    else:
+        from repro.kernels.rloo.ref import ncv_aggregate_ref
+        agg, nrm = ncv_aggregate_ref(flat, n_samples, beta)
+    return unravel(agg, spec), nrm

@@ -47,10 +47,9 @@ def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float):
         alpha_u = alpha[0]
         n_u_local = n_u[0].astype(jnp.float32)
 
-        # ---- client side (Algorithm 1 lines 3-8) ----
+        # ---- client side (Algorithm 1 lines 3-8), flat substrate ----
         g_stack = _microbatch_grads(task, params, local_batch)
-        stats = cv.client_stats_from_stack(g_stack)
-        msg = cv.client_message(stats, alpha_u)
+        msg, stats, _ = cv.client_pass_flat(g_stack, alpha_u)
 
         # ---- server side (lines 9-13) as collectives ----
         n = jax.lax.psum(n_u_local, ca)
@@ -74,10 +73,19 @@ def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float):
     cspec = P(ca)
     batch_spec = P(ca)
 
-    round_fn = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(pspec, cspec, batch_spec, cspec),
-        out_specs=(pspec, cspec, pspec),
-        check_vma=False,
-    )
+    if hasattr(jax, "shard_map"):                  # jax >= 0.6
+        round_fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, cspec, batch_spec, cspec),
+            out_specs=(pspec, cspec, pspec),
+            check_vma=False,
+        )
+    else:                                          # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
+        round_fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, cspec, batch_spec, cspec),
+            out_specs=(pspec, cspec, pspec),
+            check_rep=False,
+        )
     return jax.jit(round_fn)

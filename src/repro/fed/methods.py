@@ -105,9 +105,10 @@ def fedavg_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
 
 
 def fedavg_server(mc, task, params, grads_stacked, n_samples, sstate, lr):
-    agg = cv.networked_aggregate_stacked(grads_stacked, n_samples, beta=0.0)
+    agg, agg_norm = cv.networked_aggregate_flat(grads_stacked, n_samples,
+                                                beta=0.0)
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
-    return params, sstate, dict(agg_norm=tree_norm_sq(agg))
+    return params, sstate, dict(agg_norm=agg_norm)
 
 
 # ---------------------------------------------------------------------------
@@ -177,11 +178,11 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
     del key
     alpha = cstate["alpha"]
     g_stack = _microbatch_grads(task, params, batches)
-    stats = cv.client_stats_from_stack(g_stack)
 
     if mc.local_epochs > 1:
         # Multi-step variant: apply RLOO-reshaped gradients sequentially.
-        reshaped = cv.rloo_reshape(g_stack, alpha)
+        _, stats, reshaped = cv.client_pass_flat(g_stack, alpha,
+                                                 want_reshaped=True)
         p_local = params
 
         def step(p, g):
@@ -189,16 +190,17 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
         for _ in range(mc.local_epochs - 1):
             p_local, _ = jax.lax.scan(step, p_local, reshaped)
             g_stack = _microbatch_grads(task, p_local, batches)
-            reshaped = cv.rloo_reshape(g_stack, alpha)
-        stats = cv.client_stats_from_stack(g_stack)
+            msg, stats, reshaped = cv.client_pass_flat(g_stack, alpha,
+                                                       want_reshaped=True)
         k = _k_of(batches)
         base = jax.tree.map(
             lambda a, b: (a - b) / (mc.local_lr * (mc.local_epochs - 1) * k),
             params, p_local)
-        grad = tree_axpy(1.0, cv.client_message(stats, alpha), base)
+        grad = tree_axpy(1.0, msg, base)
         grad = tree_scale(grad, 0.5)   # average drift + final reshaped grad
     else:
-        grad = cv.client_message(stats, alpha)     # == mean_i (g_i - a c_i)
+        # Single fused pass: message == mean_i (g_i - a c_i) = (1-a) gbar.
+        grad, stats, _ = cv.client_pass_flat(g_stack, alpha)
 
     aux = dict(mean_norm_sq=stats.mean_norm_sq, sum_norm_sq=stats.sum_norm_sq,
                k=stats.k, alpha=alpha)
@@ -208,9 +210,10 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
 def fedncv_server(mc: MethodConfig, task, params, grads_stacked, n_samples,
                   aux, sstate, lr):
     """Server side of Algorithm 1 (lines 9-13): networked aggregation (Eq.
-    10-12) + alpha_u adaptation (line 12, or Prop. 2 closed form)."""
-    agg = cv.networked_aggregate_stacked(grads_stacked, n_samples,
-                                         beta=mc.ncv_beta)
+    10-12, one fused pass over the flat cohort stack) + alpha_u adaptation
+    (line 12, or Prop. 2 closed form — M scalars, done outside the kernel)."""
+    agg, agg_norm = cv.networked_aggregate_flat(grads_stacked, n_samples,
+                                                beta=mc.ncv_beta)
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
 
     stats = cv.ClientCVStats(None, aux["k"], aux["mean_norm_sq"],
@@ -222,7 +225,7 @@ def fedncv_server(mc: MethodConfig, task, params, grads_stacked, n_samples,
             lambda a, k, s1, s2: cv.alpha_descent_update(
                 a, cv.ClientCVStats(None, k, s1, s2), mc.ncv_alpha_lr))(
             aux["alpha"], aux["k"], aux["mean_norm_sq"], aux["sum_norm_sq"])
-    return params, sstate, dict(alpha=alpha_new, agg_norm=tree_norm_sq(agg))
+    return params, sstate, dict(alpha=alpha_new, agg_norm=agg_norm)
 
 
 def fedncv_init_cstate(params, mc: MethodConfig):

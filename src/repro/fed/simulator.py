@@ -1,9 +1,18 @@
-"""In-process FL simulator: the cohort dimension is vmapped on one device.
+"""In-process FL simulator: device-resident, the cohort dimension is vmapped.
 
 Reproduces the paper's experimental protocol: M clients with Dirichlet(α)
 non-IID shards, a sampled cohort per round, local training, server
 aggregation per method, and pre-/post-personalization evaluation
 ("test before" / "test after" in Table 1).
+
+The whole round lives on device: cohort sampling (`jax.random.choice`),
+microbatch gather (`jnp.take` into the resident dataset), the vmapped client
+pass, and the per-method server update all run inside one jit.  Multi-round
+driving goes through `run_rounds(n)`, which `lax.scan`s the round body with
+donated params/state buffers so an n-round benchmark pays one dispatch + one
+host sync instead of n.  Evaluation is a single padded, vmapped pass over
+all clients (padded positions are masked with label -1 and corrected by the
+true shard size) instead of one trace per client.
 
 The same `methods.py` client/server functions are reused by the
 mesh-distributed runtime (fed/distributed.py), so what this simulator
@@ -52,8 +61,8 @@ class Simulator:
         padded with -1, client_sizes (M,))."""
         self.task, self.fl = task, fl
         self.params = params
-        self.data = data
-        self.rng = np.random.default_rng(seed)
+        self.data = {k: jnp.asarray(v) for k, v in data.items()}
+        self.base_key = jax.random.PRNGKey(seed)
         m = fl.n_clients
 
         # per-client state
@@ -71,129 +80,238 @@ class Simulator:
             self.h = jax.vmap(lambda _: tree_zeros_like(params))(
                 jnp.arange(m))
 
-        self.round_fn = self._build_round_fn()
         self.round_idx = 0
+        self._round_jit = jax.jit(self._round_core)
+        # donate params + state: the scanned buffers are consumed in place,
+        # multi-round driving never copies the model between rounds.
+        self._scan_jit = jax.jit(self._scan_rounds, donate_argnums=(0, 1))
+        self._eval_jit = jax.jit(self._eval_core,
+                                 static_argnames=("personalize_steps",))
 
     # ------------------------------------------------------------------
-    def _draw_cohort(self):
-        """Numpy-side data selection: cohort ids + (cohort,K,b,...) batches."""
+    # method state <-> attribute plumbing (attributes are the public API)
+    # ------------------------------------------------------------------
+    def _get_state(self):
         fl = self.fl
-        idx = self.rng.choice(fl.n_clients, size=fl.cohort, replace=False)
-        sizes = np.asarray(self.data["client_sizes"])[idx]
-        picks = []
-        for u in idx:
-            pool = np.asarray(self.data["client_idx"][u])
-            pool = pool[pool >= 0]
-            need = fl.k_micro * fl.micro_batch
-            take = self.rng.choice(pool, size=need, replace=len(pool) < need)
-            picks.append(take.reshape(fl.k_micro, fl.micro_batch))
-        picks = np.stack(picks)                         # (cohort, K, b)
-        batch = {k: jnp.asarray(np.asarray(v)[picks])
-                 for k, v in self.data.items()
+        if fl.method == "scaffold":
+            return dict(c_u=self.c_u, c_global=self.c_global)
+        if fl.method == "fedncv":
+            return dict(alphas=self.alphas)
+        if fl.method in PERSONAL_METHODS:
+            return dict(personal=self.personal)
+        if fl.method == "fedncv+":
+            return dict(h=self.h)
+        return dict()
+
+    def _set_state(self, state):
+        fl = self.fl
+        if fl.method == "scaffold":
+            self.c_u, self.c_global = state["c_u"], state["c_global"]
+        elif fl.method == "fedncv":
+            self.alphas = state["alphas"]
+        elif fl.method in PERSONAL_METHODS:
+            self.personal = state["personal"]
+        elif fl.method == "fedncv+":
+            self.h = state["h"]
+
+    # ------------------------------------------------------------------
+    # one round, fully on device
+    # ------------------------------------------------------------------
+    def _draw_cohort(self, key):
+        """Device-side data selection: cohort ids + (cohort,K,b,...) batches.
+
+        Cohort clients are drawn without replacement; microbatch samples are
+        drawn uniformly (with replacement) from each client's shard via a
+        padded index-table gather — no host round-trip.
+        """
+        fl, data = self.fl, self.data
+        kc, kp = jax.random.split(key)
+        idx = jax.random.choice(kc, fl.n_clients, (fl.cohort,), replace=False)
+        sizes = data["client_sizes"][idx].astype(jnp.float32)
+        pool = data["client_idx"][idx]                   # (cohort, n_max)
+        need = fl.k_micro * fl.micro_batch
+        u = jax.random.uniform(kp, (fl.cohort, need))
+        pos = jnp.minimum((u * sizes[:, None]).astype(jnp.int32),
+                          sizes[:, None].astype(jnp.int32) - 1)
+        sel = jnp.take_along_axis(pool, jnp.maximum(pos, 0), axis=1)
+        sel = jnp.maximum(sel, 0).reshape(fl.cohort, fl.k_micro,
+                                          fl.micro_batch)
+        batch = {k: jnp.take(v, sel, axis=0) for k, v in data.items()
                  if k not in ("client_idx", "client_sizes")}
-        return jnp.asarray(idx), batch, jnp.asarray(sizes, jnp.float32)
+        return idx, batch, sizes
 
-    # ------------------------------------------------------------------
-    def _build_round_fn(self):
-        task, fl = self.task, self.fl
-        client_fn = CLIENT_FNS[fl.method]
-        mc = fl.mc
-
-        @jax.jit
-        def round_fn(params, cstates, batches, n_samples, key):
-            keys = jax.random.split(key, fl.cohort)
-            outs = jax.vmap(
-                lambda cs, b, k: client_fn(mc, task, params, cs, b, k)
-            )(cstates, batches, keys)
-            grads, new_cstates, aux = outs.grad, outs.cstate, outs.aux
-
-            if fl.method == "fedncv":
-                params, _, diag = M.fedncv_server(
-                    mc, task, params, grads, n_samples, aux, dict(),
-                    fl.server_lr)
-            else:
-                params, _, diag = M.fedavg_server(
-                    mc, task, params, grads, n_samples, dict(), fl.server_lr)
-                if fl.method == "scaffold":
-                    diag["c_delta"] = jax.tree.map(
-                        lambda d: jnp.mean(d, 0), aux["delta_c"])
-                if fl.method == "pfedsim":
-                    diag["heads"] = aux["head"]
-            return params, new_cstates, grads, diag
-
-        return round_fn
-
-    # ------------------------------------------------------------------
-    def _cohort_cstates(self, idx):
+    def _cohort_cstates(self, state, idx):
         fl = self.fl
         if fl.method == "scaffold":
             return dict(
-                c_u=jax.tree.map(lambda x: x[idx], self.c_u),
-                c_global=jax.vmap(lambda _: self.c_global)(idx))
+                c_u=jax.tree.map(lambda x: x[idx], state["c_u"]),
+                c_global=jax.vmap(lambda _: state["c_global"])(idx))
         if fl.method == "fedncv":
-            return dict(alpha=self.alphas[idx])
+            return dict(alpha=state["alphas"][idx])
         if fl.method in PERSONAL_METHODS:
             return dict(personal=jax.tree.map(lambda x: x[idx],
-                                              self.personal))
-        return dict(dummy=jnp.zeros(len(idx)))
+                                              state["personal"]))
+        return dict(dummy=jnp.zeros(fl.cohort))
 
-    def run_round(self, key=None):
-        fl = self.fl
-        key = key if key is not None else jax.random.PRNGKey(self.round_idx)
-        self.round_idx += 1
-        idx, batches, sizes = self._draw_cohort()
-        cstates = self._cohort_cstates(idx)
-        params, new_cstates, grads, diag = self.round_fn(
-            self.params, cstates, batches, sizes, key)
+    def _round_core(self, params, state, key, r):
+        """params, method state, PRNG key, 1-based round number -> updated
+        (params, state, scalar diagnostics).  Pure; jit/scan-able."""
+        task, fl = self.task, self.fl
+        client_fn, mc = CLIENT_FNS[fl.method], fl.mc
+        kd, kk = jax.random.split(key)
+        idx, batches, sizes = self._draw_cohort(kd)
+        cstates = self._cohort_cstates(state, idx)
+        keys = jax.random.split(kk, fl.cohort)
+        outs = jax.vmap(
+            lambda cs, b, k: client_fn(mc, task, params, cs, b, k)
+        )(cstates, batches, keys)
+        grads, new_cstates, aux = outs.grad, outs.cstate, outs.aux
 
-        if fl.method == "fedncv+":
-            # server-side stale-CV aggregation replaces the FedAvg update
-            params, sstate, diag2 = M.fedncv_plus_server(
-                fl.mc, self.task, self.params, grads, sizes, idx,
-                dict(h=self.h), fl.server_lr, fl.n_clients)
-            self.h = sstate["h"]
-            diag.update(diag2)
-        self.params = params
+        new_state = dict(state)
+        if fl.method == "fedncv":
+            params, _, diag = M.fedncv_server(
+                mc, task, params, grads, sizes, aux, dict(), fl.server_lr)
+            new_state["alphas"] = state["alphas"].at[idx].set(
+                diag.pop("alpha"))
+        elif fl.method == "fedncv+":
+            params, sstate, diag = M.fedncv_plus_server(
+                mc, task, params, grads, sizes, idx, dict(h=state["h"]),
+                fl.server_lr, fl.n_clients)
+            new_state["h"] = sstate["h"]
+        else:
+            params, _, diag = M.fedavg_server(
+                mc, task, params, grads, sizes, dict(), fl.server_lr)
+            if fl.method == "scaffold":
+                c_delta = jax.tree.map(lambda d: jnp.mean(d, 0),
+                                       aux["delta_c"])
+                new_state["c_u"] = jax.tree.map(
+                    lambda a, n: a.at[idx].set(n),
+                    state["c_u"], new_cstates["c_u"])
+                new_state["c_global"] = tree_axpy(
+                    fl.cohort / fl.n_clients, c_delta, state["c_global"])
+            elif fl.method in PERSONAL_METHODS:
+                personal_new = new_cstates["personal"]
+                if fl.method == "pfedsim":
+                    mixed = M.pfedsim_server_mix(aux["head"], personal_new)
+                    personal_new = jax.lax.cond(
+                        r % 10 == 0, lambda: mixed, lambda: personal_new)
+                new_state["personal"] = jax.tree.map(
+                    lambda a, n: a.at[idx].set(n),
+                    state["personal"], personal_new)
+        diag = {k: v for k, v in diag.items()
+                if getattr(v, "ndim", None) == 0}
+        return params, new_state, diag
 
-        # write back per-client state
-        if fl.method == "scaffold":
-            self.c_u = jax.tree.map(lambda a, n: a.at[idx].set(n),
-                                    self.c_u, new_cstates["c_u"])
-            self.c_global = tree_axpy(fl.cohort / fl.n_clients,
-                                      diag.pop("c_delta"), self.c_global)
-        elif fl.method == "fedncv":
-            self.alphas = self.alphas.at[idx].set(diag.pop("alpha"))
-        elif fl.method in PERSONAL_METHODS:
-            personal_new = new_cstates["personal"]
-            if fl.method == "pfedsim" and self.round_idx % 10 == 0:
-                mixed = M.pfedsim_server_mix(diag.pop("heads"), personal_new)
-                personal_new = mixed
-            self.personal = jax.tree.map(lambda a, n: a.at[idx].set(n),
-                                         self.personal, personal_new)
-        return {k: v for k, v in diag.items()
-                if isinstance(v, (int, float)) or getattr(v, "ndim", 1) == 0}
+    def _scan_rounds(self, params, state, keys, rs):
+        def body(carry, kr):
+            p, st = carry
+            p, st, diag = self._round_core(p, st, kr[0], kr[1])
+            return (p, st), diag
+        # XLA:CPU compiles while-loop bodies without the fusion/parallelism
+        # the straight-line version gets (~3-4x slower per round here), so
+        # unroll the scan on CPU; TPU keeps the rolled loop (cheap compile).
+        n = keys.shape[0]
+        unroll = max(1, min(n, 16)) if jax.default_backend() == "cpu" else 1
+        (params, state), diags = jax.lax.scan(body, (params, state),
+                                              (keys, rs), unroll=unroll)
+        return params, state, diags
 
     # ------------------------------------------------------------------
-    def evaluate(self, eval_data, personalize_steps=0):
-        """Mean per-client accuracy; personalize_steps>0 == "test after"."""
+    def run_round(self, key=None):
+        if key is None:
+            key = jax.random.fold_in(self.base_key, self.round_idx)
+        self.round_idx += 1
+        params, state, diag = self._round_jit(
+            self.params, self._get_state(), key, jnp.int32(self.round_idx))
+        self.params = params
+        self._set_state(state)
+        return {k: float(v) for k, v in diag.items()}
+
+    def run_rounds(self, n, key=None):
+        """Scan n rounds in one dispatch (donated buffers, no host sync).
+
+        Equivalent to n `run_round()` calls: same per-round keys, same
+        trajectory.  Returns stacked per-round scalar diagnostics.
+        """
+        if n <= 0:
+            return {}
+        start = self.round_idx
+        if key is None:
+            keys = jax.vmap(lambda i: jax.random.fold_in(self.base_key, i))(
+                start + jnp.arange(n))
+        else:
+            keys = jax.random.split(key, n)
+        rs = start + jnp.arange(1, n + 1, dtype=jnp.int32)
+        params, state, diags = self._scan_jit(
+            self.params, self._get_state(), keys, rs)
+        self.round_idx += n
+        self.params = params
+        self._set_state(state)
+        return {k: np.asarray(v) for k, v in diags.items()}
+
+    # ------------------------------------------------------------------
+    # evaluation: one padded, vmapped pass over all clients
+    # ------------------------------------------------------------------
+    def _eval_core(self, params, personal, feats, labels_eval, sizes, *,
+                   personalize_steps: int):
         task, fl = self.task, self.fl
-        accs = []
-        for u in range(fl.n_clients):
-            pool = np.asarray(eval_data["client_idx"][u])
-            pool = pool[pool >= 0]
-            if len(pool) == 0:
-                continue
-            batch = {k: jnp.asarray(np.asarray(v)[pool])
-                     for k, v in eval_data.items()
-                     if k not in ("client_idx", "client_sizes")}
-            params = self.params
-            if fl.method in PERSONAL_METHODS:
-                personal = jax.tree.map(lambda x: x[u], self.personal)
-                params = M._split_update(task, params, personal)
-            if personalize_steps:
-                for _ in range(personalize_steps):
-                    g = jax.grad(task.loss)(params, batch)
-                    params = jax.tree.map(
-                        lambda p, gi: p - fl.mc.local_lr * gi, params, g)
-            accs.append(float(task.accuracy(params, batch)))
-        return float(np.mean(accs))
+        n_max = labels_eval.shape[1]
+
+        def per_client(pers_u, feats_u, lab_eval, size):
+            p = M._split_update(task, params, pers_u) \
+                if pers_u is not None else params
+            # personalization runs on the cyclically padded batch: each real
+            # sample appears floor/ceil(n_max/size) times, so sample weights
+            # differ by at most one repetition (exact when size | n_max)
+            for _ in range(personalize_steps):
+                g = jax.grad(task.loss)(p, feats_u)
+                p = jax.tree.map(lambda pi, gi: pi - fl.mc.local_lr * gi,
+                                 p, g)
+            # padded positions carry label -1 (argmax never matches), so the
+            # padded-mean accuracy rescales exactly to the true shard mean.
+            acc = task.accuracy(p, dict(feats_u, labels=lab_eval))
+            return acc * n_max / jnp.maximum(size, 1).astype(jnp.float32)
+
+        if personal is not None:
+            accs = jax.vmap(per_client)(personal, feats, labels_eval, sizes)
+        else:
+            accs = jax.vmap(lambda f, le, s: per_client(None, f, le, s))(
+                feats, labels_eval, sizes)
+        valid = (sizes > 0).astype(jnp.float32)
+        return jnp.sum(accs * valid), jnp.sum(valid)
+
+    def evaluate(self, eval_data, personalize_steps=0, chunk: int = 32):
+        """Mean per-client accuracy; personalize_steps>0 == "test after".
+
+        Clients are evaluated in vmapped chunks (instead of one trace per
+        client): each client's shard is cyclically padded to the global n_max
+        (repeated real samples for the personalization steps), and padded
+        slots are excluded from the accuracy by the -1-label mask + size
+        rescale.  `chunk` bounds the gathered working set to
+        (chunk, n_max, ...) so large-M simulations do not materialize an
+        M-times copy of the eval set.
+        """
+        fl = self.fl
+        pool = jnp.asarray(eval_data["client_idx"])          # (M, n_max)
+        m, n_max = pool.shape
+        sizes_all = jnp.asarray(eval_data["client_sizes"]).astype(jnp.int32)
+        data = {k: jnp.asarray(v) for k, v in eval_data.items()
+                if k not in ("client_idx", "client_sizes")}
+        acc_sum, n_valid = 0.0, 0.0
+        for lo in range(0, m, chunk):
+            hi = min(lo + chunk, m)
+            sizes = sizes_all[lo:hi]
+            pos = jnp.arange(n_max)[None, :] % jnp.maximum(sizes[:, None], 1)
+            sel = jnp.take_along_axis(jnp.maximum(pool[lo:hi], 0), pos,
+                                      axis=1)
+            feats = {k: jnp.take(v, sel, axis=0) for k, v in data.items()}
+            labels_eval = jnp.where(
+                jnp.arange(n_max)[None, :] < sizes[:, None],
+                feats["labels"], -1)
+            personal = jax.tree.map(lambda x: x[lo:hi], self.personal) \
+                if fl.method in PERSONAL_METHODS else None
+            s, v = self._eval_jit(self.params, personal, feats, labels_eval,
+                                  sizes, personalize_steps=personalize_steps)
+            acc_sum += float(s)
+            n_valid += float(v)
+        return acc_sum / max(n_valid, 1.0)

@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+import jax
+
+
+def default_interpret() -> bool:
+    """Shared interpret-mode default for every Pallas kernel in this package:
+    compile a real Mosaic kernel on TPU, run the interpreter elsewhere."""
+    return jax.default_backend() != "tpu"

@@ -68,12 +68,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                               "block_q", "block_k",
                                               "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
-                    block_q=128, block_k=128, interpret=True):
+                    block_q=128, block_k=128, interpret=None):
     """q: (B, S, H, hd); k/v: (B, S, KV, hd); H % KV == 0.
 
     Returns (B, S, H, hd). Forward only (training uses the pure-jnp blocked
     path for AD; this kernel is the serving/prefill fast path).
     """
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     b, s, h, hd = q.shape
     s_kv, kv = k.shape[1], k.shape[2]
     rep = h // kv

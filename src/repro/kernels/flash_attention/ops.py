@@ -8,7 +8,7 @@ from repro.kernels.flash_attention.flash_attention import flash_attention
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None,
-              interpret=True, block_q=128, block_k=128):
+              interpret=None, block_q=128, block_k=128):
     hd = q.shape[-1]
     pad = (-hd) % 128
     if pad:

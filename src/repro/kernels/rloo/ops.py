@@ -1,8 +1,9 @@
 """Jit'd public wrapper: RLOO over a gradient *pytree* using the fused kernel.
 
-Flattens the pytree into (K, N) chunks, runs the Pallas kernel, and
-reassembles ClientCVStats — drop-in for the reduced path in
-core/control_variates.py on TPU.
+Kept for API compatibility; the production FL path now uses
+`core.control_variates.client_pass_flat`, which ravels the whole pytree into
+ONE (K, N) buffer (utils.tree_math.ravel_stack) instead of one kernel launch
+per leaf.
 """
 from __future__ import annotations
 
@@ -14,10 +15,11 @@ from repro.kernels.rloo.rloo import rloo_combine
 from repro.utils.tree_math import tree_norm_sq
 
 
-def client_stats_fused(g_stack_tree, alpha, *, interpret: bool = True):
+def client_stats_fused(g_stack_tree, alpha, *, interpret: bool | None = None):
     """g_stack_tree: pytree with leaves (K, ...).
 
     Returns (ClientCVStats, gprime pytree). One HBM pass per leaf.
+    interpret=None auto-detects the backend.
     """
     leaves, treedef = jax.tree.flatten(g_stack_tree)
     k = leaves[0].shape[0]

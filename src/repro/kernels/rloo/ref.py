@@ -1,4 +1,9 @@
-"""Pure-jnp oracle for the rloo_combine kernel."""
+"""Pure-jnp oracles for the fused RLOO / aggregation kernels.
+
+These are also the production CPU fallbacks: `core.control_variates`
+dispatches to them when the backend is not a TPU, so they are written as
+single fused jit bodies over the flat (K, N) substrate.
+"""
 import jax.numpy as jnp
 
 
@@ -10,3 +15,19 @@ def rloo_combine_ref(g_stack, alpha):
     gprime = g - alpha * c
     sumsq = jnp.sum(g * g)
     return mean, gprime, sumsq
+
+
+def ncv_aggregate_ref(g_flat, n_samples, beta=1.0):
+    """Flat-substrate oracle of `networked_aggregate_stacked` (Eq. 10-12).
+
+    g_flat: (M, N); returns (agg (N,), ||agg||^2).
+    """
+    g = g_flat.astype(jnp.float32)
+    n_samples = jnp.asarray(n_samples, jnp.float32)
+    n = jnp.sum(n_samples)
+    p = n_samples / n
+    gbar_w = jnp.sum(p[:, None] * g, axis=0, keepdims=True)
+    c = (n * gbar_w - n_samples[:, None] * g) / (n - n_samples)[:, None]
+    gprime = g - beta * c
+    agg = jnp.sum(p[:, None] * gprime, axis=0)
+    return agg, jnp.sum(agg * agg)

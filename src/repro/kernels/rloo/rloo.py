@@ -1,8 +1,9 @@
-"""Pallas TPU kernel: fused RLOO reshape + reduction over K microbatch
-gradients (the FedNCV client-side hot spot).
+"""Pallas TPU kernels for the two FedNCV hot spots.
 
-The op is memory-bound (arithmetic intensity < 1 flop/byte): the K gradient
-copies are streamed HBM -> VMEM once, and in that single pass we produce
+`rloo_combine` — fused RLOO reshape + reduction over K microbatch gradients
+(the client-side pass).  The op is memory-bound (arithmetic intensity < 1
+flop/byte): the K gradient copies are streamed HBM -> VMEM once, and in that
+single pass we produce
 
     gbar    = mean_i g_i                      (the client message, pre-scale)
     gprime  = g_i - alpha * (K gbar - g_i)/(K-1)   (reshaped units, optional)
@@ -12,10 +13,28 @@ A naive composition (mean, then baseline, then reshape, then norms) reads the
 (K, N) stack four times; the fused kernel reads it once and keeps the
 working set in VMEM.
 
+`ncv_aggregate` — fused server-side networked aggregation (paper Eq. 10-12)
+over the (cohort, N) stack of uploaded client gradients.  The whole estimator
+
+    g = sum_u p_u (g_u - beta * c_{V\\u}),
+    c_{V\\u} = (n * gbar_w - n_u g_u) / (n - n_u)
+
+collapses to a single weighted sum  g = sum_u w_u g_u  with per-client
+scalar coefficients
+
+    w_u = p_u * (1 - beta * sum_v p_v n/(n - n_v)) + beta * p_u n_u/(n - n_u)
+
+so the kernel is one read of the stack: a (cohort,) x (cohort, block_n)
+contraction per tile, plus a running ||g||^2 partial for diagnostics.
+
 Tiling: grid over the flattened gradient dimension N in `block_n` columns;
 each program instance holds a (K, block_n) tile in VMEM.  K is small (<= 32)
 and block_n = 512 f32 lanes keeps the tile well inside the ~16 MB VMEM
 budget while filling the 8x128 VPU registers (block_n multiple of 128).
+
+`interpret` defaults to `jax.default_backend() != "tpu"` so the same call
+site compiles to a real Mosaic kernel on TPU and falls back to the
+op-by-op interpreter on CPU.
 """
 from __future__ import annotations
 
@@ -24,6 +43,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
 
 
 def _rloo_kernel(g_ref, alpha_ref, mean_ref, gp_ref, ssq_ref, *, k: int):
@@ -39,21 +60,26 @@ def _rloo_kernel(g_ref, alpha_ref, mean_ref, gp_ref, ssq_ref, *, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def rloo_combine(g_stack, alpha, *, block_n: int = 512, interpret: bool = True):
+def rloo_combine(g_stack, alpha, *, block_n: int = 512,
+                 interpret: bool | None = None):
     """g_stack: (K, N) f32; alpha: scalar f32.
 
     Returns (mean (N,), gprime (K, N), sumsq scalar).
-    On CPU this always runs in interpret mode; on TPU pass interpret=False.
+    interpret=None auto-detects the backend (Mosaic on TPU, interpreter
+    elsewhere).  Non-divisible N is zero-padded once up front and the
+    outputs sliced once at the end (zero columns contribute nothing to the
+    sumsq reduction).
     """
+    if interpret is None:
+        interpret = default_interpret()
     k, n = g_stack.shape
     assert k >= 2, "RLOO needs K >= 2"
-    if n % block_n != 0:
-        pad = block_n - n % block_n
-        g_stack = jnp.pad(g_stack, ((0, 0), (0, pad)))
-        mean, gp, ssq = rloo_combine(g_stack, alpha, block_n=block_n,
-                                     interpret=interpret)
-        return mean[:n], gp[:, :n], ssq
-    grid = (n // block_n,)
+    pad = (-n) % block_n
+    g_padded = g_stack.astype(jnp.float32)
+    if pad:
+        g_padded = jnp.pad(g_padded, ((0, 0), (0, pad)))
+    n_padded = n + pad
+    grid = (n_padded // block_n,)
     alpha_arr = jnp.reshape(alpha.astype(jnp.float32), (1,))
     mean, gp, ssq_parts = pl.pallas_call(
         functools.partial(_rloo_kernel, k=k),
@@ -68,10 +94,76 @@ def rloo_combine(g_stack, alpha, *, block_n: int = 512, interpret: bool = True):
             pl.BlockSpec((1,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_padded,), jnp.float32),
+            jax.ShapeDtypeStruct((k, n_padded), jnp.float32),
             jax.ShapeDtypeStruct((grid[0],), jnp.float32),
         ],
         interpret=interpret,
-    )(g_stack.astype(jnp.float32), alpha_arr)
+    )(g_padded, alpha_arr)
+    if pad:
+        mean, gp = mean[:n], gp[:, :n]
     return mean, gp, jnp.sum(ssq_parts)
+
+
+# ---------------------------------------------------------------------------
+# Server-side fused aggregation (Eq. 10-12 in one read)
+# ---------------------------------------------------------------------------
+
+def _ncv_agg_kernel(g_ref, w_ref, agg_ref, nrm_ref):
+    g = g_ref[...].astype(jnp.float32)            # (M, block_n)
+    w = w_ref[...]                                # (M,)
+    agg = jnp.sum(w[:, None] * g, axis=0)         # (block_n,)
+    agg_ref[...] = agg
+    nrm_ref[0] = jnp.sum(agg * agg)               # per-block ||agg||^2 partial
+
+
+def ncv_coefficients(n_samples, beta):
+    """Per-client scalar weights w_u of the collapsed Eq. 10-12 estimator."""
+    n_samples = jnp.asarray(n_samples, jnp.float32)
+    n = jnp.sum(n_samples)
+    p = n_samples / n
+    beta = jnp.asarray(beta, jnp.float32)
+    a0 = 1.0 - beta * jnp.sum(p * n / (n - n_samples))
+    return a0 * p + beta * p * n_samples / (n - n_samples)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def ncv_aggregate(g_flat, n_samples, beta=1.0, *, block_n: int = 512,
+                  interpret: bool | None = None):
+    """Fused FedNCV server reduction over the flat cohort stack.
+
+    g_flat: (M, N) f32 — uploaded client gradients, flat substrate.
+    n_samples: (M,) per-client sample counts.  Returns (agg (N,),
+    agg_norm_sq scalar) — identical math to `networked_aggregate_stacked`
+    but one HBM read of the stack instead of four per-leaf passes.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m, n = g_flat.shape
+    w = ncv_coefficients(n_samples, beta)
+    pad = (-n) % block_n
+    g_padded = g_flat.astype(jnp.float32)
+    if pad:
+        g_padded = jnp.pad(g_padded, ((0, 0), (0, pad)))
+    n_padded = n + pad
+    grid = (n_padded // block_n,)
+    agg, nrm_parts = pl.pallas_call(
+        _ncv_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_padded,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g_padded, w)
+    if pad:
+        agg = agg[:n]
+    return agg, jnp.sum(nrm_parts)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.kernels.selective_scan.selective_scan import selective_scan
 
 
-def scan_states(a, b, *, chunk=128, interpret=True):
+def scan_states(a, b, *, chunk=128, interpret=None):
     """a, b: (S, ...) broadcast-compatible; returns h with b's shape."""
     b_shape = b.shape
     s = b_shape[0]

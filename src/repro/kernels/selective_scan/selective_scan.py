@@ -47,11 +47,14 @@ def _scan_kernel(a_ref, b_ref, h_ref, carry_ref, *, rows):
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_c", "interpret"))
 def selective_scan(a, b, *, chunk: int = 128, block_c: int = 256,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     """a, b: (S, C) f32 -> h: (S, C) with h_t = a_t h_{t-1} + b_t.
 
     S must be divisible by `chunk`; C is padded to `block_c` internally.
     """
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     s, c = a.shape
     assert s % chunk == 0, (s, chunk)
     if c % block_c != 0:

@@ -3,8 +3,17 @@
 All gradient-level algebra in FedNCV (leave-one-out baselines, scalar
 statistics, server aggregation) is expressed over parameter pytrees; these
 helpers keep that algebra readable and jit-friendly.
+
+The flat-buffer substrate (`ravel_stack` / `unravel_stack` / `unravel`)
+turns a stacked gradient pytree — leaves of shape (K, ...) — into one
+contiguous (K, N) f32 buffer so the fused RLOO / aggregation kernels see a
+single array instead of a per-leaf loop.  Leaf offsets and the treedef are
+resolved once per (structure, shapes) pair and cached.
 """
 from __future__ import annotations
+
+import math
+import typing as tp
 
 import jax
 import jax.numpy as jnp
@@ -67,3 +76,81 @@ def tree_size(tree):
 
 def tree_bytes(tree):
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer substrate: stacked pytree <-> one contiguous (K, N) buffer
+# ---------------------------------------------------------------------------
+
+class FlatSpec(tp.NamedTuple):
+    """Recipe to reassemble a pytree from a flat vector.
+
+    treedef : the pytree structure.
+    shapes  : per-leaf *trailing* shapes (leading stack axis stripped).
+    offsets : start offset of each leaf in the flat dimension.
+    sizes   : per-leaf flat sizes (prod of trailing shape).
+    n       : total flat dimension N = sum(sizes).
+    """
+    treedef: tp.Any
+    shapes: tuple
+    offsets: tuple
+    sizes: tuple
+    n: int
+
+
+_SPEC_CACHE: dict = {}
+
+
+def flat_spec(tree, stacked: bool = True) -> FlatSpec:
+    """FlatSpec for `tree` (leaves (K, ...) if stacked, else (...)).
+
+    Cached on (treedef, leaf shapes) so repeated calls inside a training
+    loop do no python work beyond a dict lookup.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    drop = 1 if stacked else 0
+    shapes = tuple(tuple(x.shape[drop:]) for x in leaves)
+    key = (treedef, shapes)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        sizes = tuple(int(math.prod(s)) for s in shapes)
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        spec = FlatSpec(treedef, shapes, tuple(offsets), sizes, off)
+        _SPEC_CACHE[key] = spec
+    return spec
+
+
+def ravel_stack(tree):
+    """Stacked pytree (leaves (K, ...)) -> ((K, N) f32 buffer, FlatSpec)."""
+    spec = flat_spec(tree, stacked=True)
+    leaves = jax.tree.leaves(tree)
+    k = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [x.astype(jnp.float32).reshape(k, -1) for x in leaves], axis=1)
+    return flat, spec
+
+
+def ravel(tree):
+    """Unstacked pytree -> ((N,) f32 vector, FlatSpec)."""
+    spec = flat_spec(tree, stacked=False)
+    leaves = jax.tree.leaves(tree)
+    vec = jnp.concatenate(
+        [x.astype(jnp.float32).reshape(-1) for x in leaves])
+    return vec, spec
+
+
+def unravel(vec, spec: FlatSpec):
+    """(N,) vector -> pytree with the spec's trailing leaf shapes."""
+    leaves = [
+        jax.lax.dynamic_slice_in_dim(vec, off, sz, axis=-1).reshape(
+            vec.shape[:-1] + shp)
+        for off, sz, shp in zip(spec.offsets, spec.sizes, spec.shapes)]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unravel_stack(flat, spec: FlatSpec):
+    """(K, N) buffer -> stacked pytree with leaves (K, ...)."""
+    return unravel(flat, spec)

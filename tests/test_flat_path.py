@@ -1,0 +1,193 @@
+"""Property tests for the flat-buffer FedNCV hot path.
+
+The fused substrate (`ravel_stack` + `rloo_combine`/`client_pass_flat` +
+`ncv_aggregate`) must reproduce the naive per-leaf oracles in
+`core.control_variates` on random pytrees with ragged leaf shapes,
+non-divisible flat dimension (kernel padding path), and small K.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import control_variates as cv
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.kernels.rloo.ref import ncv_aggregate_ref, rloo_combine_ref
+from repro.kernels.rloo.rloo import ncv_aggregate, rloo_combine
+from repro.utils.tree_math import (
+    flat_spec, ravel_stack, tree_stack, unravel, unravel_stack,
+)
+
+# ragged leaf-shape menu: mixes matrices, vectors, scalars-per-unit, and a
+# deliberately non-128-aligned size so the kernel padding path is exercised
+SHAPE_SETS = [
+    ((3, 4), (7,)),
+    ((5, 5, 2), (1,), (13,)),
+    ((129,), (2, 3)),
+    ((257,),),
+]
+
+
+def _rand_stack(rng, k, shapes):
+    return {f"w{j}": jnp.asarray(rng.standard_normal((k,) + s), jnp.float32)
+            for j, s in enumerate(shapes)}
+
+
+# ----------------------------- substrate ------------------------------------
+
+@given(k=st.integers(2, 8), si=st.integers(0, len(SHAPE_SETS) - 1),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_ravel_unravel_roundtrip(k, si, seed):
+    rng = np.random.default_rng(seed)
+    tree = _rand_stack(rng, k, SHAPE_SETS[si])
+    flat, spec = ravel_stack(tree)
+    assert flat.shape[0] == k
+    assert flat.shape[1] == spec.n == sum(spec.sizes)
+    back = unravel_stack(flat, spec)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), tree, back)
+    vec = unravel(flat[0], spec)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b[0]),
+                 vec, tree)
+
+
+def test_flat_spec_cached():
+    rng = np.random.default_rng(0)
+    t1 = _rand_stack(rng, 4, SHAPE_SETS[0])
+    t2 = _rand_stack(rng, 4, SHAPE_SETS[0])
+    assert flat_spec(t1) is flat_spec(t2)          # same structure -> cached
+
+
+# ----------------------------- fused client pass ----------------------------
+
+@given(k=st.sampled_from([2, 3, 8]), si=st.integers(0, len(SHAPE_SETS) - 1),
+       alpha=st.floats(-0.5, 1.5), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_client_pass_flat_matches_oracles(k, si, alpha, seed):
+    """Message == (1-a) gbar, S1/S2 == naive scalars, g' == rloo_reshape."""
+    rng = np.random.default_rng(seed)
+    g = _rand_stack(rng, k, SHAPE_SETS[si])
+    msg, stats, gp = cv.client_pass_flat(g, alpha, want_reshaped=True)
+
+    stats_ref = cv.client_stats_from_stack(g)
+    msg_ref = cv.client_message(stats_ref, alpha)
+    gp_ref = cv.rloo_reshape(g, alpha)
+
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5,
+                                                         atol=1e-5),
+                 msg, msg_ref)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5,
+                                                         atol=1e-5),
+                 gp, gp_ref)
+    np.testing.assert_allclose(float(stats.mean_norm_sq),
+                               float(stats_ref.mean_norm_sq),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(stats.sum_norm_sq),
+                               float(stats_ref.sum_norm_sq),
+                               rtol=1e-5, atol=1e-6)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5,
+                                                         atol=1e-5),
+                 stats.mean_grad, stats_ref.mean_grad)
+
+
+@pytest.mark.parametrize("n", [1, 127, 512, 513, 2049])
+def test_rloo_combine_padding_path(n):
+    """Pad-once/slice-once kernel path == oracle for any (non-divisible) N."""
+    key = jax.random.PRNGKey(n)
+    g = jax.random.normal(key, (4, n), jnp.float32)
+    a = jnp.float32(0.7)
+    m, gp, s = rloo_combine(g, a)
+    mr, gpr, sr = rloo_combine_ref(g, a)
+    np.testing.assert_allclose(m, mr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gp, gpr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(s), float(sr), rtol=1e-4)
+
+
+def test_client_pass_flat_under_vmap():
+    """The cohort dimension of the simulator vmaps over the flat pass."""
+    key = jax.random.PRNGKey(0)
+    g = {"a": jax.random.normal(key, (3, 4, 5, 3)),
+         "b": jax.random.normal(key, (3, 4, 11))}      # (cohort=3, K=4, ...)
+    alphas = jnp.asarray([0.1, 0.5, 0.9])
+    msgs, stats, _ = jax.vmap(cv.client_pass_flat)(g, alphas)
+    for u in range(3):
+        g_u = jax.tree.map(lambda x: x[u], g)
+        ref = cv.client_message(cv.client_stats_from_stack(g_u), alphas[u])
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a[u], b,
+                                                             rtol=1e-5,
+                                                             atol=1e-5),
+                     msgs, ref)
+
+
+# ----------------------------- fused server aggregate -----------------------
+
+@given(m=st.sampled_from([2, 3, 8]), beta=st.floats(0.0, 1.0),
+       si=st.integers(0, len(SHAPE_SETS) - 1), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_networked_aggregate_flat_matches_naive(m, beta, si, seed):
+    """Flat fused server step == listwise Eq. 10-12 oracle on ragged trees."""
+    rng = np.random.default_rng(seed)
+    grads = [
+        {f"w{j}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+         for j, s in enumerate(SHAPE_SETS[si])} for _ in range(m)]
+    n_u = jnp.asarray(rng.integers(1, 40, size=m), jnp.float32)
+
+    agg, nrm = cv.networked_aggregate_flat(tree_stack(grads), n_u, beta=beta)
+    agg_ref = cv.networked_aggregate(grads, n_u, beta=beta)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4,
+                                                         atol=1e-5),
+                 agg, agg_ref)
+    nrm_ref = sum(float(jnp.sum(jnp.square(x)))
+                  for x in jax.tree.leaves(agg_ref))
+    np.testing.assert_allclose(float(nrm), nrm_ref, rtol=1e-4, atol=1e-6)
+
+
+@given(m=st.integers(2, 8), beta=st.floats(0.0, 1.0),
+       n=st.sampled_from([1, 100, 513]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_ncv_aggregate_kernel_matches_ref(m, beta, n, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    n_u = jnp.asarray(rng.integers(1, 30, size=m), jnp.float32)
+    agg, nrm = ncv_aggregate(g, n_u, beta)
+    agg_r, nrm_r = ncv_aggregate_ref(g, n_u, beta)
+    np.testing.assert_allclose(agg, agg_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(nrm), float(nrm_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+# ----------------------------- round-loop integration -----------------------
+
+def _tiny_sim(method="fedncv", seed=0):
+    from repro.data import federated_splits
+    from repro.models import lenet
+    spec, train, test = federated_splits("mnist", n_clients=6, alpha=0.5,
+                                         seed=0, scale=0.1)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    fl = FLConfig(method=method, n_clients=6, cohort=3, k_micro=3,
+                  micro_batch=4, server_lr=0.5,
+                  mc=MethodConfig(name=method, local_epochs=1))
+    return Simulator(task, params, train, fl, seed=seed), test
+
+
+@pytest.mark.slow
+def test_run_rounds_matches_run_round():
+    """The lax.scan driver follows the per-round trajectory exactly."""
+    sa, _ = _tiny_sim()
+    sb, _ = _tiny_sim()
+    for _ in range(4):
+        sa.run_round()
+    sb.run_rounds(4)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6,
+                                                         atol=1e-7),
+                 sa.params, sb.params)
+    np.testing.assert_allclose(np.asarray(sa.alphas), np.asarray(sb.alphas),
+                               rtol=1e-6, atol=1e-7)
+    assert sa.round_idx == sb.round_idx == 4
