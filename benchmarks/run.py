@@ -24,6 +24,7 @@ BENCHES = [
     ("fl_table1_fig1", "benchmarks.bench_fl"),     # Table 1 + Figure 1
     ("scalability_fig2", "benchmarks.bench_scalability"),  # Figure 2
     ("ablation", "benchmarks.bench_ablation"),     # alpha / K sweeps
+    ("comm", "benchmarks.bench_comm"),             # codec accuracy-vs-bytes
 ]
 
 
@@ -74,10 +75,37 @@ def _emit_json(name: str, ok: bool, wall_s: float, stdout_text: str):
     print(f"bench:{name},json,{path}", flush=True)
 
 
+def smoke() -> None:
+    """Assert every committed BENCH_<name>.json still parses (CI gate)."""
+    import glob
+    failures = 0
+    paths = sorted(glob.glob(os.path.join(os.getcwd(), "BENCH_*.json")))
+    if not paths:
+        print("smoke: no BENCH_*.json found", flush=True)
+        sys.exit(1)
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            for field in ("bench", "ok", "wall_time_s", "rows"):
+                assert field in payload, f"missing field '{field}'"
+            assert isinstance(payload["rows"], list)
+            print(f"smoke:{os.path.basename(path)},ok,"
+                  f"{len(payload['rows'])} rows", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"smoke:{os.path.basename(path)},FAILED,{e}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="only validate that existing BENCH_*.json parse")
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
     failures = 0
     for name, module in BENCHES:
         if args.only and args.only != name:

@@ -4,13 +4,20 @@
 
 Trains LeNet-5 federatedly for 15 rounds with each method and prints the
 pre-/post-personalization accuracy — the paper's Table-1 protocol in
-miniature.
+miniature.  The 15 rounds run as ONE device dispatch (`sim.run_rounds`,
+the lax.scan driver from the flat-buffer hot path), and the per-round
+`bytes_up` diagnostic shows what each client->server wire format costs:
+the compressed codecs (repro.comm) cut uploaded bytes 2-5x at matching
+accuracy.
 """
 import jax
+import numpy as np
 
 from repro.data import federated_splits
 from repro.fed import FLConfig, MethodConfig, Simulator, Task
 from repro.models import lenet
+
+ROUNDS = 15
 
 
 def main():
@@ -23,23 +30,27 @@ def main():
     task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
                 accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
                 head_keys=lenet.HEAD_KEYS)
-    for method in ("fedavg", "fedncv"):
+    runs = [("fedavg", "identity"), ("fedncv", "identity"),
+            ("fedncv", "int8"), ("fedncv", "topk")]
+    for method, codec in runs:
         params = lenet.init(cfg, jax.random.PRNGKey(0))
+        opts = dict(ratio=0.16) if codec == "topk" else {}
         fl = FLConfig(method=method, n_clients=12, cohort=6, k_micro=4,
-                      micro_batch=16, server_lr=0.5,
+                      micro_batch=16, server_lr=0.5, codec=codec,
+                      codec_opts=opts,
                       mc=MethodConfig(name=method, local_lr=0.05,
                                       local_epochs=2, ncv_alpha0=0.3,
                                       ncv_alpha_lr=1e-5, ncv_beta=0.0))
         sim = Simulator(task, params, train, fl, seed=0)
-        for r in range(15):
-            sim.run_round()
+        diags = sim.run_rounds(ROUNDS)        # one dispatch for all rounds
         pre = sim.evaluate(test)
         post = sim.evaluate(test, personalize_steps=3)
+        kb_up = float(diags["bytes_up"][-1]) / 1024.0
         extra = ""
         if method == "fedncv":
-            import numpy as np
             extra = f"  mean alpha_u={float(np.mean(sim.alphas)):.3f}"
-        print(f"{method:8s} pre-test={pre:.4f}  post-test={post:.4f}{extra}")
+        print(f"{method:8s} codec={codec:8s} pre-test={pre:.4f}  "
+              f"post-test={post:.4f}  up={kb_up:8.1f} KiB/round{extra}")
 
 
 if __name__ == "__main__":

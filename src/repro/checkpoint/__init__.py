@@ -1,3 +1,4 @@
 from repro.checkpoint.ckpt import (  # noqa: F401
-    latest_step, restore, restore_step, save, save_step,
+    latest_step, restore, restore_sim, restore_step, save, save_sim,
+    save_step,
 )

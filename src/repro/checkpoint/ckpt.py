@@ -83,3 +83,31 @@ def restore_step(directory: str, like, step: int | None = None):
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
     return restore(os.path.join(directory, f"{step}.ckpt"), like)
+
+
+# ---------------------------------------------------------------------------
+# FL simulator checkpointing: params + ALL per-client method/comm state
+# ---------------------------------------------------------------------------
+
+def save_sim(directory: str, sim, meta=None, keep: int = 3):
+    """Checkpoint a `fed.Simulator` at its current round.
+
+    Persists the params together with the full per-client state dict —
+    alphas, SCAFFOLD c_u, personal heads, FedNCV+ h/h_sum, and the comm
+    codec's error-feedback residuals (`ef`) — so a restored run continues
+    the exact trajectory, compression state included.
+    """
+    tree = dict(params=sim.params, state=sim._get_state())
+    save_step(directory, sim.round_idx, tree,
+              dict(meta or {}, round_idx=sim.round_idx), keep=keep)
+
+
+def restore_sim(directory: str, sim, step: int | None = None):
+    """Restore a `save_sim` checkpoint into `sim` (must be configured with
+    the same FLConfig, codec included).  Returns the checkpoint meta."""
+    like = dict(params=sim.params, state=sim._get_state())
+    tree, meta = restore_step(directory, like, step)
+    sim.params = tree["params"]
+    sim._set_state(tree["state"])
+    sim.round_idx = int(meta.get("round_idx", sim.round_idx))
+    return meta

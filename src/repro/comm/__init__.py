@@ -1,0 +1,50 @@
+"""repro.comm — compressed client->server wire formats (DESIGN.md §5).
+
+Pluggable codecs over the flat gradient substrate plus the server-side
+entry points that consume a *stacked* wire (every leaf carrying a leading
+cohort dimension, as produced by vmapping `encode` over clients):
+
+    aggregate_wire : wire -> (FedNCV Eq. 10-12 aggregate, ||agg||^2),
+                     using the codec's fused dequantize-aggregate kernel
+                     when it has one (int8 never materializes f32 uploads).
+    decode_stack   : wire -> dense stacked gradient pytree, for servers
+                     that need per-client gradients (e.g. FedNCV+'s h_u).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.comm.codecs import (  # noqa: F401
+    CODECS, BF16Codec, Codec, Int8Codec, TopKCodec, compression_ratio,
+    get_codec,
+)
+from repro.utils.tree_math import FlatSpec, unravel
+
+
+def aggregate_wire(codec: Codec, wire, n_samples, beta=1.0, *,
+                   use_pallas: bool | None = None):
+    """Fused FedNCV server reduction straight off the compressed cohort stack.
+
+    wire: stacked wire dict (leaves (cohort, ...)).  Returns
+    (agg (N,) f32, ||agg||^2).  Codecs with a fused kernel (int8) aggregate
+    without decoding; others decode per client (one vmapped map) and reuse
+    the `ncv_aggregate` kernel over the dense (cohort, N) stack.
+    """
+    if use_pallas is None:
+        from repro.kernels import default_interpret
+        use_pallas = not default_interpret()
+    fused = codec.fused_aggregate(wire, n_samples, beta, use_pallas=use_pallas)
+    if fused is not None:
+        return fused
+    flat = jax.vmap(codec.decode)(wire)            # (cohort, N) f32
+    if use_pallas:
+        from repro.kernels.rloo.rloo import ncv_aggregate
+        return ncv_aggregate(flat, n_samples, beta, interpret=False)
+    from repro.kernels.rloo.ref import ncv_aggregate_ref
+    return ncv_aggregate_ref(flat, n_samples, beta)
+
+
+def decode_stack(codec: Codec, wire, spec: FlatSpec):
+    """Stacked wire -> dense stacked gradient pytree (leaves (cohort, ...))."""
+    flat = jax.vmap(codec.decode)(wire)            # (cohort, N)
+    return unravel(flat, spec)

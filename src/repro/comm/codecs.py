@@ -1,0 +1,189 @@
+"""Client->server wire codecs over the flat gradient substrate.
+
+Every client upload in this repo is ultimately one contiguous (N,) f32
+vector (utils.tree_math.ravel of the gradient pytree), so a codec is a pair
+of pure jnp maps over that vector:
+
+    encode(vec, state, key) -> (wire dict, new per-client state | None)
+    decode(wire)            -> (N,) f32
+
+`wire` is a dict of arrays only (no python metadata), so a codec composes
+with vmap over the cohort, lax.scan over rounds, and shard_map over client
+shards unchanged.  The N (and any padding derived from it) is bound at
+construction, which keeps every shape static under jit.
+
+Codecs (DESIGN.md §5):
+
+* ``identity`` — f32 passthrough (4 bytes/param), the PR-1 hot path.
+* ``bf16``     — round-to-nearest-even bfloat16 cast (2 bytes/param).
+* ``int8``     — chunked-scale int8 with *stochastic* rounding
+  (~1 byte/param).  The vector is split into `chunk`-sized blocks, each
+  block carries one f32 scale = max|x|/127, and quantization uses
+  q = floor(x/scale + u), u ~ U[0,1).  E[q * scale] = x exactly, so the
+  codec is unbiased and the Theorem-level unbiasedness of the NCV
+  estimator survives compression (DESIGN.md §5.2).  The (cohort, N_packed)
+  int8 stack feeds the fused dequantize-aggregate kernel
+  (kernels.rloo.ncv_aggregate_q) without ever materializing f32 uploads.
+* ``topk``     — magnitude top-k sparsification with per-client
+  error-feedback residuals (8 bytes/kept param).  Biased per round, but the
+  EF residual re-injects the dropped mass next round; the per-step
+  compression error contracts: ||x - decode(encode(x))||^2 <=
+  (1 - k/N) ||x||^2.  The residual is new per-client state, carried through
+  the simulator's scan and checkpointing exactly like `alphas`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Base codec: f32 identity passthrough."""
+    n: int
+    name = "identity"
+    stateful = False
+
+    # -- per-client state (error-feedback residuals etc.) -------------------
+    def init_state(self):
+        return None
+
+    # -- wire maps ----------------------------------------------------------
+    def encode(self, vec, state=None, key=None):
+        del state, key
+        return dict(v=vec.astype(jnp.float32)), None
+
+    def decode(self, wire):
+        return wire["v"].astype(jnp.float32)
+
+    # -- accounting ---------------------------------------------------------
+    def bytes_per_client(self) -> int:
+        """Real bytes a client puts on the wire per round."""
+        return 4 * self.n
+
+    # -- optional fused server path -----------------------------------------
+    def fused_aggregate(self, wire, n_samples, beta, *, use_pallas):
+        """Aggregate directly from the stacked wire (leaves (cohort, ...)).
+
+        Returns (agg (N,), ||agg||^2) or None when the codec has no fused
+        path (the caller then decodes per client and runs `ncv_aggregate`).
+        """
+        del wire, n_samples, beta, use_pallas
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class BF16Codec(Codec):
+    name = "bf16"
+
+    def encode(self, vec, state=None, key=None):
+        del state, key
+        return dict(v=vec.astype(jnp.bfloat16)), None
+
+    def bytes_per_client(self) -> int:
+        return 2 * self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(Codec):
+    """Chunked-scale int8 with unbiased stochastic rounding."""
+    chunk: int = 512
+    name = "int8"
+
+    @property
+    def n_chunks(self) -> int:
+        return max(1, -(-self.n // self.chunk))
+
+    @property
+    def n_padded(self) -> int:
+        return self.n_chunks * self.chunk
+
+    def encode(self, vec, state=None, key=None):
+        del state
+        x = jnp.pad(vec.astype(jnp.float32), (0, self.n_padded - self.n))
+        xc = x.reshape(self.n_chunks, self.chunk)
+        scales = jnp.max(jnp.abs(xc), axis=1) / 127.0
+        scales = jnp.maximum(scales, 1e-12)
+        y = xc / scales[:, None]
+        # floor(y + u), u ~ U[0,1): E = y, so E[q * scale] = x (unbiased).
+        u = jax.random.uniform(key, y.shape)
+        q = jnp.clip(jnp.floor(y + u), -127.0, 127.0).astype(jnp.int8)
+        return dict(q=q.reshape(self.n_padded), s=scales), None
+
+    def decode(self, wire):
+        from repro.kernels.rloo.ref import dequantize_int8_ref
+        return dequantize_int8_ref(wire["q"], wire["s"],
+                                   chunk=self.chunk)[..., :self.n]
+
+    def bytes_per_client(self) -> int:
+        return self.n + 4 * self.n_chunks
+
+    def fused_aggregate(self, wire, n_samples, beta, *, use_pallas):
+        q, scales = wire["q"], wire["s"]          # (M, N_packed), (M, C)
+        if use_pallas:
+            from repro.kernels.rloo.rloo import ncv_aggregate_q
+            agg, nrm = ncv_aggregate_q(q, scales, n_samples, beta,
+                                       chunk=self.chunk, interpret=False)
+        else:
+            from repro.kernels.rloo.ref import ncv_aggregate_q_ref
+            agg, nrm = ncv_aggregate_q_ref(q, scales, n_samples, beta,
+                                           chunk=self.chunk)
+        return agg[:self.n], nrm
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Magnitude top-k with per-client error-feedback residual state."""
+    ratio: float = 0.1
+    name = "topk"
+    stateful = True
+
+    @property
+    def k(self) -> int:
+        return max(1, min(self.n, int(round(self.ratio * self.n))))
+
+    @property
+    def index_dtype(self):
+        return jnp.uint16 if self.n <= 0xFFFF else jnp.uint32
+
+    def init_state(self):
+        return jnp.zeros((self.n,), jnp.float32)
+
+    def encode(self, vec, state=None, key=None):
+        del key
+        x = vec.astype(jnp.float32)
+        if state is not None:
+            x = x + state                          # re-inject dropped mass
+        _, idx = jax.lax.top_k(jnp.abs(x), self.k)
+        vals = jnp.take(x, idx)
+        residual = x.at[idx].set(0.0)
+        return dict(v=vals, i=idx.astype(self.index_dtype)), residual
+
+    def decode(self, wire):
+        idx = wire["i"].astype(jnp.int32)
+        return jnp.zeros((self.n,), jnp.float32).at[idx].set(wire["v"])
+
+    def bytes_per_client(self) -> int:
+        return (4 + self.index_dtype.dtype.itemsize) * self.k
+
+
+CODECS = {
+    "identity": Codec,
+    "bf16": BF16Codec,
+    "int8": Int8Codec,
+    "topk": TopKCodec,
+}
+
+
+def get_codec(name: str, n: int, **opts) -> Codec:
+    """Construct the codec `name` for an N-parameter upload vector."""
+    if name not in CODECS:
+        raise KeyError(f"unknown codec '{name}'; have {sorted(CODECS)}")
+    return CODECS[name](n=n, **opts)
+
+
+def compression_ratio(codec: Codec) -> float:
+    """Uploaded-bytes ratio of the f32 path over this codec's wire."""
+    return 4.0 * codec.n / codec.bytes_per_client()

@@ -26,22 +26,35 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import control_variates as cv
 from repro.fed.methods import MethodConfig, Task, _microbatch_grads
-from repro.utils.tree_math import tree_norm_sq
+from repro.utils.tree_math import ravel, tree_norm_sq, unravel
 
 
 def client_axes(mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float):
-    """Returns round(params, alphas, batch, n_samples).
+def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float,
+                      codec=None):
+    """Returns round(params, alphas, batch, n_samples[, seeds[, ef]]).
 
     batch leaves: (n_clients, K, b, ...) sharded on dim0 over client axes;
     alphas/n_samples: (n_clients,) sharded likewise; params replicated.
+
+    With a non-identity `codec` (repro.comm) each shard encodes its message
+    *before* the psum-side collectives — the all-reduce operands carry
+    exactly the quantization/sparsification error the server would see from
+    compressed uploads — and the round takes per-client uint32 `seeds`
+    (stochastic rounding randomness, sharded like alphas).  A stateful
+    codec (top-k error feedback) additionally threads the per-client
+    residual `ef` (n_clients, N), returned updated after the alphas.  The
+    round reports `bytes_up`, the cohort's uploaded gradient-wire bytes
+    (the alpha statistics ride the collectives as 2 scalars per client).
     """
     ca = client_axes(mesh)
+    use_wire = codec is not None and codec.name != "identity"
+    stateful = use_wire and codec.stateful
 
-    def body(params, alpha, batch, n_u):
+    def body(params, alpha, batch, n_u, *extra):
         # strip the per-shard client dim (1 client per shard)
         local_batch = jax.tree.map(lambda x: x[0], batch)
         alpha_u = alpha[0]
@@ -50,6 +63,15 @@ def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float):
         # ---- client side (Algorithm 1 lines 3-8), flat substrate ----
         g_stack = _microbatch_grads(task, params, local_batch)
         msg, stats, _ = cv.client_pass_flat(g_stack, alpha_u)
+
+        # ---- wire encode (DESIGN.md §5): before any collective ----
+        ef_new = None
+        if use_wire:
+            key_u = jax.random.PRNGKey(extra[0][0])
+            ef_u = extra[1][0] if stateful else None
+            vec, vspec = ravel(msg)
+            wire, ef_new = codec.encode(vec, ef_u, key_u)
+            msg = unravel(codec.decode(wire), vspec)
 
         # ---- server side (lines 9-13) as collectives ----
         n = jax.lax.psum(n_u_local, ca)
@@ -67,25 +89,32 @@ def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float):
             mean_s1=jax.lax.pmean(stats.mean_norm_sq, ca),
             mean_s2=jax.lax.pmean(stats.sum_norm_sq, ca),
         )
-        return new_params, alpha_new[None], metrics
+        if use_wire:
+            metrics["bytes_up"] = jax.lax.psum(
+                jnp.float32(codec.bytes_per_client()), ca)
+        out = (new_params, alpha_new[None])
+        if stateful:
+            out += (ef_new[None],)
+        return out + (metrics,)
 
     pspec = P()
     cspec = P(ca)
-    batch_spec = P(ca)
+    in_specs = (pspec, cspec, cspec, cspec)       # params, alphas, batch, n_u
+    out_specs = (pspec, cspec) + ((cspec,) if stateful else ()) + (pspec,)
+    if use_wire:
+        in_specs += (cspec,)                      # seeds
+    if stateful:
+        in_specs += (cspec,)                      # error-feedback residuals
 
     if hasattr(jax, "shard_map"):                  # jax >= 0.6
         round_fn = jax.shard_map(
-            body, mesh=mesh,
-            in_specs=(pspec, cspec, batch_spec, cspec),
-            out_specs=(pspec, cspec, pspec),
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )
     else:                                          # jax 0.4.x
         from jax.experimental.shard_map import shard_map
         round_fn = shard_map(
-            body, mesh=mesh,
-            in_specs=(pspec, cspec, batch_spec, cspec),
-            out_specs=(pspec, cspec, pspec),
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_rep=False,
         )
     return jax.jit(round_fn)

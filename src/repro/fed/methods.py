@@ -21,8 +21,8 @@ import jax.numpy as jnp
 
 from repro.core import control_variates as cv
 from repro.utils.tree_math import (
-    tree_axpy, tree_mean, tree_scale, tree_sub, tree_zeros_like, tree_dot,
-    tree_norm_sq,
+    ravel, tree_axpy, tree_mean, tree_scale, tree_sub, tree_zeros_like,
+    tree_dot, tree_norm_sq, unravel,
 )
 
 
@@ -51,6 +51,40 @@ class ClientOut(tp.NamedTuple):
     grad: tp.Any                 # uploaded gradient-like pytree
     cstate: tp.Any               # new per-client state
     aux: tp.Any                  # scalar diagnostics dict
+
+
+def with_codec(client_fn, codec):
+    """Compose a client fn with wire encoding (DESIGN.md §5).
+
+    The uploaded gradient leaves the client compressed: the wrapped fn
+    ravels `ClientOut.grad` into the flat (N,) vector and replaces it with
+    the codec's wire dict.  Stateful codecs (top-k error feedback) read and
+    write their per-client residual under the ``"ef"`` key of `cstate`, so
+    the residual rides the same gather/scatter path as every other
+    per-client state (alphas, c_u, personal heads).
+    """
+    def fn(mc, task, params, cstate, batches, key):
+        k_local, k_enc = jax.random.split(key)
+        out = client_fn(mc, task, params, cstate, batches, k_local)
+        vec, _ = ravel(out.grad)
+        state = cstate.get("ef") if codec.stateful else None
+        wire, new_state = codec.encode(vec, state, k_enc)
+        new_cstate = out.cstate
+        if codec.stateful:
+            new_cstate = dict(new_cstate, ef=new_state)
+        return out._replace(grad=wire, cstate=new_cstate)
+    return fn
+
+
+def _aggregate(grads_stacked, n_samples, beta, codec, spec):
+    """Cohort aggregation: dense flat path, or straight off the wire."""
+    if codec is None:
+        return cv.networked_aggregate_flat(grads_stacked, n_samples,
+                                           beta=beta)
+    from repro import comm
+    agg_vec, agg_norm = comm.aggregate_wire(codec, grads_stacked, n_samples,
+                                            beta=beta)
+    return unravel(agg_vec, spec), agg_norm
 
 
 def _body_mask(task: Task, params):
@@ -104,9 +138,12 @@ def fedavg_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
     return ClientOut(grad, cstate, dict())
 
 
-def fedavg_server(mc, task, params, grads_stacked, n_samples, sstate, lr):
-    agg, agg_norm = cv.networked_aggregate_flat(grads_stacked, n_samples,
-                                                beta=0.0)
+def fedavg_server(mc, task, params, grads_stacked, n_samples, sstate, lr,
+                  codec=None, spec=None):
+    """`codec`/`spec` switch the server onto the compressed wire:
+    `grads_stacked` is then the stacked wire dict and the aggregate is taken
+    by fused dequantize-aggregate (or per-client decode) over it."""
+    agg, agg_norm = _aggregate(grads_stacked, n_samples, 0.0, codec, spec)
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
     return params, sstate, dict(agg_norm=agg_norm)
 
@@ -208,12 +245,16 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
 
 
 def fedncv_server(mc: MethodConfig, task, params, grads_stacked, n_samples,
-                  aux, sstate, lr):
+                  aux, sstate, lr, codec=None, spec=None):
     """Server side of Algorithm 1 (lines 9-13): networked aggregation (Eq.
     10-12, one fused pass over the flat cohort stack) + alpha_u adaptation
-    (line 12, or Prop. 2 closed form — M scalars, done outside the kernel)."""
-    agg, agg_norm = cv.networked_aggregate_flat(grads_stacked, n_samples,
-                                                beta=mc.ncv_beta)
+    (line 12, or Prop. 2 closed form — M scalars, done outside the kernel).
+
+    With a `codec`, `grads_stacked` is the stacked wire and the aggregation
+    runs directly on the compressed uploads (fused dequantize-aggregate for
+    int8); the alpha statistics ride in `aux` uncompressed (4 scalars)."""
+    agg, agg_norm = _aggregate(grads_stacked, n_samples, mc.ncv_beta, codec,
+                               spec)
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
 
     stats = cv.ClientCVStats(None, aux["k"], aux["mean_norm_sq"],
@@ -242,15 +283,20 @@ def fedncv_init_cstate(params, mc: MethodConfig):
 
 def fedncv_plus_server(mc, task, params, grads_stacked, n_samples, idx,
                        sstate, lr, m_total):
-    h_all = sstate["h"]                      # leaves (M_total, ...)
-    h_mean = tree_mean(h_all, axis=0)
+    """mean_all(h) comes from the running sum `h_sum` kept in `sstate` and
+    updated incrementally at the cohort indices, so the per-round cost is
+    O(cohort * N) instead of re-reducing all M_total stale gradients."""
+    h_all, h_sum = sstate["h"], sstate["h_sum"]   # (M_total, ...), (...)
+    h_mean = tree_scale(h_sum, 1.0 / m_total)
     h_cohort = jax.tree.map(lambda h: h[idx], h_all)
-    corr = jax.tree.map(lambda g, h: jnp.mean(g - h, axis=0),
-                        grads_stacked, h_cohort)
+    delta = tree_sub(grads_stacked, h_cohort)     # leaves (cohort, ...)
+    corr = tree_mean(delta, axis=0)
     agg = jax.tree.map(jnp.add, h_mean, corr)
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
     h_all = jax.tree.map(lambda h, g: h.at[idx].set(g), h_all, grads_stacked)
-    return params, dict(sstate, h=h_all), dict(agg_norm=tree_norm_sq(agg))
+    h_sum = jax.tree.map(lambda s, d: s + jnp.sum(d, axis=0), h_sum, delta)
+    return params, dict(sstate, h=h_all, h_sum=h_sum), \
+        dict(agg_norm=tree_norm_sq(agg))
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,12 @@ host sync instead of n.  Evaluation is a single padded, vmapped pass over
 all clients (padded positions are masked with label -1 and corrected by the
 true shard size) instead of one trace per client.
 
+`FLConfig.codec` selects the client->server wire format (repro.comm): the
+uploaded gradients leave each client compressed, the servers aggregate
+straight off the wire (fused dequantize-aggregate for int8), per-client
+codec state (top-k error-feedback residuals) is carried like `alphas`,
+and every round reports `bytes_up` (DESIGN.md §5).
+
 The same `methods.py` client/server functions are reused by the
 mesh-distributed runtime (fed/distributed.py), so what this simulator
 validates is exactly what runs on the pod.
@@ -26,8 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm
 from repro.fed import methods as M
-from repro.utils.tree_math import tree_axpy, tree_zeros_like
+from repro.utils.tree_math import (
+    flat_spec, tree_axpy, tree_bytes, tree_zeros_like,
+)
 
 CLIENT_FNS = {
     "fedavg": M.fedavg_client,
@@ -51,6 +60,8 @@ class FLConfig:
     k_micro: int = 8                  # K microbatches (RLOO units)
     micro_batch: int = 16
     server_lr: float = 1.0
+    codec: str = "identity"           # client->server wire format (repro.comm)
+    codec_opts: dict = dataclasses.field(default_factory=dict)
     mc: M.MethodConfig = dataclasses.field(
         default_factory=lambda: M.MethodConfig(name="fedncv"))
 
@@ -64,6 +75,11 @@ class Simulator:
         self.data = {k: jnp.asarray(v) for k, v in data.items()}
         self.base_key = jax.random.PRNGKey(seed)
         m = fl.n_clients
+
+        # client->server wire format (grads share the params' structure)
+        self._grad_spec = flat_spec(params, stacked=False)
+        self.codec = comm.get_codec(fl.codec, n=self._grad_spec.n,
+                                    **fl.codec_opts)
 
         # per-client state
         if fl.method == "scaffold":
@@ -79,6 +95,11 @@ class Simulator:
         if fl.method == "fedncv+":
             self.h = jax.vmap(lambda _: tree_zeros_like(params))(
                 jnp.arange(m))
+            self.h_sum = tree_zeros_like(params)
+        if self.codec.stateful:
+            # per-client error-feedback residuals, carried like `alphas`
+            self.ef = jax.vmap(lambda _: self.codec.init_state())(
+                jnp.arange(m))
 
         self.round_idx = 0
         self._round_jit = jax.jit(self._round_core)
@@ -93,15 +114,18 @@ class Simulator:
     # ------------------------------------------------------------------
     def _get_state(self):
         fl = self.fl
+        state = dict()
         if fl.method == "scaffold":
-            return dict(c_u=self.c_u, c_global=self.c_global)
-        if fl.method == "fedncv":
-            return dict(alphas=self.alphas)
-        if fl.method in PERSONAL_METHODS:
-            return dict(personal=self.personal)
-        if fl.method == "fedncv+":
-            return dict(h=self.h)
-        return dict()
+            state = dict(c_u=self.c_u, c_global=self.c_global)
+        elif fl.method == "fedncv":
+            state = dict(alphas=self.alphas)
+        elif fl.method in PERSONAL_METHODS:
+            state = dict(personal=self.personal)
+        elif fl.method == "fedncv+":
+            state = dict(h=self.h, h_sum=self.h_sum)
+        if self.codec.stateful:
+            state["ef"] = self.ef
+        return state
 
     def _set_state(self, state):
         fl = self.fl
@@ -112,7 +136,9 @@ class Simulator:
         elif fl.method in PERSONAL_METHODS:
             self.personal = state["personal"]
         elif fl.method == "fedncv+":
-            self.h = state["h"]
+            self.h, self.h_sum = state["h"], state["h_sum"]
+        if self.codec.stateful:
+            self.ef = state["ef"]
 
     # ------------------------------------------------------------------
     # one round, fully on device
@@ -143,21 +169,30 @@ class Simulator:
     def _cohort_cstates(self, state, idx):
         fl = self.fl
         if fl.method == "scaffold":
-            return dict(
+            cs = dict(
                 c_u=jax.tree.map(lambda x: x[idx], state["c_u"]),
                 c_global=jax.vmap(lambda _: state["c_global"])(idx))
-        if fl.method == "fedncv":
-            return dict(alpha=state["alphas"][idx])
-        if fl.method in PERSONAL_METHODS:
-            return dict(personal=jax.tree.map(lambda x: x[idx],
-                                              state["personal"]))
-        return dict(dummy=jnp.zeros(fl.cohort))
+        elif fl.method == "fedncv":
+            cs = dict(alpha=state["alphas"][idx])
+        elif fl.method in PERSONAL_METHODS:
+            cs = dict(personal=jax.tree.map(lambda x: x[idx],
+                                            state["personal"]))
+        else:
+            cs = dict(dummy=jnp.zeros(fl.cohort))
+        if self.codec.stateful:
+            cs["ef"] = state["ef"][idx]
+        return cs
 
     def _round_core(self, params, state, key, r):
         """params, method state, PRNG key, 1-based round number -> updated
         (params, state, scalar diagnostics).  Pure; jit/scan-able."""
-        task, fl = self.task, self.fl
+        task, fl, codec = self.task, self.fl, self.codec
         client_fn, mc = CLIENT_FNS[fl.method], fl.mc
+        # non-identity codecs compress the upload at the end of the client fn
+        # and the servers aggregate straight off the wire (DESIGN.md §5)
+        use_wire = codec.name != "identity"
+        if use_wire:
+            client_fn = M.with_codec(client_fn, codec)
         kd, kk = jax.random.split(key)
         idx, batches, sizes = self._draw_cohort(kd)
         cstates = self._cohort_cstates(state, idx)
@@ -168,19 +203,27 @@ class Simulator:
         grads, new_cstates, aux = outs.grad, outs.cstate, outs.aux
 
         new_state = dict(state)
+        if codec.stateful:
+            new_state["ef"] = state["ef"].at[idx].set(new_cstates["ef"])
+        wire_kw = dict(codec=codec, spec=self._grad_spec) if use_wire else {}
         if fl.method == "fedncv":
             params, _, diag = M.fedncv_server(
-                mc, task, params, grads, sizes, aux, dict(), fl.server_lr)
+                mc, task, params, grads, sizes, aux, dict(), fl.server_lr,
+                **wire_kw)
             new_state["alphas"] = state["alphas"].at[idx].set(
                 diag.pop("alpha"))
         elif fl.method == "fedncv+":
+            if use_wire:   # FedNCV+ updates per-client h_u: needs dense grads
+                grads = comm.decode_stack(codec, grads, self._grad_spec)
             params, sstate, diag = M.fedncv_plus_server(
-                mc, task, params, grads, sizes, idx, dict(h=state["h"]),
+                mc, task, params, grads, sizes, idx,
+                dict(h=state["h"], h_sum=state["h_sum"]),
                 fl.server_lr, fl.n_clients)
-            new_state["h"] = sstate["h"]
+            new_state["h"], new_state["h_sum"] = sstate["h"], sstate["h_sum"]
         else:
             params, _, diag = M.fedavg_server(
-                mc, task, params, grads, sizes, dict(), fl.server_lr)
+                mc, task, params, grads, sizes, dict(), fl.server_lr,
+                **wire_kw)
             if fl.method == "scaffold":
                 c_delta = jax.tree.map(lambda d: jnp.mean(d, 0),
                                        aux["delta_c"])
@@ -200,6 +243,11 @@ class Simulator:
                     state["personal"], personal_new)
         diag = {k: v for k, v in diag.items()
                 if getattr(v, "ndim", None) == 0}
+        # total uploaded bytes this round: gradient wire + auxiliary uploads
+        # (FedNCV's 4 scalars, SCAFFOLD's delta_c, pFedSim's head vectors —
+        # aux leaves already carry the cohort dim, so tree_bytes covers all)
+        diag["bytes_up"] = jnp.float32(
+            fl.cohort * codec.bytes_per_client() + tree_bytes(aux))
         return params, new_state, diag
 
     def _scan_rounds(self, params, state, keys, rs):

@@ -31,3 +31,24 @@ def ncv_aggregate_ref(g_flat, n_samples, beta=1.0):
     gprime = g - beta * c
     agg = jnp.sum(p[:, None] * gprime, axis=0)
     return agg, jnp.sum(agg * agg)
+
+
+def dequantize_int8_ref(q, scales, chunk=512):
+    """Chunked-scale int8 dequantization (the comm `int8` wire format).
+
+    q: (..., C*chunk) int8; scales: (..., C) f32.  Returns f32 of q's shape.
+    """
+    lead = q.shape[:-1]
+    c = scales.shape[-1]
+    g = q.astype(jnp.float32).reshape(lead + (c, chunk))
+    return (g * scales[..., None]).reshape(lead + (c * chunk,))
+
+
+def ncv_aggregate_q_ref(q, scales, n_samples, beta=1.0, chunk=512):
+    """Decode-then-aggregate oracle of the fused `ncv_aggregate_q` kernel.
+
+    q: (M, N_packed) int8 cohort stack; scales: (M, C) per-chunk f32.
+    Returns (agg (N_packed,), ||agg||^2).
+    """
+    return ncv_aggregate_ref(dequantize_int8_ref(q, scales, chunk=chunk),
+                             n_samples, beta)

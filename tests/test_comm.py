@@ -1,0 +1,319 @@
+"""Tests for the repro.comm wire formats (DESIGN.md §5).
+
+Covers: round-trip exactness (identity/bf16), mean-unbiasedness of
+stochastic-rounding int8 across keys, error-feedback contraction for topk,
+fused dequantize-aggregate vs the decode-then-`ncv_aggregate` oracle on
+ragged N and cohort sizes {2, 3, 8}, the simulator integration (bytes_up,
+EF state threading), and checkpointing of the EF residuals.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import comm
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.kernels.rloo.ref import (
+    dequantize_int8_ref, ncv_aggregate_q_ref, ncv_aggregate_ref,
+)
+from repro.kernels.rloo.rloo import ncv_aggregate_q
+
+
+def _vec(rng, n):
+    return jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+
+# ----------------------------- round trips ----------------------------------
+
+@given(n=st.sampled_from([1, 100, 513, 2049]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_identity_roundtrip_exact(n, seed):
+    codec = comm.get_codec("identity", n=n)
+    vec = _vec(np.random.default_rng(seed), n)
+    wire, state = codec.encode(vec)
+    assert state is None
+    np.testing.assert_array_equal(codec.decode(wire), vec)
+    assert codec.bytes_per_client() == 4 * n
+
+
+@given(n=st.sampled_from([1, 100, 513]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_bf16_roundtrip_exact_on_bf16_grid(n, seed):
+    """bf16 wire == round-to-nearest cast; exact on representable values."""
+    codec = comm.get_codec("bf16", n=n)
+    raw = _vec(np.random.default_rng(seed), n)
+    vec = raw.astype(jnp.bfloat16).astype(jnp.float32)   # representable
+    wire, _ = codec.encode(vec)
+    np.testing.assert_array_equal(codec.decode(wire), vec)
+    # arbitrary f32 decodes to exactly its nearest-even bf16 neighbour
+    wire, _ = codec.encode(raw)
+    np.testing.assert_array_equal(
+        codec.decode(wire), raw.astype(jnp.bfloat16).astype(jnp.float32))
+    assert codec.bytes_per_client() == 2 * n
+
+
+# ----------------------------- int8 stochastic rounding ---------------------
+
+def test_int8_mean_unbiased_over_keys():
+    """E_key[decode(encode(x, key))] == x (the Theorem-level requirement)."""
+    n, n_keys = 700, 4096
+    codec = comm.get_codec("int8", n=n)
+    rng = np.random.default_rng(0)
+    vec = _vec(rng, n) * jnp.asarray(rng.uniform(0.1, 10.0, n), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(1), n_keys)
+    dec = jax.vmap(lambda k: codec.decode(codec.encode(vec, None, k)[0]))(keys)
+    mean = jnp.mean(dec, axis=0)
+    # per-coordinate quantization noise is <= one step (the chunk scale);
+    # the empirical mean must concentrate at x with std step/sqrt(n_keys)
+    step = float(jnp.max(jnp.abs(vec))) / 127.0
+    np.testing.assert_allclose(mean, vec, atol=6.0 * step / np.sqrt(n_keys))
+
+
+@given(n=st.sampled_from([5, 512, 700, 1025]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_int8_quantization_error_bounded(n, seed):
+    """|decode - x| <= per-chunk scale (one quantization step), q in range."""
+    codec = comm.get_codec("int8", n=n)
+    vec = _vec(np.random.default_rng(seed), n) * 3.0
+    wire, _ = codec.encode(vec, None, jax.random.PRNGKey(seed))
+    assert wire["q"].dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(wire["q"].astype(jnp.int32)))) <= 127
+    dec = codec.decode(wire)
+    step = jnp.repeat(wire["s"], codec.chunk)[:n]
+    assert bool(jnp.all(jnp.abs(dec - vec) <= step + 1e-7))
+
+
+# ----------------------------- topk + error feedback ------------------------
+
+@given(n=st.sampled_from([10, 100, 513]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_topk_error_feedback_contraction(n, seed):
+    """||x - decode(encode(x))||^2 <= (1 - k/n) ||x||^2, and the residual
+    re-injects: two rounds on a constant gradient transmit dropped mass."""
+    codec = comm.get_codec("topk", n=n, ratio=0.25)
+    vec = _vec(np.random.default_rng(seed), n)
+    wire, residual = codec.encode(vec, codec.init_state())
+    k = codec.k
+    lhs = float(jnp.sum(residual ** 2))
+    rhs = (1.0 - k / n) * float(jnp.sum(vec ** 2))
+    assert lhs <= rhs + 1e-6
+    # decoded + residual reconstructs x exactly (nothing lost, only delayed)
+    np.testing.assert_allclose(codec.decode(wire) + residual, vec,
+                               rtol=1e-6, atol=1e-6)
+    # EF: next round sees x + residual, so the dropped coordinates get a
+    # second chance; on a constant input the residual stays under the
+    # standard fixed point  ||e||^2 <= (1-d)/(1-sqrt(1-d))^2 ||x||^2
+    r = residual
+    for _ in range(20):
+        _, r = codec.encode(vec, r)
+    d = k / n
+    bound = (1.0 - d) / (1.0 - np.sqrt(1.0 - d)) ** 2
+    assert float(jnp.sum(r ** 2)) <= bound * float(jnp.sum(vec ** 2)) + 1e-6
+
+
+# ----------------------------- fused dequantize-aggregate -------------------
+
+@given(m=st.sampled_from([2, 3, 8]), beta=st.floats(0.0, 1.0),
+       n=st.sampled_from([1, 100, 513, 2049]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fused_dequant_aggregate_matches_decode_then_aggregate(m, beta, n,
+                                                               seed):
+    """aggregate_wire(int8) == ncv_aggregate(decode per client) to fp32."""
+    rng = np.random.default_rng(seed)
+    codec = comm.get_codec("int8", n=n)
+    vecs = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), m)
+    wire = jax.vmap(lambda v, k: codec.encode(v, None, k)[0])(vecs, keys)
+    n_u = jnp.asarray(rng.integers(1, 30, size=m), jnp.float32)
+
+    agg, nrm = comm.aggregate_wire(codec, wire, n_u, beta=beta,
+                                   use_pallas=False)
+    dense = jax.vmap(codec.decode)(wire)                 # decode-then-
+    agg_ref, nrm_ref = ncv_aggregate_ref(dense, n_u, beta)
+    np.testing.assert_allclose(agg, agg_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(nrm), float(nrm_ref), rtol=1e-4,
+                               atol=1e-6)
+
+
+@given(m=st.sampled_from([2, 3, 8]), beta=st.floats(0.0, 1.0),
+       c=st.sampled_from([1, 2, 5]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ncv_aggregate_q_kernel_matches_ref(m, beta, c, seed):
+    """The Pallas kernel (interpret) == the jnp dequant oracle."""
+    rng = np.random.default_rng(seed)
+    chunk = 512
+    q = jnp.asarray(rng.integers(-127, 128, size=(m, c * chunk)), jnp.int8)
+    scales = jnp.asarray(rng.uniform(1e-3, 2.0, size=(m, c)), jnp.float32)
+    n_u = jnp.asarray(rng.integers(1, 30, size=m), jnp.float32)
+    agg, nrm = ncv_aggregate_q(q, scales, n_u, beta, interpret=True)
+    agg_r, nrm_r = ncv_aggregate_q_ref(q, scales, n_u, beta)
+    np.testing.assert_allclose(agg, agg_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(nrm), float(nrm_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_dequantize_int8_ref_shapes():
+    q = jnp.arange(4 * 1024, dtype=jnp.int8).reshape(4, 1024)
+    s = jnp.ones((4, 2), jnp.float32) * 0.5
+    g = dequantize_int8_ref(q, s)
+    assert g.shape == (4, 1024)
+    np.testing.assert_allclose(g, q.astype(jnp.float32) * 0.5)
+
+
+# ----------------------------- simulator integration ------------------------
+
+def _tiny_sim(method="fedncv", codec="identity", seed=0, **codec_opts):
+    from repro.data import federated_splits
+    from repro.models import lenet
+    spec, train, test = federated_splits("mnist", n_clients=6, alpha=0.5,
+                                         seed=0, scale=0.1)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    fl = FLConfig(method=method, n_clients=6, cohort=3, k_micro=3,
+                  micro_batch=4, server_lr=0.5, codec=codec,
+                  codec_opts=codec_opts,
+                  mc=MethodConfig(name=method, local_epochs=1))
+    return Simulator(task, params, train, fl, seed=seed), test
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8", "topk"])
+def test_simulator_wire_bytes_and_state(codec):
+    sim, _ = _tiny_sim(codec=codec)
+    f32_bytes = 4 * sim._grad_spec.n * sim.fl.cohort
+    aux_bytes = 16 * sim.fl.cohort          # fedncv uploads 4 f32 scalars
+    diag = sim.run_round()
+    assert diag["bytes_up"] < f32_bytes
+    assert diag["bytes_up"] == \
+        sim.fl.cohort * sim.codec.bytes_per_client() + aux_bytes
+    if codec == "topk":
+        # the wire ships compact indices and the cohort's error-feedback
+        # residuals became non-zero
+        assert sim.codec.index_dtype == jnp.uint16
+        assert float(jnp.sum(jnp.abs(sim.ef))) > 0.0
+
+
+@pytest.mark.slow
+def test_simulator_wire_run_rounds_matches_run_round():
+    """The scanned driver follows per-round trajectories with EF state."""
+    sa, _ = _tiny_sim(codec="topk")
+    sb, _ = _tiny_sim(codec="topk")
+    for _ in range(4):
+        sa.run_round()
+    sb.run_rounds(4)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6,
+                                                         atol=1e-7),
+                 sa.params, sb.params)
+    np.testing.assert_allclose(np.asarray(sa.ef), np.asarray(sb.ef),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.slow
+def test_ef_state_checkpoint_roundtrip(tmp_path):
+    """save_sim/restore_sim carries the EF residuals: a restored run
+    reproduces the uninterrupted trajectory exactly."""
+    from repro.checkpoint import restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa, _ = _tiny_sim(codec="topk")
+    sa.run_rounds(2)
+    save_sim(ckdir, sa)
+    sa.run_rounds(3)
+
+    sb, _ = _tiny_sim(codec="topk")
+    meta = restore_sim(ckdir, sb)
+    assert meta["round_idx"] == sb.round_idx == 2
+    sb.run_rounds(3)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6,
+                                                         atol=1e-7),
+                 sa.params, sb.params)
+    np.testing.assert_allclose(np.asarray(sa.ef), np.asarray(sb.ef),
+                               rtol=1e-6, atol=1e-7)
+
+
+_DISTRIBUTED_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro import comm
+from repro.core import control_variates as cv
+from repro.fed.distributed import make_fedncv_round
+from repro.fed.methods import MethodConfig, Task, _microbatch_grads
+from repro.models import lenet
+from repro.utils.tree_math import ravel, unravel
+
+mesh = jax.make_mesh((4,), ("data",))
+cfg = lenet.LeNetConfig(n_classes=4, image_size=16, channels=1)
+task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b))
+params = lenet.init(cfg, jax.random.PRNGKey(0))
+M, K, B = 4, 3, 8
+key = jax.random.PRNGKey(1)
+batch = dict(images=jax.random.normal(key, (M, K, B, 16, 16, 1)),
+             labels=jax.random.randint(key, (M, K, B), 0, 4))
+alphas = jnp.asarray([0.1, 0.3, 0.5, 0.7])
+n_u = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+mc = MethodConfig(name="fedncv", ncv_beta=1.0)
+n = ravel(params)[0].shape[0]
+seeds = jnp.arange(M, dtype=jnp.uint32)
+
+codec = comm.get_codec("int8", n=n)
+round_fn = make_fedncv_round(task, mesh, mc, 0.5, codec=codec)
+new_params, _, metrics = round_fn(params, alphas, batch, n_u, seeds)
+assert float(metrics["bytes_up"]) == 4 * codec.bytes_per_client()
+
+# host-side oracle: encode/decode each client message, then Eq. 10-12
+msgs = []
+for u in range(M):
+    lb = jax.tree.map(lambda x: x[u], batch)
+    stats = cv.client_stats_from_stack(_microbatch_grads(task, params, lb))
+    vec, vspec = ravel(cv.client_message(stats, alphas[u]))
+    wire, _ = codec.encode(vec, None, jax.random.PRNGKey(seeds[u]))
+    msgs.append(unravel(codec.decode(wire), vspec))
+agg = cv.networked_aggregate(msgs, n_u, beta=1.0)
+ref = jax.tree.map(lambda p, g: p - 0.5 * g, params, agg)
+err = max(float(jnp.max(jnp.abs(a - b)))
+          for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(ref)))
+assert err < 1e-5, err
+
+# stateful codec threads the EF residual through the round
+codec = comm.get_codec("topk", n=n)
+round_fn = make_fedncv_round(task, mesh, mc, 0.5, codec=codec)
+ef = jnp.zeros((M, n), jnp.float32)
+_, _, ef2, m2 = round_fn(params, alphas, batch, n_u, seeds, ef)
+assert float(jnp.sum(jnp.abs(ef2))) > 0.0
+assert float(m2["bytes_up"]) == 4 * codec.bytes_per_client()
+print("COMM_DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_shardmap_wire_matches_host_oracle():
+    """shard_map rounds with encode-before-psum == the host-side codec
+    oracle (subprocess: device count is fixed at first jax init)."""
+    import subprocess
+    import sys
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _DISTRIBUTED_CODE],
+                         capture_output=True, text=True,
+                         env=dict(os.environ, PYTHONPATH=src), timeout=420)
+    assert "COMM_DISTRIBUTED_OK" in out.stdout, (out.stdout[-1000:],
+                                                out.stderr[-2000:])
+
+
+@pytest.mark.slow
+def test_int8_sim_tracks_f32_sim():
+    """Unbiased int8 compression stays close to the f32 trajectory on the
+    tiny protocol (the BENCH_comm acceptance, in miniature)."""
+    sa, test = _tiny_sim(codec="identity")
+    sb, _ = _tiny_sim(codec="int8")
+    sa.run_rounds(6)
+    sb.run_rounds(6)
+    acc_a = sa.evaluate(test)
+    acc_b = sb.evaluate(test)
+    assert abs(acc_a - acc_b) < 0.05
