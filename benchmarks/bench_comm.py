@@ -20,7 +20,7 @@ from repro.models import lenet
 
 FAST = os.environ.get("BENCH_FAST", "1") == "1"
 
-CODECS = ["identity", "bf16", "int8", "topk"]
+CODECS = ["identity", "bf16", "int8", "int4", "topk"]
 # topk at ratio 0.16 is 4.17x with u16 indices; EF closes the accuracy gap
 # to < 1 point by round ~35 on this protocol
 CODEC_OPTS = {"topk": dict(ratio=0.16)}

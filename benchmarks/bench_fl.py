@@ -73,8 +73,11 @@ def run_dataset(name: str, seed=0):
         dt = time.time() - t0
         rows.append((method, pre, post, dt))
         curves[method] = curve
+        # per-round wall-clock + rounds/s keep the perf trajectory
+        # machine-comparable across PRs (benchmarks/run.py parses rows)
         print(f"table1,{name},{method},pre={pre:.4f},post={post:.4f},"
-              f"rounds={ROUNDS},sec={dt:.1f},sec_per_round={dt / ROUNDS:.3f}",
+              f"rounds={ROUNDS},sec={dt:.1f},sec_per_round={dt / ROUNDS:.3f},"
+              f"rounds_per_s={ROUNDS / dt:.2f}",
               flush=True)
     return rows, curves
 

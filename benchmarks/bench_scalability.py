@@ -1,14 +1,29 @@
 """Paper Figure 2: scalability — accuracy (pre/post) as the number of edge
-workers grows, for FedNCV vs the personalization baselines.
+workers grows, for FedNCV vs the personalization baselines, plus the PR-3
+device-scaling sweep: rounds/s of the sharded-cohort simulator as the mesh
+grows (DESIGN.md §6).
 
 The paper scales 100 -> 1000 clients on EMNIST; we scale proportionally on
 the synthetic EMNIST stand-in (CI budget), reporting the accuracy DROP from
 the smallest to the largest client count — the paper's headline metric
 (FedNCV: -1.66/-2.17pp vs FedRep: -10.18/-8.80pp).
+
+The device sweep runs one subprocess per device count (the host platform
+device count is fixed at first jax init) with an aggregation-dominated
+config: a large flat parameter vector with a trivial quadratic loss, so
+the round cost is the (cohort, N) stack traffic the sharded path divides
+by D.  Each row records per-round wall-clock, rounds/s, the speedup vs
+D=1, and the per-device stack slice; `nproc` is the host-parallelism
+ceiling — forced host devices share the machine's cores, so wall-clock
+speedup saturates at min(D, nproc) even though per-device HBM traffic
+keeps falling 1/D.
 """
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
+import time
 
 import jax
 
@@ -20,6 +35,89 @@ FAST = os.environ.get("BENCH_FAST", "1") == "1"
 SCALES = [8, 16, 32] if FAST else [25, 50, 100, 200]
 METHODS = ["fedncv", "fedrep", "fedper", "pfedsim"]
 ROUNDS = 15 if FAST else 50
+DEVICE_SWEEP = [1, 2, 4, 8]
+SWEEP_ROUNDS = 10 if FAST else 30
+
+_SCALING_CODE = """
+import os
+# one compute thread per forced device: the sweep then measures worker
+# scaling (1 worker vs D workers) instead of intra-op thread-pool noise —
+# on real multi-host/TPU meshes each device IS one worker.  Our flags go
+# LAST so an inherited device-count flag cannot override the sweep's.
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count={d}"
+                           + " --xla_cpu_multi_thread_eigen=false")
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.sharding import cohort_mesh
+
+N = 1 << {log2n}                 # flat parameter dim
+M_CLIENTS, COHORT, K, B = 64, 32, 2, 4
+rng = np.random.default_rng(0)
+n_total = 2048
+n_max = n_total // M_CLIENTS
+data = dict(
+    images=rng.standard_normal((n_total, 2)).astype(np.float32),
+    labels=np.zeros((n_total,), np.int32),
+    client_idx=np.arange(n_total, dtype=np.int32).reshape(M_CLIENTS, n_max),
+    client_sizes=np.full((M_CLIENTS,), n_max, np.int32),
+)
+params = dict(w=jnp.zeros((N,), jnp.float32))
+# quadratic pull toward the shard mean: the gradient is N-sized but costs
+# one subtraction — the round is dominated by the (cohort, N) stack
+# (client RLOO pass + Eq. 10-12 aggregation), i.e. the sharded memory path
+task = Task(loss=lambda p, b: 0.5 * jnp.sum(
+    (p["w"] - jnp.mean(b["images"])) ** 2))
+fl = FLConfig(method="fedncv", n_clients=M_CLIENTS, cohort=COHORT,
+              k_micro=K, micro_batch=B, server_lr=0.1,
+              mc=MethodConfig(name="fedncv", local_epochs=1, ncv_beta=0.0))
+mesh = cohort_mesh() if {d} > 1 else None
+sim = Simulator(task, params, data, fl, seed=0, mesh=mesh)
+sim.run_rounds(2)                                 # compile + warm
+jax.block_until_ready(sim.params)
+dt = float("inf")
+for _ in range(2):                                # best-of-2 (noise floor)
+    t0 = time.time()
+    sim.run_rounds({rounds})
+    jax.block_until_ready(sim.params)
+    dt = min(dt, time.time() - t0)
+print(f"SCALING {d} {{dt / {rounds}:.6f}} {{{rounds} / dt:.4f}}")
+"""
+
+
+def run_device_sweep():
+    """rounds/s vs device count on the aggregation-dominated config."""
+    log2n = 18 if FAST else 20
+    nproc = os.cpu_count() or 1
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    base = None
+    print(f"# device sweep: cohort=32, N=2^{log2n}, rounds={SWEEP_ROUNDS}, "
+          f"nproc={nproc} (wall-clock ceiling: min(D, nproc))")
+    for d in DEVICE_SWEEP:
+        code = _SCALING_CODE.format(d=d, log2n=log2n, rounds=SWEEP_ROUNDS)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=1200)
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("SCALING")]
+        if not line:
+            print(f"fig2_scaling,devices={d},FAILED")
+            print(out.stderr[-2000:], file=sys.stderr)
+            continue
+        _, _, sec_per_round, rps = line[0].split()
+        sec_per_round, rps = float(sec_per_round), float(rps)
+        if d == 1:                      # never rebase on a later D: a failed
+            base = rps                  # D=1 run must not mislabel speedups
+        speedup = f"{rps / base:.2f}" if base else "n/a"
+        stack_mb = 32 * (1 << log2n) * 4 / d / 1e6
+        print(f"fig2_scaling,devices={d},sec_per_round={sec_per_round:.4f},"
+              f"rounds_per_s={rps:.3f},speedup_vs_d1={speedup},"
+              f"stack_mb_per_device={stack_mb:.1f},nproc={nproc}",
+              flush=True)
 
 
 def main():
@@ -39,12 +137,15 @@ def main():
                                           local_epochs=2, ncv_alpha0=0.3,
                                           ncv_alpha_lr=1e-5, ncv_beta=0.0))
             sim = Simulator(task, params, train, fl, seed=2)
-            for _ in range(ROUNDS):
-                sim.run_round()
+            t0 = time.time()
+            sim.run_rounds(ROUNDS)
+            dt = time.time() - t0
             pre = sim.evaluate(test)
             post = sim.evaluate(test, personalize_steps=3)
             results.setdefault(method, []).append((m, pre, post))
-            print(f"fig2,{method},clients={m},pre={pre:.4f},post={post:.4f}",
+            print(f"fig2,{method},clients={m},pre={pre:.4f},post={post:.4f},"
+                  f"sec_per_round={dt / ROUNDS:.3f},"
+                  f"rounds_per_s={ROUNDS / dt:.2f}",
                   flush=True)
     print("# accuracy drop small->large (paper metric)")
     for method, rows in results.items():
@@ -52,6 +153,7 @@ def main():
         drop_post = rows[0][2] - rows[-1][2]
         print(f"fig2_drop,{method},pre_drop={drop_pre:+.4f},"
               f"post_drop={drop_post:+.4f}")
+    run_device_sweep()
     return results
 
 

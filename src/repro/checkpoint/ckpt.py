@@ -104,10 +104,17 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
 
 def restore_sim(directory: str, sim, step: int | None = None):
     """Restore a `save_sim` checkpoint into `sim` (must be configured with
-    the same FLConfig, codec included).  Returns the checkpoint meta."""
+    the same FLConfig, codec included).  Returns the checkpoint meta.
+
+    The async pipeline's in-flight cohort is NOT checkpointed (DESIGN.md
+    §6.2): any pending round on `sim` is dropped so the restored run
+    restarts with a fresh pipeline bubble instead of applying a stale
+    cohort from the pre-restore trajectory."""
+    import jax.numpy as jnp
     like = dict(params=sim.params, state=sim._get_state())
     tree, meta = restore_step(directory, like, step)
     sim.params = tree["params"]
     sim._set_state(tree["state"])
     sim.round_idx = int(meta.get("round_idx", sim.round_idx))
+    sim._pending, sim._valid = None, jnp.float32(0.0)
     return meta

@@ -15,8 +15,8 @@ from __future__ import annotations
 import jax
 
 from repro.comm.codecs import (  # noqa: F401
-    CODECS, BF16Codec, Codec, Int8Codec, TopKCodec, compression_ratio,
-    get_codec,
+    CODECS, BF16Codec, Codec, Int4Codec, Int8Codec, TopKCodec,
+    compression_ratio, get_codec,
 )
 from repro.utils.tree_math import FlatSpec, unravel
 
@@ -26,22 +26,19 @@ def aggregate_wire(codec: Codec, wire, n_samples, beta=1.0, *,
     """Fused FedNCV server reduction straight off the compressed cohort stack.
 
     wire: stacked wire dict (leaves (cohort, ...)).  Returns
-    (agg (N,) f32, ||agg||^2).  Codecs with a fused kernel (int8) aggregate
-    without decoding; others decode per client (one vmapped map) and reuse
-    the `ncv_aggregate` kernel over the dense (cohort, N) stack.
+    (agg (N,) f32, ||agg||^2).  The Eq. 10-12 estimator collapses to one
+    weighted sum with `ncv_coefficients(n_samples, beta)` weights; codecs
+    with a fused kernel (int8, int4) take it without decoding, others
+    decode per client (one vmapped map) into the dense `ncv_weighted_sum`
+    kernel.  The sharded-cohort variant lives in fed/sharded.py (same
+    `codec.weighted_sum` entry point, locally-sliced weights + one psum).
     """
     if use_pallas is None:
         from repro.kernels import default_interpret
         use_pallas = not default_interpret()
-    fused = codec.fused_aggregate(wire, n_samples, beta, use_pallas=use_pallas)
-    if fused is not None:
-        return fused
-    flat = jax.vmap(codec.decode)(wire)            # (cohort, N) f32
-    if use_pallas:
-        from repro.kernels.rloo.rloo import ncv_aggregate
-        return ncv_aggregate(flat, n_samples, beta, interpret=False)
-    from repro.kernels.rloo.ref import ncv_aggregate_ref
-    return ncv_aggregate_ref(flat, n_samples, beta)
+    from repro.kernels.rloo.rloo import ncv_coefficients
+    w = ncv_coefficients(n_samples, beta)
+    return codec.weighted_sum(wire, w, use_pallas=use_pallas)
 
 
 def decode_stack(codec: Codec, wire, spec: FlatSpec):

@@ -23,7 +23,13 @@ Codecs (DESIGN.md §5):
   codec is unbiased and the Theorem-level unbiasedness of the NCV
   estimator survives compression (DESIGN.md §5.2).  The (cohort, N_packed)
   int8 stack feeds the fused dequantize-aggregate kernel
-  (kernels.rloo.ncv_aggregate_q) without ever materializing f32 uploads.
+  (kernels.rloo.ncv_weighted_sum_q) without ever materializing f32 uploads.
+* ``int4``     — same chunked-scale stochastic rounding into 4-bit
+  two's-complement codes in [-7, 7] (scale = max|x|/7), packed two per
+  byte in the split-halves layout (~0.5 bytes/param).  Unbiased for the
+  same reason as int8, and the packed (cohort, N_packed/2) uint8 stack is
+  unpacked *inside* the fused kernel (ncv_weighted_sum_q4) — 8x less
+  server HBM traffic than the f32 path.
 * ``topk``     — magnitude top-k sparsification with per-client
   error-feedback residuals (8 bytes/kept param).  Biased per round, but the
   EF residual re-injects the dropped mass next round; the per-step
@@ -63,15 +69,24 @@ class Codec:
         """Real bytes a client puts on the wire per round."""
         return 4 * self.n
 
-    # -- optional fused server path -----------------------------------------
-    def fused_aggregate(self, wire, n_samples, beta, *, use_pallas):
-        """Aggregate directly from the stacked wire (leaves (cohort, ...)).
+    # -- server-side weighted reduction -------------------------------------
+    def weighted_sum(self, wire, w, *, use_pallas):
+        """sum_u w_u g_u straight off the stacked wire (leaves (cohort, ...)).
 
-        Returns (agg (N,), ||agg||^2) or None when the codec has no fused
-        path (the caller then decodes per client and runs `ncv_aggregate`).
+        Returns (vec (N,) f32, ||vec||^2).  The weights are taken as-is:
+        single-device callers pass `ncv_coefficients(n_samples, beta)`
+        (comm.aggregate_wire); sharded callers pass their local slice of the
+        globally-computed coefficients and psum the partial sums afterwards
+        (fed/sharded.py, DESIGN.md §6).  Codecs with a fused kernel (int8,
+        int4) aggregate without decoding; this base implementation decodes
+        per client (one vmapped map) into the dense `ncv_weighted_sum`.
         """
-        del wire, n_samples, beta, use_pallas
-        return None
+        flat = jax.vmap(self.decode)(wire)             # (cohort, N) f32
+        if use_pallas:
+            from repro.kernels.rloo.rloo import ncv_weighted_sum
+            return ncv_weighted_sum(flat, w, interpret=False)
+        from repro.kernels.rloo.ref import ncv_weighted_sum_ref
+        return ncv_weighted_sum_ref(flat, w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +106,7 @@ class Int8Codec(Codec):
     """Chunked-scale int8 with unbiased stochastic rounding."""
     chunk: int = 512
     name = "int8"
+    qmax = 127.0                 # symmetric code range [-qmax, qmax]
 
     @property
     def n_chunks(self) -> int:
@@ -100,17 +116,25 @@ class Int8Codec(Codec):
     def n_padded(self) -> int:
         return self.n_chunks * self.chunk
 
-    def encode(self, vec, state=None, key=None):
-        del state
+    def _chunk_quantize(self, vec, key):
+        """Shared chunked stochastic-rounding front end: pad to the chunk
+        grid, one scale = max|x|/qmax per chunk, q = floor(x/scale + u)
+        with u ~ U[0,1) so E[q * scale] = x (unbiased).  Returns
+        (q int32 (C, chunk), scales (C,))."""
         x = jnp.pad(vec.astype(jnp.float32), (0, self.n_padded - self.n))
         xc = x.reshape(self.n_chunks, self.chunk)
-        scales = jnp.max(jnp.abs(xc), axis=1) / 127.0
+        scales = jnp.max(jnp.abs(xc), axis=1) / self.qmax
         scales = jnp.maximum(scales, 1e-12)
         y = xc / scales[:, None]
-        # floor(y + u), u ~ U[0,1): E = y, so E[q * scale] = x (unbiased).
         u = jax.random.uniform(key, y.shape)
-        q = jnp.clip(jnp.floor(y + u), -127.0, 127.0).astype(jnp.int8)
-        return dict(q=q.reshape(self.n_padded), s=scales), None
+        q = jnp.clip(jnp.floor(y + u), -self.qmax, self.qmax)
+        return q.astype(jnp.int32), scales
+
+    def encode(self, vec, state=None, key=None):
+        del state
+        q, scales = self._chunk_quantize(vec, key)
+        return dict(q=q.astype(jnp.int8).reshape(self.n_padded),
+                    s=scales), None
 
     def decode(self, wire):
         from repro.kernels.rloo.ref import dequantize_int8_ref
@@ -120,16 +144,60 @@ class Int8Codec(Codec):
     def bytes_per_client(self) -> int:
         return self.n + 4 * self.n_chunks
 
-    def fused_aggregate(self, wire, n_samples, beta, *, use_pallas):
+    def weighted_sum(self, wire, w, *, use_pallas):
         q, scales = wire["q"], wire["s"]          # (M, N_packed), (M, C)
         if use_pallas:
-            from repro.kernels.rloo.rloo import ncv_aggregate_q
-            agg, nrm = ncv_aggregate_q(q, scales, n_samples, beta,
-                                       chunk=self.chunk, interpret=False)
+            from repro.kernels.rloo.rloo import ncv_weighted_sum_q
+            agg, nrm = ncv_weighted_sum_q(q, scales, w, chunk=self.chunk,
+                                          interpret=False)
         else:
-            from repro.kernels.rloo.ref import ncv_aggregate_q_ref
-            agg, nrm = ncv_aggregate_q_ref(q, scales, n_samples, beta,
-                                           chunk=self.chunk)
+            from repro.kernels.rloo.ref import ncv_weighted_sum_q_ref
+            agg, nrm = ncv_weighted_sum_q_ref(q, scales, w, chunk=self.chunk)
+        return agg[:self.n], nrm
+
+
+@dataclasses.dataclass(frozen=True)
+class Int4Codec(Int8Codec):
+    """Chunked-scale packed int4 with unbiased stochastic rounding.
+
+    Same chunked quantizer as int8 with qmax = 7 (4-bit two's complement
+    restricted to the symmetric range [-7, 7]), packed two codes per byte
+    in the split-halves layout: within each chunk, byte j carries value j
+    in its low nibble and value j + chunk/2 in its high nibble, so the
+    fused kernel unpacks with a lane concatenation instead of an
+    interleave (kernels/rloo/rloo.py::_ncv_agg_q4_kernel).
+    """
+    name = "int4"
+    qmax = 7.0
+
+    def encode(self, vec, state=None, key=None):
+        del state
+        q, scales = self._chunk_quantize(vec, key)
+        half = self.chunk // 2
+        qp = ((q[:, :half] & 0xF) | ((q[:, half:] & 0xF) << 4))
+        return dict(q=qp.astype(jnp.uint8).reshape(self.n_padded // 2),
+                    s=scales), None
+
+    def decode(self, wire):
+        from repro.kernels.rloo.ref import dequantize_int4_ref
+        return dequantize_int4_ref(wire["q"], wire["s"],
+                                   chunk=self.chunk)[..., :self.n]
+
+    def bytes_per_client(self) -> int:
+        # real wire payload: the padded tail bytes need not be transmitted
+        # (mirrors int8, which counts n body bytes, not n_padded)
+        return -(-self.n // 2) + 4 * self.n_chunks
+
+    def weighted_sum(self, wire, w, *, use_pallas):
+        qp, scales = wire["q"], wire["s"]        # (M, N_packed/2), (M, C)
+        if use_pallas:
+            from repro.kernels.rloo.rloo import ncv_weighted_sum_q4
+            agg, nrm = ncv_weighted_sum_q4(qp, scales, w, chunk=self.chunk,
+                                           interpret=False)
+        else:
+            from repro.kernels.rloo.ref import ncv_weighted_sum_q4_ref
+            agg, nrm = ncv_weighted_sum_q4_ref(qp, scales, w,
+                                               chunk=self.chunk)
         return agg[:self.n], nrm
 
 
@@ -173,6 +241,7 @@ CODECS = {
     "identity": Codec,
     "bf16": BF16Codec,
     "int8": Int8Codec,
+    "int4": Int4Codec,
     "topk": TopKCodec,
 }
 

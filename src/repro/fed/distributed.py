@@ -1,15 +1,21 @@
 """Mesh-distributed FedNCV: the faithful per-client algorithm under
 `jax.shard_map` — clients live on the ("pod","data") mesh axes, each shard
 computes its own microbatch gradients, RLOO statistics and message locally,
-and the server side runs as collectives:
+and the server side runs as collectives.  Eq. 10-12 collapses to ONE
+parameter-sized all-reduce (the same volume FedAvg pays):
 
-    gbar_w  = psum_u (n_u/n) * msg_u                 (ONE weighted all-reduce)
-    c_u     = (n * gbar_w - n_u * msg_u)/(n - n_u)   (local rank correction)
-    g       = psum_u p_u (msg_u - beta * c_u)        (second all-reduce*)
+    n   = psum_u n_u                  (scalar)
+    t   = psum_u n_u / (n - n_u)      (scalar)
+    w_u = (1 - beta t) p_u + beta p_u n_u/(n - n_u)   (ncv_coefficients)
+    g   = psum_u w_u * msg_u          (the single parameter-sized psum)
 
-(*) algebraically g also reduces to gbar_w-based closed form; we keep the
-second psum explicit so unequal client weights and beta sweeps are exact —
-it is a parameter-sized all-reduce, the same volume FedAvg pays once.
+which is algebraically identical to the two-pass form (weighted mean
+gbar_w + per-client LOO correction + second reduce) for arbitrary client
+weights and beta — expanding sum_u p_u (msg_u - beta c_{V\\u}) and
+collecting msg_u terms gives exactly the `ncv_coefficients` weights.  PR 3
+replaced the explicit two-psum form: half the collective volume per round,
+and the same weights the sharded-cohort simulator path uses
+(fed/sharded.py, DESIGN.md §6).
 
 This is the validation path for the per-client semantics (the pure-GSPMD
 train step in launch/train.py is the big-model path where the equal-weight
@@ -26,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import control_variates as cv
 from repro.fed.methods import MethodConfig, Task, _microbatch_grads
+from repro.fed.sharded import shard_map_compat
 from repro.utils.tree_math import ravel, tree_norm_sq, unravel
 
 
@@ -73,13 +80,15 @@ def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float,
             wire, ef_new = codec.encode(vec, ef_u, key_u)
             msg = unravel(codec.decode(wire), vspec)
 
-        # ---- server side (lines 9-13) as collectives ----
+        # ---- server side (lines 9-13): one weighted all-reduce ----
+        # w_u from two scalar psums (module docstring); the estimator is
+        # then the single parameter-sized psum g = psum_u w_u msg_u.
         n = jax.lax.psum(n_u_local, ca)
+        t = jax.lax.psum(n_u_local / (n - n_u_local), ca)
         p_u = n_u_local / n
-        gbar_w = jax.tree.map(lambda m: jax.lax.psum(m * p_u, ca), msg)
-        c_u = cv.server_loo_from_mean(gbar_w, msg, n_u_local, n)
-        g_prime = jax.tree.map(lambda m, c: m - mc.ncv_beta * c, msg, c_u)
-        agg = jax.tree.map(lambda gp: jax.lax.psum(p_u * gp, ca), g_prime)
+        w_u = (1.0 - mc.ncv_beta * t) * p_u \
+            + mc.ncv_beta * p_u * n_u_local / (n - n_u_local)
+        agg = jax.tree.map(lambda m: jax.lax.psum(w_u * m, ca), msg)
 
         new_params = jax.tree.map(
             lambda p, g: (p - server_lr * g).astype(p.dtype), params, agg)
@@ -106,15 +115,6 @@ def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float,
     if stateful:
         in_specs += (cspec,)                      # error-feedback residuals
 
-    if hasattr(jax, "shard_map"):                  # jax >= 0.6
-        round_fn = jax.shard_map(
-            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )
-    else:                                          # jax 0.4.x
-        from jax.experimental.shard_map import shard_map
-        round_fn = shard_map(
-            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=False,
-        )
+    round_fn = shard_map_compat(body, mesh, in_specs=in_specs,
+                                out_specs=out_specs)
     return jax.jit(round_fn)

@@ -139,11 +139,16 @@ def fedavg_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
 
 
 def fedavg_server(mc, task, params, grads_stacked, n_samples, sstate, lr,
-                  codec=None, spec=None):
+                  codec=None, spec=None, agg=None):
     """`codec`/`spec` switch the server onto the compressed wire:
     `grads_stacked` is then the stacked wire dict and the aggregate is taken
-    by fused dequantize-aggregate (or per-client decode) over it."""
-    agg, agg_norm = _aggregate(grads_stacked, n_samples, 0.0, codec, spec)
+    by fused dequantize-aggregate (or per-client decode) over it.  `agg`
+    (an (aggregate pytree, ||agg||^2) pair) bypasses the reduction entirely
+    — the sharded-cohort path precomputes it inside its shard_map region
+    (fed/sharded.py) and `grads_stacked` may then be None."""
+    if agg is None:
+        agg = _aggregate(grads_stacked, n_samples, 0.0, codec, spec)
+    agg, agg_norm = agg
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
     return params, sstate, dict(agg_norm=agg_norm)
 
@@ -245,16 +250,19 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
 
 
 def fedncv_server(mc: MethodConfig, task, params, grads_stacked, n_samples,
-                  aux, sstate, lr, codec=None, spec=None):
+                  aux, sstate, lr, codec=None, spec=None, agg=None):
     """Server side of Algorithm 1 (lines 9-13): networked aggregation (Eq.
     10-12, one fused pass over the flat cohort stack) + alpha_u adaptation
     (line 12, or Prop. 2 closed form — M scalars, done outside the kernel).
 
     With a `codec`, `grads_stacked` is the stacked wire and the aggregation
     runs directly on the compressed uploads (fused dequantize-aggregate for
-    int8); the alpha statistics ride in `aux` uncompressed (4 scalars)."""
-    agg, agg_norm = _aggregate(grads_stacked, n_samples, mc.ncv_beta, codec,
-                               spec)
+    int8); the alpha statistics ride in `aux` uncompressed (4 scalars).
+    A precomputed `agg` pair short-circuits the reduction (sharded path,
+    see `fedavg_server`)."""
+    if agg is None:
+        agg = _aggregate(grads_stacked, n_samples, mc.ncv_beta, codec, spec)
+    agg, agg_norm = agg
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
 
     stats = cv.ClientCVStats(None, aux["k"], aux["mean_norm_sq"],

@@ -1,0 +1,113 @@
+"""Sharded-cohort fused aggregation (DESIGN.md §6).
+
+The FedNCV server estimator (Eq. 10-12) collapses to one weighted sum
+g = sum_u w_u g_u over the (cohort, N) message stack, so its cost is pure
+memory bandwidth.  This module shards that stack along the cohort dimension
+over a 1-d device mesh: each device runs the fused weighted-sum kernel
+(`ncv_weighted_sum` / the codec's fused dequantize variant) over *its local
+slice only* — one HBM pass over 1/D of the stack — and the partial sums
+meet in a single parameter-sized `psum`.
+
+Exactness with unequal client weights: the coefficients w_u depend on
+global scalar statistics of the sample counts (n = sum_v n_v and
+t = sum_v n_v/(n - n_v)), so the (cohort,)-sized counts are all-gathered
+(a few scalars — negligible next to the N-sized payload) and every device
+computes the exact global coefficient vector, then slices its own block.
+The returned aggregate is therefore bitwise the same estimator as the
+single-device `ncv_aggregate`, up to f32 summation order.
+
+Padding rule: when cohort % D != 0 the caller pads the stacks with
+zero-weight rows (`pad_cohort`).  A padded slot carries n_u = 0, which
+makes w_u = 0 *exactly* (see `ncv_coefficients`) and contributes nothing
+to n or t — padding changes neither the estimator nor the stats.
+
+Every function in this module that takes an `axis_name` must run inside
+`jax.shard_map` (or `shard_map`-like manual-collective context) over that
+axis; `fed/simulator.py` wraps the cohort section of its round in exactly
+such a region when constructed with a mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rloo.rloo import ncv_coefficients
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """`jax.shard_map` (jax >= 0.6) / `jax.experimental.shard_map` (0.4.x)
+    with replication checking off — the one API difference between the two
+    is the name of that flag."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def pad_cohort(tree, n_devices: int):
+    """Pad every leaf's leading (cohort) dim to a multiple of n_devices.
+
+    Padded rows are zeros — combined with n_u = 0 sample counts they are
+    exact no-ops for the aggregation (module docstring).  Returns the tree
+    unchanged when the cohort already divides.
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree
+    c = leaves[0].shape[0]
+    pad = (-c) % n_devices
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)), tree)
+
+
+def padded_cohort_size(cohort: int, n_devices: int) -> int:
+    return cohort + ((-cohort) % n_devices)
+
+
+def local_weights(n_local, beta, axis_name):
+    """Exact per-client coefficients for this device's cohort slice.
+
+    Runs inside shard_map: all-gathers the (cohort,) sample counts (scalar
+    traffic), computes the *global* `ncv_coefficients` so unequal client
+    weights stay exact, and slices the local block by `axis_index`.
+    """
+    n_all = jax.lax.all_gather(n_local, axis_name, tiled=True)   # (C_p,)
+    w_all = ncv_coefficients(n_all, beta)
+    i = jax.lax.axis_index(axis_name)
+    c_loc = n_local.shape[0]
+    return jax.lax.dynamic_slice_in_dim(w_all, i * c_loc, c_loc)
+
+
+def sharded_aggregate(stack_local, n_local, beta=1.0, *, axis_name: str,
+                      codec=None, use_pallas: bool | None = None):
+    """Eq. 10-12 over a cohort-sharded stack: local fused pass + one psum.
+
+    stack_local: this device's slice — a dense (C_loc, N) f32 array when
+    `codec` is None, else the codec's stacked wire dict with (C_loc, ...)
+    leaves.  n_local: (C_loc,) sample counts (0 for padded slots).
+    Returns (agg (N,) f32, ||agg||^2), replicated across the axis.  The
+    norm is computed from the psum'd aggregate (partial norms do not add
+    across shards — cross terms), costing one extra N-read.
+    """
+    if use_pallas is None:
+        from repro.kernels import default_interpret
+        use_pallas = not default_interpret()
+    w_local = local_weights(n_local, beta, axis_name)
+    if codec is None or codec.name == "identity":
+        g_local = stack_local if not isinstance(stack_local, dict) else \
+            stack_local["v"].astype(jnp.float32)
+        if use_pallas:
+            from repro.kernels.rloo.rloo import ncv_weighted_sum
+            partial, _ = ncv_weighted_sum(g_local, w_local, interpret=False)
+        else:
+            from repro.kernels.rloo.ref import ncv_weighted_sum_ref
+            partial, _ = ncv_weighted_sum_ref(g_local, w_local)
+    else:
+        partial, _ = codec.weighted_sum(stack_local, w_local,
+                                        use_pallas=use_pallas)
+    agg = jax.lax.psum(partial, axis_name)
+    return agg, jnp.sum(agg * agg)

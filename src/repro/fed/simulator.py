@@ -16,9 +16,27 @@ true shard size) instead of one trace per client.
 
 `FLConfig.codec` selects the client->server wire format (repro.comm): the
 uploaded gradients leave each client compressed, the servers aggregate
-straight off the wire (fused dequantize-aggregate for int8), per-client
+straight off the wire (fused dequantize-aggregate for int8/int4), per-client
 codec state (top-k error-feedback residuals) is carried like `alphas`,
 and every round reports `bytes_up` (DESIGN.md §5).
+
+Multi-device (DESIGN.md §6): constructed with a 1-d `mesh`
+(`sharding.cohort_mesh()`), the cohort section of the round — microbatch
+gather, vmapped client passes, wire encode, and the fused Eq. 10-12
+reduction — runs inside a `shard_map` over the cohort dimension: each
+device touches only its 1/D slice of the (cohort, ...) stacks and the
+partial weighted sums meet in a single psum (fed/sharded.py).  Cohorts
+that do not divide the device count are padded with zero-weight slots
+(exact no-ops).  Per-client EF residual storage is kept sharded over the
+mesh when M divides the device count.
+
+Async rounds (DESIGN.md §6): `FLConfig.staleness = 1` double-buffers the
+cohort — round r's client passes are issued against the params that round
+r-1's server update has not yet touched, and that server update completes
+in the same scan step, giving one-round-staleness overlap.  Round 1 is the
+pipeline bubble (no update is applied; its diagnostics row reads zero).
+Bounded staleness: every applied update is exactly one round old —
+`theta_r = server(theta_{r-1}, clients(theta_{r-2}, cohort_{r-1}))`.
 
 The same `methods.py` client/server functions are reused by the
 mesh-distributed runtime (fed/distributed.py), so what this simulator
@@ -31,11 +49,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import comm
 from repro.fed import methods as M
+from repro.fed import sharded
 from repro.utils.tree_math import (
-    flat_spec, tree_axpy, tree_bytes, tree_zeros_like,
+    flat_spec, ravel_stack, tree_axpy, tree_bytes, tree_zeros_like, unravel,
 )
 
 CLIENT_FNS = {
@@ -62,15 +82,36 @@ class FLConfig:
     server_lr: float = 1.0
     codec: str = "identity"           # client->server wire format (repro.comm)
     codec_opts: dict = dataclasses.field(default_factory=dict)
+    staleness: int = 0                # 0 = sync; 1 = one-round-stale overlap
     mc: M.MethodConfig = dataclasses.field(
         default_factory=lambda: M.MethodConfig(name="fedncv"))
 
 
+def _tree_where(flag, new, old):
+    """Elementwise select over a pytree: `new` where flag > 0, else `old`."""
+    return jax.tree.map(lambda a, b: jnp.where(flag > 0, a, b), new, old)
+
+
 class Simulator:
-    def __init__(self, task: M.Task, params, data, fl: FLConfig, seed=0):
+    def __init__(self, task: M.Task, params, data, fl: FLConfig, seed=0,
+                 mesh=None):
         """data: dict(images (N,...), labels (N,), client_idx (M, n_max) int32
-        padded with -1, client_sizes (M,))."""
+        padded with -1, client_sizes (M,)).
+
+        mesh: optional 1-d device mesh (`sharding.cohort_mesh()`): the
+        cohort dimension of the round is shard_map'd over it (DESIGN.md §6).
+        """
+        assert fl.staleness in (0, 1), fl.staleness
         self.task, self.fl = task, fl
+        self.mesh = mesh
+        if mesh is not None:
+            assert len(mesh.axis_names) == 1, mesh.axis_names
+            self.caxis = mesh.axis_names[0]
+            self.n_devices = int(np.prod(list(mesh.shape.values())))
+            rep = NamedSharding(mesh, P())
+            params = jax.device_put(params, rep)
+            data = {k: jax.device_put(jnp.asarray(v), rep)
+                    for k, v in data.items()}
         self.params = params
         self.data = {k: jnp.asarray(v) for k, v in data.items()}
         self.base_key = jax.random.PRNGKey(seed)
@@ -80,6 +121,8 @@ class Simulator:
         self._grad_spec = flat_spec(params, stacked=False)
         self.codec = comm.get_codec(fl.codec, n=self._grad_spec.n,
                                     **fl.codec_opts)
+        from repro.kernels import default_interpret
+        self._use_pallas = not default_interpret()
 
         # per-client state
         if fl.method == "scaffold":
@@ -97,15 +140,27 @@ class Simulator:
                 jnp.arange(m))
             self.h_sum = tree_zeros_like(params)
         if self.codec.stateful:
-            # per-client error-feedback residuals, carried like `alphas`
+            # per-client error-feedback residuals, carried like `alphas`;
+            # under a mesh the (M, N) buffer is stored sharded over clients
+            # (scatter/gather at the cohort indices is resolved by GSPMD)
             self.ef = jax.vmap(lambda _: self.codec.init_state())(
                 jnp.arange(m))
+            if mesh is not None and m % self.n_devices == 0:
+                self.ef = jax.device_put(
+                    self.ef, NamedSharding(mesh, P(self.caxis)))
+
+        # async pipeline buffers (round in flight; None until first round)
+        self._pending = None
+        self._valid = jnp.float32(0.0)
 
         self.round_idx = 0
         self._round_jit = jax.jit(self._round_core)
         # donate params + state: the scanned buffers are consumed in place,
         # multi-round driving never copies the model between rounds.
         self._scan_jit = jax.jit(self._scan_rounds, donate_argnums=(0, 1))
+        self._round_async_jit = jax.jit(self._round_async_core)
+        self._scan_async_jit = jax.jit(self._scan_rounds_async,
+                                       donate_argnums=(0, 1, 2))
         self._eval_jit = jax.jit(self._eval_core,
                                  static_argnames=("personalize_steps",))
 
@@ -143,12 +198,13 @@ class Simulator:
     # ------------------------------------------------------------------
     # one round, fully on device
     # ------------------------------------------------------------------
-    def _draw_cohort(self, key):
-        """Device-side data selection: cohort ids + (cohort,K,b,...) batches.
+    def _draw_cohort_sel(self, key):
+        """Device-side cohort + sample selection (indices only, no gather).
 
         Cohort clients are drawn without replacement; microbatch samples are
         drawn uniformly (with replacement) from each client's shard via a
-        padded index-table gather — no host round-trip.
+        padded index-table lookup — no host round-trip.  Returns (idx
+        (cohort,), sel (cohort, K, b) dataset rows, sizes (cohort,)).
         """
         fl, data = self.fl, self.data
         kc, kp = jax.random.split(key)
@@ -162,9 +218,12 @@ class Simulator:
         sel = jnp.take_along_axis(pool, jnp.maximum(pos, 0), axis=1)
         sel = jnp.maximum(sel, 0).reshape(fl.cohort, fl.k_micro,
                                           fl.micro_batch)
-        batch = {k: jnp.take(v, sel, axis=0) for k, v in data.items()
-                 if k not in ("client_idx", "client_sizes")}
-        return idx, batch, sizes
+        return idx, sel, sizes
+
+    def _gather_batch(self, data, sel):
+        """sel (cohort', K, b) dataset rows -> batch pytree (cohort', K, b, ...)."""
+        return {k: jnp.take(v, sel, axis=0) for k, v in data.items()
+                if k not in ("client_idx", "client_sizes")}
 
     def _cohort_cstates(self, state, idx):
         fl = self.fl
@@ -178,34 +237,147 @@ class Simulator:
             cs = dict(personal=jax.tree.map(lambda x: x[idx],
                                             state["personal"]))
         else:
-            cs = dict(dummy=jnp.zeros(fl.cohort))
+            cs = dict(dummy=jnp.zeros(idx.shape[0]))
         if self.codec.stateful:
             cs["ef"] = state["ef"][idx]
         return cs
 
-    def _round_core(self, params, state, key, r):
-        """params, method state, PRNG key, 1-based round number -> updated
-        (params, state, scalar diagnostics).  Pure; jit/scan-able."""
-        task, fl, codec = self.task, self.fl, self.codec
-        client_fn, mc = CLIENT_FNS[fl.method], fl.mc
+    @staticmethod
+    def _slot_keys(key, n):
+        """Per-cohort-slot PRNG keys by fold_in of the slot index: slot u's
+        key is independent of how many *padding* slots follow it, so mesh
+        and single-device runs see identical client/codec randomness."""
+        return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+    def _client_fn(self):
+        client_fn = CLIENT_FNS[self.fl.method]
         # non-identity codecs compress the upload at the end of the client fn
         # and the servers aggregate straight off the wire (DESIGN.md §5)
-        use_wire = codec.name != "identity"
-        if use_wire:
-            client_fn = M.with_codec(client_fn, codec)
+        if self.codec.name != "identity":
+            client_fn = M.with_codec(client_fn, self.codec)
+        return client_fn
+
+    def _client_section(self, params, state, key):
+        """Cohort draw + client passes (+ wire encode [+ sharded reduce]).
+
+        Returns the round's "pending" dict: idx/sizes/cstates/aux with
+        exact (cohort,) leading dims, plus either the stacked uploads
+        (`grads`) or — in mesh mode, for aggregate-then-correct methods —
+        the already-reduced flat aggregate (`agg_vec`, `agg_norm`) computed
+        by the sharded fused path.  `_server_section` consumes this dict;
+        the async pipeline carries it across rounds.
+        """
+        if self.mesh is None:
+            return self._client_section_local(params, state, key)
+        return self._client_section_sharded(params, state, key)
+
+    def _client_section_local(self, params, state, key):
+        task, fl = self.task, self.fl
+        client_fn, mc = self._client_fn(), self.fl.mc
         kd, kk = jax.random.split(key)
-        idx, batches, sizes = self._draw_cohort(kd)
+        idx, sel, sizes = self._draw_cohort_sel(kd)
+        batches = self._gather_batch(self.data, sel)
         cstates = self._cohort_cstates(state, idx)
-        keys = jax.random.split(kk, fl.cohort)
+        keys = self._slot_keys(kk, fl.cohort)
         outs = jax.vmap(
             lambda cs, b, k: client_fn(mc, task, params, cs, b, k)
         )(cstates, batches, keys)
-        grads, new_cstates, aux = outs.grad, outs.cstate, outs.aux
+        return dict(idx=idx, sizes=sizes, grads=outs.grad,
+                    cstates=outs.cstate, aux=outs.aux)
+
+    def _client_section_sharded(self, params, state, key):
+        """Mesh mode: the cohort work runs in a shard_map over the cohort
+        dim — each device gathers, trains and encodes only its local slice
+        of the (padded) cohort, and the Eq. 10-12 reduction is the sharded
+        fused path (local kernel pass + one psum, fed/sharded.py)."""
+        task, fl, codec = self.task, self.fl, self.codec
+        client_fn, mc = self._client_fn(), self.fl.mc
+        axis, dcount = self.caxis, self.n_devices
+        use_wire = codec.name != "identity"
+        # fedncv+ updates per-client control variates h_u at the server:
+        # it needs the dense per-client uploads, not just the aggregate
+        agg_path = fl.method != "fedncv+"
+        beta = mc.ncv_beta if fl.method == "fedncv" else 0.0
+
+        kd, kk = jax.random.split(key)
+        idx, sel, sizes = self._draw_cohort_sel(kd)
+        cp = sharded.padded_cohort_size(fl.cohort, dcount)
+        pad = cp - fl.cohort
+        # zero-weight padding slots (n_u = 0 -> w_u = 0 exactly, §6): the
+        # padded rows alias client 0's pool but contribute nothing
+        idx_p = jnp.pad(idx, (0, pad))
+        sel_p = sharded.pad_cohort(sel, dcount)
+        sizes_p = jnp.pad(sizes, (0, pad))
+        cstates_p = self._cohort_cstates(state, idx_p)
+        keys_p = self._slot_keys(kk, cp)
+
+        def body(params, data, cstates_l, sel_l, sizes_l, keys_l):
+            batch = self._gather_batch(data, sel_l)
+            outs = jax.vmap(
+                lambda cs, b, k: client_fn(mc, task, params, cs, b, k)
+            )(cstates_l, batch, keys_l)
+            ret = dict(cstates=outs.cstate, aux=outs.aux)
+            if agg_path:
+                stack_l = outs.grad
+                if not use_wire:
+                    stack_l, _ = ravel_stack(stack_l)
+                ret["agg_vec"], ret["agg_norm"] = sharded.sharded_aggregate(
+                    stack_l, sizes_l, beta, axis_name=axis,
+                    codec=codec if use_wire else None,
+                    use_pallas=self._use_pallas)
+            else:
+                ret["grads"] = outs.grad
+            return ret
+
+        cspec, rspec = P(axis), P()
+        out_specs = dict(cstates=cspec, aux=cspec)
+        if agg_path:
+            out_specs["agg_vec"] = rspec
+            out_specs["agg_norm"] = rspec
+        else:
+            out_specs["grads"] = cspec
+        fn = sharded.shard_map_compat(
+            body, self.mesh,
+            in_specs=(rspec, rspec, cspec, cspec, cspec, cspec),
+            out_specs=out_specs)
+        out = fn(params, self.data, cstates_p, sel_p, sizes_p, keys_p)
+
+        # strip the padding slots so the pending dict always carries exact
+        # (cohort,) leading dims (scatter at padded idx would corrupt
+        # client 0's state)
+        unpad = (lambda t: jax.tree.map(lambda x: x[:fl.cohort], t)) \
+            if pad else (lambda t: t)
+        pending = dict(idx=idx, sizes=sizes, cstates=unpad(out["cstates"]),
+                       aux=unpad(out["aux"]))
+        if agg_path:
+            pending["agg_vec"] = out["agg_vec"]
+            pending["agg_norm"] = out["agg_norm"]
+        else:
+            pending["grads"] = unpad(out["grads"])
+        return pending
+
+    def _server_section(self, params, state, pending, r):
+        """Per-method server update + per-client state scatter from a
+        pending client section.  Pure; jit/scan-able."""
+        task, fl, codec = self.task, self.fl, self.codec
+        mc = fl.mc
+        use_wire = codec.name != "identity"
+        idx, sizes = pending["idx"], pending["sizes"]
+        grads, aux = pending.get("grads"), pending["aux"]
+        new_cstates = pending["cstates"]
 
         new_state = dict(state)
         if codec.stateful:
             new_state["ef"] = state["ef"].at[idx].set(new_cstates["ef"])
+            if self.mesh is not None and \
+                    state["ef"].shape[0] % self.n_devices == 0:
+                new_state["ef"] = jax.lax.with_sharding_constraint(
+                    new_state["ef"],
+                    NamedSharding(self.mesh, P(self.caxis)))
         wire_kw = dict(codec=codec, spec=self._grad_spec) if use_wire else {}
+        if "agg_vec" in pending:          # sharded path precomputed Eq.10-12
+            wire_kw = dict(agg=(unravel(pending["agg_vec"], self._grad_spec),
+                                pending["agg_norm"]))
         if fl.method == "fedncv":
             params, _, diag = M.fedncv_server(
                 mc, task, params, grads, sizes, aux, dict(), fl.server_lr,
@@ -250,27 +422,78 @@ class Simulator:
             fl.cohort * codec.bytes_per_client() + tree_bytes(aux))
         return params, new_state, diag
 
+    def _round_core(self, params, state, key, r):
+        """params, method state, PRNG key, 1-based round number -> updated
+        (params, state, scalar diagnostics).  Pure; jit/scan-able."""
+        pending = self._client_section(params, state, key)
+        return self._server_section(params, state, pending, r)
+
+    def _round_async_core(self, params, state, pending, valid, key, r):
+        """One async pipeline step: issue round r's client passes against
+        the current (stale) params while round r-1's server update and
+        state refresh complete.  The two halves have no data dependency, so
+        XLA overlaps them; `valid` gates the warmup bubble (round 1 applies
+        no update and reports a zero diagnostics row)."""
+        new_pending = self._client_section(params, state, key)
+        params2, state2, diag = self._server_section(params, state, pending,
+                                                     r)
+        params = _tree_where(valid, params2, params)
+        state = _tree_where(valid, state2, state)
+        diag = {k: jnp.where(valid > 0, v, jnp.zeros_like(v))
+                for k, v in diag.items()}
+        return params, state, new_pending, jnp.float32(1.0), diag
+
     def _scan_rounds(self, params, state, keys, rs):
         def body(carry, kr):
             p, st = carry
             p, st, diag = self._round_core(p, st, kr[0], kr[1])
             return (p, st), diag
+        (params, state), diags = jax.lax.scan(body, (params, state),
+                                              (keys, rs),
+                                              unroll=self._scan_unroll(keys))
+        return params, state, diags
+
+    def _scan_rounds_async(self, params, state, pending, valid, keys, rs):
+        def body(carry, kr):
+            p, st, pend, v = carry
+            p, st, pend, v, diag = self._round_async_core(p, st, pend, v,
+                                                          kr[0], kr[1])
+            return (p, st, pend, v), diag
+        (params, state, pending, valid), diags = jax.lax.scan(
+            body, (params, state, pending, valid), (keys, rs),
+            unroll=self._scan_unroll(keys))
+        return params, state, pending, valid, diags
+
+    def _scan_unroll(self, keys):
         # XLA:CPU compiles while-loop bodies without the fusion/parallelism
         # the straight-line version gets (~3-4x slower per round here), so
         # unroll the scan on CPU; TPU keeps the rolled loop (cheap compile).
         n = keys.shape[0]
-        unroll = max(1, min(n, 16)) if jax.default_backend() == "cpu" else 1
-        (params, state), diags = jax.lax.scan(body, (params, state),
-                                              (keys, rs), unroll=unroll)
-        return params, state, diags
+        return max(1, min(n, 16)) if jax.default_backend() == "cpu" else 1
+
+    def _zero_pending(self):
+        """All-zero pending buffers for the async pipeline's first round
+        (the warmup bubble; gated off by `valid`, never applied)."""
+        shapes = jax.eval_shape(self._client_section, self.params,
+                                self._get_state(), self.base_key)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
     # ------------------------------------------------------------------
     def run_round(self, key=None):
         if key is None:
             key = jax.random.fold_in(self.base_key, self.round_idx)
         self.round_idx += 1
-        params, state, diag = self._round_jit(
-            self.params, self._get_state(), key, jnp.int32(self.round_idx))
+        if self.fl.staleness:
+            if self._pending is None:
+                self._pending = self._zero_pending()
+            params, state, pending, valid, diag = self._round_async_jit(
+                self.params, self._get_state(), self._pending, self._valid,
+                key, jnp.int32(self.round_idx))
+            self._pending, self._valid = pending, valid
+        else:
+            params, state, diag = self._round_jit(
+                self.params, self._get_state(), key,
+                jnp.int32(self.round_idx))
         self.params = params
         self._set_state(state)
         return {k: float(v) for k, v in diag.items()}
@@ -279,7 +502,10 @@ class Simulator:
         """Scan n rounds in one dispatch (donated buffers, no host sync).
 
         Equivalent to n `run_round()` calls: same per-round keys, same
-        trajectory.  Returns stacked per-round scalar diagnostics.
+        trajectory.  Returns stacked per-round scalar diagnostics.  In
+        async mode (`staleness = 1`) the in-flight cohort is carried on the
+        simulator across calls, so chunked driving (`run_rounds(5)` x 4)
+        follows the same pipelined trajectory as one `run_rounds(20)`.
         """
         if n <= 0:
             return {}
@@ -290,8 +516,16 @@ class Simulator:
         else:
             keys = jax.random.split(key, n)
         rs = start + jnp.arange(1, n + 1, dtype=jnp.int32)
-        params, state, diags = self._scan_jit(
-            self.params, self._get_state(), keys, rs)
+        if self.fl.staleness:
+            if self._pending is None:
+                self._pending = self._zero_pending()
+            params, state, pending, valid, diags = self._scan_async_jit(
+                self.params, self._get_state(), self._pending, self._valid,
+                keys, rs)
+            self._pending, self._valid = pending, valid
+        else:
+            params, state, diags = self._scan_jit(
+                self.params, self._get_state(), keys, rs)
         self.round_idx += n
         self.params = params
         self._set_state(state)
@@ -338,6 +572,10 @@ class Simulator:
         rescale.  `chunk` bounds the gathered working set to
         (chunk, n_max, ...) so large-M simulations do not materialize an
         M-times copy of the eval set.
+
+        In async mode the in-flight round has not been applied yet: the
+        evaluated params are the ones every client pass issued so far has
+        seen (the bounded-staleness contract, DESIGN.md §6).
         """
         fl = self.fl
         pool = jnp.asarray(eval_data["client_idx"])          # (M, n_max)

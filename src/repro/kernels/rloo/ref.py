@@ -33,6 +33,13 @@ def ncv_aggregate_ref(g_flat, n_samples, beta=1.0):
     return agg, jnp.sum(agg * agg)
 
 
+def ncv_weighted_sum_ref(g_flat, w):
+    """Oracle of the weight-taking reduction: (sum_u w_u g_u, ||sum||^2)."""
+    g = g_flat.astype(jnp.float32)
+    agg = jnp.sum(jnp.asarray(w, jnp.float32)[:, None] * g, axis=0)
+    return agg, jnp.sum(agg * agg)
+
+
 def dequantize_int8_ref(q, scales, chunk=512):
     """Chunked-scale int8 dequantization (the comm `int8` wire format).
 
@@ -52,3 +59,49 @@ def ncv_aggregate_q_ref(q, scales, n_samples, beta=1.0, chunk=512):
     """
     return ncv_aggregate_ref(dequantize_int8_ref(q, scales, chunk=chunk),
                              n_samples, beta)
+
+
+def ncv_weighted_sum_q_ref(q, scales, w, chunk=512):
+    """Decode-then-weighted-sum oracle of `ncv_weighted_sum_q`."""
+    return ncv_weighted_sum_ref(dequantize_int8_ref(q, scales, chunk=chunk),
+                                w)
+
+
+def unpack_int4_ref(qp, chunk=512):
+    """Packed int4 (split-halves layout) -> int32 codes in [-8, 7].
+
+    qp: (..., C * chunk // 2) uint8.  Within each chunk, byte j carries
+    value j in its low nibble and value j + chunk/2 in its high nibble
+    (DESIGN.md §5.1), so unpacking is a concatenation per chunk.
+    """
+    lead = qp.shape[:-1]
+    c = qp.shape[-1] * 2 // chunk
+    b = qp.astype(jnp.int32).reshape(lead + (c, chunk // 2))
+    codes = jnp.concatenate([b & 0xF, (b >> 4) & 0xF], axis=-1)
+    codes = jnp.where(codes < 8, codes, codes - 16)
+    return codes.reshape(lead + (c * chunk,))
+
+
+def dequantize_int4_ref(qp, scales, chunk=512):
+    """Packed int4 + per-chunk scales -> f32 (the comm `int4` wire format).
+
+    qp: (..., C*chunk//2) uint8; scales: (..., C) f32.  Returns f32 of
+    shape (..., C*chunk).
+    """
+    lead = qp.shape[:-1]
+    c = scales.shape[-1]
+    g = unpack_int4_ref(qp, chunk=chunk).astype(jnp.float32)
+    g = g.reshape(lead + (c, chunk)) * scales[..., None]
+    return g.reshape(lead + (c * chunk,))
+
+
+def ncv_aggregate_q4_ref(qp, scales, n_samples, beta=1.0, chunk=512):
+    """Decode-then-aggregate oracle of the fused `ncv_aggregate_q4` kernel."""
+    return ncv_aggregate_ref(dequantize_int4_ref(qp, scales, chunk=chunk),
+                             n_samples, beta)
+
+
+def ncv_weighted_sum_q4_ref(qp, scales, w, chunk=512):
+    """Decode-then-weighted-sum oracle of `ncv_weighted_sum_q4`."""
+    return ncv_weighted_sum_ref(dequantize_int4_ref(qp, scales, chunk=chunk),
+                                w)

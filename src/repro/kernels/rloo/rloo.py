@@ -31,7 +31,16 @@ contraction per tile, plus a running ||g||^2 partial for diagnostics.
 dequantization: the (cohort, N_packed) stack is streamed from HBM in its
 *compressed* wire format (1 byte/param instead of 4) and expanded to f32
 only inside VMEM, so the HBM traffic of the server step drops 4x together
-with the uploaded bytes (DESIGN.md §5).
+with the uploaded bytes (DESIGN.md §5).  `ncv_aggregate_q4` extends this to
+the packed int4 wire (two nibbles per byte, split-halves layout within each
+chunk — DESIGN.md §5.1): 8x less HBM traffic, unpacked in VMEM.
+
+Every reduction is exposed in two layers: `ncv_weighted_sum*` takes the
+per-client scalar weights directly (this is what the sharded cohort path
+uses — each device reduces its local slice of the stack with weights
+computed from globally psum'd/all-gathered sample counts, DESIGN.md §6),
+and `ncv_aggregate*` derives the weights from `n_samples` via
+`ncv_coefficients` for the single-device call sites.
 
 Tiling: grid over the flattened gradient dimension N in `block_n` columns;
 each program instance holds a (K, block_n) tile in VMEM.  K is small (<= 32)
@@ -124,7 +133,14 @@ def _ncv_agg_kernel(g_ref, w_ref, agg_ref, nrm_ref):
 
 
 def ncv_coefficients(n_samples, beta):
-    """Per-client scalar weights w_u of the collapsed Eq. 10-12 estimator."""
+    """Per-client scalar weights w_u of the collapsed Eq. 10-12 estimator.
+
+    Padding rule (DESIGN.md §6): a client with n_u = 0 gets w_u = 0 exactly
+    (p_u = 0 and every n_u-proportional term vanishes), so zero-weight rows
+    appended to make the cohort divisible by the device count contribute
+    nothing to the estimator and nothing to the global stats n and
+    sum_v n_v/(n - n_v).
+    """
     n_samples = jnp.asarray(n_samples, jnp.float32)
     n = jnp.sum(n_samples)
     p = n_samples / n
@@ -134,19 +150,21 @@ def ncv_coefficients(n_samples, beta):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def ncv_aggregate(g_flat, n_samples, beta=1.0, *, block_n: int = 512,
-                  interpret: bool | None = None):
-    """Fused FedNCV server reduction over the flat cohort stack.
+def ncv_weighted_sum(g_flat, w, *, block_n: int = 512,
+                     interpret: bool | None = None):
+    """Fused weighted sum sum_u w_u g_u over the flat (M, N) stack.
 
-    g_flat: (M, N) f32 — uploaded client gradients, flat substrate.
-    n_samples: (M,) per-client sample counts.  Returns (agg (N,),
-    agg_norm_sq scalar) — identical math to `networked_aggregate_stacked`
-    but one HBM read of the stack instead of four per-leaf passes.
+    Returns (agg (N,), ||agg||^2 scalar) in one HBM read of the stack.
+    The weight vector is taken as-is: single-device callers derive it from
+    `ncv_coefficients(n_samples, beta)` (see `ncv_aggregate`); sharded
+    callers pass their local slice of the globally-computed coefficients
+    and psum the partial sums afterwards (the returned norm is then the
+    norm of the *partial* sum — recompute it from the psum'd vector).
     """
     if interpret is None:
         interpret = default_interpret()
     m, n = g_flat.shape
-    w = ncv_coefficients(n_samples, beta)
+    w = jnp.asarray(w, jnp.float32)
     pad = (-n) % block_n
     g_padded = g_flat.astype(jnp.float32)
     if pad:
@@ -175,6 +193,20 @@ def ncv_aggregate(g_flat, n_samples, beta=1.0, *, block_n: int = 512,
     return agg, jnp.sum(nrm_parts)
 
 
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def ncv_aggregate(g_flat, n_samples, beta=1.0, *, block_n: int = 512,
+                  interpret: bool | None = None):
+    """Fused FedNCV server reduction over the flat cohort stack.
+
+    g_flat: (M, N) f32 — uploaded client gradients, flat substrate.
+    n_samples: (M,) per-client sample counts.  Returns (agg (N,),
+    agg_norm_sq scalar) — identical math to `networked_aggregate_stacked`
+    but one HBM read of the stack instead of four per-leaf passes.
+    """
+    return ncv_weighted_sum(g_flat, ncv_coefficients(n_samples, beta),
+                            block_n=block_n, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # Fused dequantize-aggregate: Eq. 10-12 straight off the int8 wire format
 # ---------------------------------------------------------------------------
@@ -189,17 +221,17 @@ def _ncv_agg_q_kernel(q_ref, s_ref, w_ref, agg_ref, nrm_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ncv_aggregate_q(q, scales, n_samples, beta=1.0, *, chunk: int = 512,
-                    interpret: bool | None = None):
-    """`ncv_aggregate` fused with chunked-scale int8 dequantization.
+def ncv_weighted_sum_q(q, scales, w, *, chunk: int = 512,
+                       interpret: bool | None = None):
+    """Weighted sum sum_u w_u g_u fused with chunked-scale int8 dequant.
 
     q: (M, N_packed) int8 — the compressed cohort stack exactly as uploaded
     (comm `int8` wire format, N_packed = C * chunk); scales: (M, C) f32
-    per-chunk scales; n_samples: (M,).  Returns (agg (N_packed,) f32,
-    ||agg||^2).
+    per-chunk scales; w: (M,) per-client weights.  Returns
+    (agg (N_packed,) f32, ||agg||^2).
 
     The stack is read from HBM *compressed* — 4x less traffic than the f32
-    `ncv_aggregate` path — and dequantized in VMEM tile by tile; the grid
+    `ncv_weighted_sum` path — and dequantized in VMEM tile by tile; the grid
     iterates chunks so each program sees one (M, chunk) int8 tile plus its
     (M, 1) scale column, and the estimator stays the collapsed weighted sum
     g = sum_u w_u * scale_u,c * q_u,c.  (On TPU the int8 sublane tile is 32;
@@ -212,7 +244,7 @@ def ncv_aggregate_q(q, scales, n_samples, beta=1.0, *, chunk: int = 512,
     c = n_packed // chunk
     assert n_packed == c * chunk, (n_packed, chunk)
     assert scales.shape == (m, c), (scales.shape, (m, c))
-    w = ncv_coefficients(n_samples, beta)
+    w = jnp.asarray(w, jnp.float32)
     grid = (c,)
     agg, nrm_parts = pl.pallas_call(
         _ncv_agg_q_kernel,
@@ -233,3 +265,81 @@ def ncv_aggregate_q(q, scales, n_samples, beta=1.0, *, chunk: int = 512,
         interpret=interpret,
     )(q, scales, w)
     return agg, jnp.sum(nrm_parts)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ncv_aggregate_q(q, scales, n_samples, beta=1.0, *, chunk: int = 512,
+                    interpret: bool | None = None):
+    """`ncv_aggregate` fused with chunked-scale int8 dequantization."""
+    return ncv_weighted_sum_q(q, scales, ncv_coefficients(n_samples, beta),
+                              chunk=chunk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused unpack-dequantize-aggregate: Eq. 10-12 off the packed int4 wire
+# ---------------------------------------------------------------------------
+
+def _ncv_agg_q4_kernel(qp_ref, s_ref, w_ref, agg_ref, nrm_ref):
+    # packed uint8 tile -> two int4 nibbles -> f32 in VMEM.  Split-halves
+    # layout (DESIGN.md §5.1): within each chunk, byte j carries value j in
+    # its low nibble and value j + chunk/2 in its high nibble, so unpacking
+    # is a lane concatenation instead of an interleave.
+    qp = qp_ref[...].astype(jnp.int32)                # (M, chunk//2)
+    lo = qp & 0xF
+    hi = (qp >> 4) & 0xF
+    g = jnp.concatenate([lo, hi], axis=1)             # (M, chunk)
+    g = jnp.where(g < 8, g, g - 16).astype(jnp.float32) * s_ref[...]
+    w = w_ref[...]                                    # (M,)
+    agg = jnp.sum(w[:, None] * g, axis=0)             # (chunk,)
+    agg_ref[...] = agg
+    nrm_ref[0] = jnp.sum(agg * agg)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ncv_weighted_sum_q4(qp, scales, w, *, chunk: int = 512,
+                        interpret: bool | None = None):
+    """Weighted sum fused with packed-int4 unpack + dequantization.
+
+    qp: (M, N_packed // 2) uint8 — two 4-bit two's-complement codes per
+    byte in the split-halves layout; scales: (M, C) f32 per-chunk scales
+    (C = N_packed / chunk); w: (M,).  Returns (agg (N_packed,) f32,
+    ||agg||^2).  The stack is streamed from HBM at 0.5 bytes/param — 8x
+    less traffic than f32 — and expanded to f32 only inside VMEM.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m, half = qp.shape
+    n_packed = 2 * half
+    c = n_packed // chunk
+    assert chunk % 2 == 0, chunk
+    assert n_packed == c * chunk, (n_packed, chunk)
+    assert scales.shape == (m, c), (scales.shape, (m, c))
+    w = jnp.asarray(w, jnp.float32)
+    grid = (c,)
+    agg, nrm_parts = pl.pallas_call(
+        _ncv_agg_q4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, chunk // 2), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, i)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_packed,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, scales, w)
+    return agg, jnp.sum(nrm_parts)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ncv_aggregate_q4(qp, scales, n_samples, beta=1.0, *, chunk: int = 512,
+                     interpret: bool | None = None):
+    """`ncv_aggregate` fused with packed-int4 unpack-dequantization."""
+    return ncv_weighted_sum_q4(qp, scales, ncv_coefficients(n_samples, beta),
+                               chunk=chunk, interpret=interpret)

@@ -34,20 +34,36 @@ from repro.utils.tree_math import tree_norm_sq
 
 def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
                     ncv: bool = True, alpha_lr: float = 1e-3,
-                    grad_dtype=jnp.float32):
-    """Returns train_step(params, alpha, batch) -> (params, alpha, metrics)."""
+                    grad_dtype=jnp.float32, codec=None, mesh=None):
+    """Returns train_step(params, alpha, batch) -> (params, alpha, metrics).
 
-    def train_step(params, alpha, batch):
-        def split(x):
-            b = x.shape[0]
-            return x.reshape((k_micro, b // k_micro) + x.shape[1:])
+    codec (repro.comm) makes the step wire-aware: the per-shard mean
+    gradient — the "client message" of the GSPMD path — is encoded and
+    decoded *before* the cross-client reduction, matching the
+    fed/distributed.py encode-before-psum semantics, so the collective
+    operands carry exactly the quantization error the server would see
+    from compressed uploads.  With a `mesh`, the microbatch accumulation
+    runs under shard_map over the client axes and the decoded messages
+    meet in an explicit psum (each shard is one logical client; the
+    reported s1/s2 stats are pmean'd per-shard statistics).  Without a
+    mesh the step degenerates to one logical client (quantize-dequantize
+    of gbar).  Codec-aware steps take an extra `seed` scalar (uint32,
+    stochastic-rounding randomness): train_step(params, alpha, batch,
+    seed).
+    """
 
+    def split(x):
+        b = x.shape[0]
+        return x.reshape((k_micro, b // k_micro) + x.shape[1:])
+
+    @functools.partial(jax.remat,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def micro_grad(p, mb):
+        return jax.value_and_grad(lambda q: api.loss(cfg, q, mb))(p)
+
+    def accum(params, batch):
+        """K-microbatch scan: (gbar, S2, mean loss) at fixed params."""
         micro = jax.tree.map(split, batch)
-
-        @functools.partial(jax.remat,
-                           policy=jax.checkpoint_policies.nothing_saveable)
-        def micro_grad(p, mb):
-            return jax.value_and_grad(lambda q: api.loss(cfg, q, mb))(p)
 
         def body(carry, mb):
             gsum, s2, loss_sum = carry
@@ -60,11 +76,12 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
         gsum0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
         (gsum, s2, loss_sum), _ = jax.lax.scan(
             body, (gsum0, jnp.float32(0.0), jnp.float32(0.0)), micro)
+        return jax.tree.map(lambda g: g / k_micro, gsum), s2, \
+            loss_sum / k_micro
 
-        gbar = jax.tree.map(lambda g: g / k_micro, gsum)
+    def ncv_update(params, alpha, gbar, s2, loss):
         s1 = tree_norm_sq(gbar)                       # ||gbar||^2
         k = jnp.float32(k_micro)
-
         if ncv:
             # client message mean_i (g_i - alpha c_i) == (1-alpha) gbar;
             # server LOO cancels under equal weights (Appendix A Eq. 16).
@@ -77,10 +94,59 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
             alpha_new = alpha
         params = jax.tree.map(
             lambda p, g: (p - scale * g).astype(p.dtype), params, gbar)
-        metrics = dict(loss=loss_sum / k_micro, s1=s1, s2=s2,
+        metrics = dict(loss=loss, s1=s1, s2=s2,
                        rloo_var=(s2 - k * s1) / jnp.maximum(k - 1.0, 1.0),
                        alpha=alpha_new)
         return params, alpha_new, metrics
+
+    if codec is None or codec.name == "identity":
+        def train_step(params, alpha, batch):
+            gbar, s2, loss = accum(params, batch)
+            return ncv_update(params, alpha, gbar, s2, loss)
+
+        return train_step
+
+    from repro.utils.tree_math import ravel, unravel
+
+    if mesh is None:
+        def train_step(params, alpha, batch, seed):
+            gbar, s2, loss = accum(params, batch)
+            vec, spec = ravel(gbar)
+            wire, _ = codec.encode(vec, None, jax.random.PRNGKey(seed))
+            gbar = unravel(codec.decode(wire), spec)
+            return ncv_update(params, alpha, gbar, s2, loss)
+
+        return train_step
+
+    from repro.fed.sharded import shard_map_compat
+    from repro.sharding import client_axes
+    from jax.sharding import PartitionSpec as P
+
+    ca = client_axes(mesh)
+    n_shards = 1
+    for a in ca:
+        n_shards *= mesh.shape[a]
+
+    def shard_body(params, batch, seed):
+        gbar, s2, loss = accum(params, batch)
+        # distinct stochastic-rounding stream per shard (= per client)
+        ai = jnp.int32(0)
+        for a in ca:
+            ai = ai * mesh.shape[a] + jax.lax.axis_index(a)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), ai)
+        vec, spec = ravel(gbar)
+        wire, _ = codec.encode(vec, None, key)
+        dec = codec.decode(wire)                      # wire leaves the shard
+        gbar = unravel(jax.lax.psum(dec, ca) / n_shards, spec)
+        return gbar, jax.lax.pmean(s2, ca), jax.lax.pmean(loss, ca)
+
+    shard_fn = shard_map_compat(
+        shard_body, mesh, in_specs=(P(), P(ca), P()),
+        out_specs=(P(), P(), P()))
+
+    def train_step(params, alpha, batch, seed):
+        gbar, s2, loss = shard_fn(params, batch, seed)
+        return ncv_update(params, alpha, gbar, s2, loss)
 
     return train_step
 

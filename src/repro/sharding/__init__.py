@@ -1,4 +1,4 @@
 from repro.sharding.specs import (  # noqa: F401
-    batch_shardings, cache_shardings, client_axes, param_spec,
+    batch_shardings, cache_shardings, client_axes, cohort_mesh, param_spec,
     params_shardings,
 )

@@ -58,6 +58,19 @@ def client_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def cohort_mesh(n_devices: int | None = None, axis: str = "cohort") -> Mesh:
+    """1-d mesh over which the simulator shards the cohort dimension.
+
+    The (cohort, N) message stacks, the cohort batch gather, and the
+    vmapped client passes are partitioned over this axis (fed/sharded.py,
+    DESIGN.md §6).  n_devices defaults to every visible device.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    assert 1 <= n <= len(devs), (n, len(devs))
+    return jax.make_mesh((n,), (axis,), devices=devs[:n])
+
+
 def _fits(mesh, axis, dim):
     return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
 

@@ -17,9 +17,10 @@ from hypothesis import given, settings, strategies as st
 from repro import comm
 from repro.fed import FLConfig, MethodConfig, Simulator, Task
 from repro.kernels.rloo.ref import (
-    dequantize_int8_ref, ncv_aggregate_q_ref, ncv_aggregate_ref,
+    dequantize_int4_ref, dequantize_int8_ref, ncv_aggregate_q4_ref,
+    ncv_aggregate_q_ref, ncv_aggregate_ref, unpack_int4_ref,
 )
-from repro.kernels.rloo.rloo import ncv_aggregate_q
+from repro.kernels.rloo.rloo import ncv_aggregate_q, ncv_aggregate_q4
 
 
 def _vec(rng, n):
@@ -84,6 +85,93 @@ def test_int8_quantization_error_bounded(n, seed):
     dec = codec.decode(wire)
     step = jnp.repeat(wire["s"], codec.chunk)[:n]
     assert bool(jnp.all(jnp.abs(dec - vec) <= step + 1e-7))
+
+
+# ----------------------------- int4 packed ----------------------------------
+
+def test_int4_mean_unbiased_over_keys():
+    """E_key[decode(encode(x, key))] == x for the packed int4 wire."""
+    n, n_keys = 300, 4096
+    codec = comm.get_codec("int4", n=n)
+    rng = np.random.default_rng(0)
+    vec = _vec(rng, n) * jnp.asarray(rng.uniform(0.1, 10.0, n), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(1), n_keys)
+    dec = jax.vmap(lambda k: codec.decode(codec.encode(vec, None, k)[0]))(keys)
+    mean = jnp.mean(dec, axis=0)
+    step = float(jnp.max(jnp.abs(vec))) / 7.0
+    np.testing.assert_allclose(mean, vec, atol=6.0 * step / np.sqrt(n_keys))
+
+
+@given(n=st.sampled_from([5, 512, 700, 1025]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_int4_quantization_error_bounded(n, seed):
+    """|decode - x| <= per-chunk scale, codes packed two per byte in range,
+    and the wire is half int8's bytes."""
+    codec = comm.get_codec("int4", n=n)
+    vec = _vec(np.random.default_rng(seed), n) * 3.0
+    wire, state = codec.encode(vec, None, jax.random.PRNGKey(seed))
+    assert state is None
+    assert wire["q"].dtype == jnp.uint8
+    assert wire["q"].shape == (codec.n_padded // 2,)
+    codes = unpack_int4_ref(wire["q"], chunk=codec.chunk)
+    assert int(jnp.max(jnp.abs(codes))) <= 7
+    dec = codec.decode(wire)
+    step = jnp.repeat(wire["s"], codec.chunk)[:n]
+    assert bool(jnp.all(jnp.abs(dec - vec) <= step + 1e-7))
+    int8_bytes = comm.get_codec("int8", n=n).bytes_per_client()
+    assert codec.bytes_per_client() < int8_bytes
+
+
+@given(m=st.sampled_from([2, 3, 8]), beta=st.floats(0.0, 1.0),
+       c=st.sampled_from([1, 2, 5]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ncv_aggregate_q4_kernel_matches_ref(m, beta, c, seed):
+    """The fused unpack-dequantize-aggregate kernel (interpret) == the jnp
+    decode-then-aggregate oracle."""
+    rng = np.random.default_rng(seed)
+    chunk = 512
+    qp = jnp.asarray(rng.integers(0, 256, size=(m, c * chunk // 2)),
+                     jnp.uint8)
+    scales = jnp.asarray(rng.uniform(1e-3, 2.0, size=(m, c)), jnp.float32)
+    n_u = jnp.asarray(rng.integers(1, 30, size=m), jnp.float32)
+    agg, nrm = ncv_aggregate_q4(qp, scales, n_u, beta, interpret=True)
+    agg_r, nrm_r = ncv_aggregate_q4_ref(qp, scales, n_u, beta)
+    np.testing.assert_allclose(agg, agg_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(nrm), float(nrm_r), rtol=1e-4,
+                               atol=1e-6)
+
+
+@given(m=st.sampled_from([2, 3, 8]), beta=st.floats(0.0, 1.0),
+       n=st.sampled_from([1, 100, 513, 2049]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_int4_aggregate_wire_matches_decode_then_aggregate(m, beta, n, seed):
+    """aggregate_wire(int4) == ncv_aggregate(decode per client) to fp32."""
+    rng = np.random.default_rng(seed)
+    codec = comm.get_codec("int4", n=n)
+    vecs = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), m)
+    wire = jax.vmap(lambda v, k: codec.encode(v, None, k)[0])(vecs, keys)
+    n_u = jnp.asarray(rng.integers(1, 30, size=m), jnp.float32)
+    agg, nrm = comm.aggregate_wire(codec, wire, n_u, beta=beta,
+                                   use_pallas=False)
+    dense = jax.vmap(codec.decode)(wire)
+    agg_ref, nrm_ref = ncv_aggregate_ref(dense, n_u, beta)
+    np.testing.assert_allclose(agg, agg_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(nrm), float(nrm_ref), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_dequantize_int4_ref_layout():
+    """Split-halves layout: byte j of a chunk carries value j (low nibble)
+    and value j + chunk/2 (high nibble)."""
+    chunk = 8
+    # codes 0..7 in a single chunk: bytes = (q[j] & 0xF) | (q[j+4] << 4)
+    codes = jnp.arange(-4, 4, dtype=jnp.int32)
+    qp = ((codes[:4] & 0xF) | ((codes[4:] & 0xF) << 4)).astype(jnp.uint8)
+    out = unpack_int4_ref(qp, chunk=chunk)
+    np.testing.assert_array_equal(out, np.arange(-4, 4))
+    deq = dequantize_int4_ref(qp, jnp.asarray([2.0]), chunk=chunk)
+    np.testing.assert_allclose(deq, 2.0 * np.arange(-4, 4))
 
 
 # ----------------------------- topk + error feedback ------------------------
@@ -184,7 +272,7 @@ def _tiny_sim(method="fedncv", codec="identity", seed=0, **codec_opts):
     return Simulator(task, params, train, fl, seed=seed), test
 
 
-@pytest.mark.parametrize("codec", ["bf16", "int8", "topk"])
+@pytest.mark.parametrize("codec", ["bf16", "int8", "int4", "topk"])
 def test_simulator_wire_bytes_and_state(codec):
     sim, _ = _tiny_sim(codec=codec)
     f32_bytes = 4 * sim._grad_spec.n * sim.fl.cohort

@@ -1,0 +1,291 @@
+"""Sharded-cohort fused aggregation + async round pipeline (DESIGN.md §6).
+
+In-process tests run on however many devices the process has — under the
+CI multi-device job (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+the shard_map paths exercise real collectives and cohort padding; on a
+single device they degenerate but still cover the code path.  The
+subprocess tests (slow) force 8 host devices regardless of the parent.
+
+Tolerances: the sharded reduction reorders f32 summation (per-device
+partial + psum vs one pass), so single-round comparisons are tight
+(~1e-6) while multi-round trajectories through *discontinuous* codecs
+(stochastic rounding, top-k selection) may amplify a 1e-7 seed difference
+into one flipped quantization level — those get a loose "tracks" bound.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import comm
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.fed import sharded as S
+from repro.kernels.rloo.ref import ncv_aggregate_ref, ncv_weighted_sum_ref
+from repro.kernels.rloo.rloo import ncv_coefficients
+from repro.sharding import cohort_mesh
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ----------------------- weighted-sum collapse -------------------------------
+
+@given(m=st.sampled_from([2, 3, 8]), beta=st.floats(0.0, 1.0),
+       n=st.sampled_from([1, 100, 513]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_weighted_sum_with_coefficients_is_aggregate(m, beta, n, seed):
+    """sum_u w_u g_u with ncv_coefficients == the direct Eq. 10-12 oracle."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    n_u = jnp.asarray(rng.integers(1, 30, m), jnp.float32)
+    agg, nrm = ncv_weighted_sum_ref(g, ncv_coefficients(n_u, beta))
+    agg_r, nrm_r = ncv_aggregate_ref(g, n_u, beta)
+    np.testing.assert_allclose(agg, agg_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(nrm), float(nrm_r), rtol=1e-4,
+                               atol=1e-8)
+
+
+@given(m=st.sampled_from([2, 5]), pad=st.sampled_from([1, 3]),
+       beta=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_zero_weight_padding_rows_are_noops(m, pad, beta, seed):
+    """n_u = 0 rows get w_u = 0 exactly: padding never moves the estimate."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((m, 64)), jnp.float32)
+    n_u = jnp.asarray(rng.integers(1, 30, m), jnp.float32)
+    w = ncv_coefficients(jnp.pad(n_u, (0, pad)), beta)
+    assert np.all(np.asarray(w[m:]) == 0.0)
+    agg_p, _ = ncv_weighted_sum_ref(S.pad_cohort(g, m + pad), w)
+    agg, _ = ncv_aggregate_ref(g, n_u, beta)
+    np.testing.assert_allclose(agg_p, agg, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------- sharded aggregation vs oracle -----------------------
+
+@pytest.mark.parametrize("cohort", [3, 5, 8, 11])
+@pytest.mark.parametrize("codec_name", [None, "int8", "int4"])
+def test_sharded_aggregate_matches_oracle(cohort, codec_name):
+    """shard_map'd local-kernel + psum == single-device Eq. 10-12 oracle,
+    over cohort sizes that do and do not divide the device count."""
+    d = jax.device_count()
+    mesh = cohort_mesh()
+    rng = np.random.default_rng(cohort)
+    n = 700
+    g = jnp.asarray(rng.standard_normal((cohort, n)), jnp.float32)
+    n_u = jnp.asarray(rng.integers(1, 30, cohort), jnp.float32)
+    codec = comm.get_codec(codec_name, n=n) if codec_name else None
+    if codec is not None:
+        keys = jax.random.split(jax.random.PRNGKey(1), cohort)
+        stack = jax.vmap(lambda v, k: codec.encode(v, None, k)[0])(g, keys)
+        dense = jax.vmap(codec.decode)(stack)
+    else:
+        stack, dense = g, g
+    from jax.sharding import PartitionSpec as P
+
+    def body(stack_l, n_l):
+        return S.sharded_aggregate(stack_l, n_l, beta=0.7,
+                                   axis_name=mesh.axis_names[0],
+                                   codec=codec, use_pallas=False)
+
+    fn = S.shard_map_compat(body, mesh, in_specs=(P("cohort"), P("cohort")),
+                            out_specs=(P(), P()))
+    agg, nrm = jax.jit(fn)(S.pad_cohort(stack, d), S.pad_cohort(n_u, d))
+    agg_r, nrm_r = ncv_aggregate_ref(dense, n_u, 0.7)
+    np.testing.assert_allclose(agg, agg_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(nrm), float(nrm_r), rtol=1e-4,
+                               atol=1e-8)
+
+
+# ----------------------- simulator integration -------------------------------
+
+def _tiny_sim(method="fedncv", codec="identity", staleness=0, mesh=None,
+              cohort=3, seed=0, **codec_opts):
+    from repro.data import federated_splits
+    from repro.models import lenet
+    spec, train, test = federated_splits("mnist", n_clients=6, alpha=0.5,
+                                         seed=0, scale=0.1)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    fl = FLConfig(method=method, n_clients=6, cohort=cohort, k_micro=3,
+                  micro_batch=4, server_lr=0.5, codec=codec,
+                  codec_opts=codec_opts, staleness=staleness,
+                  mc=MethodConfig(name=method, local_epochs=1))
+    return Simulator(task, params, train, fl, seed=seed, mesh=mesh), test
+
+
+@pytest.mark.parametrize("codec", ["identity", "int8", "int4", "topk"])
+def test_mesh_sim_matches_single_device(codec):
+    """Mesh-mode rounds == single-device rounds: tight after one round
+    (identical wires, reordered summation only), tracking after three."""
+    sa, _ = _tiny_sim(codec=codec)
+    sb, _ = _tiny_sim(codec=codec, mesh=cohort_mesh())
+    sa.run_rounds(1)
+    sb.run_rounds(1)
+    assert _maxdiff(sa.params, sb.params) < 1e-6
+    sa.run_rounds(2)
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) < 5e-4
+    if codec == "topk":
+        assert float(jnp.max(jnp.abs(
+            np.asarray(sa.ef) - np.asarray(sb.ef)))) < 5e-4
+
+
+def test_mesh_sim_other_methods_match():
+    for method in ("fedavg", "scaffold", "fedncv+", "pfedsim"):
+        sa, _ = _tiny_sim(method=method)
+        sb, _ = _tiny_sim(method=method, mesh=cohort_mesh())
+        sa.run_rounds(2)
+        sb.run_rounds(2)
+        assert _maxdiff(sa.params, sb.params) < 1e-5, method
+
+
+def test_sharded_ef_checkpoint_roundtrip(tmp_path):
+    """save_sim/restore_sim with a mesh-sharded simulator carries the EF
+    residuals: the restored run reproduces the trajectory exactly."""
+    from repro.checkpoint import restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa, _ = _tiny_sim(codec="topk", mesh=cohort_mesh())
+    sa.run_rounds(2)
+    save_sim(ckdir, sa)
+    sa.run_rounds(2)
+    sb, _ = _tiny_sim(codec="topk", mesh=cohort_mesh())
+    meta = restore_sim(ckdir, sb)
+    assert meta["round_idx"] == sb.round_idx == 2
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) < 1e-6
+    np.testing.assert_allclose(np.asarray(sa.ef), np.asarray(sb.ef),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ----------------------- async round pipeline --------------------------------
+
+def test_async_warmup_bubble():
+    """Round 1 in async mode fills the pipeline: no update is applied and
+    the diagnostics row reads zero."""
+    sa, _ = _tiny_sim(staleness=1)
+    p0 = jax.tree.map(lambda x: x, sa.params)
+    diag = sa.run_round()
+    assert _maxdiff(sa.params, p0) == 0.0
+    assert diag["agg_norm"] == 0.0 and diag["bytes_up"] == 0.0
+    diag = sa.run_round()                # round 2 applies round 1's cohort
+    assert diag["agg_norm"] > 0.0
+    assert _maxdiff(sa.params, p0) > 0.0
+
+
+def test_async_staleness_one_semantics():
+    """theta_r = server(theta_{r-1}, clients(theta_{r-2}, key_{r-1})): the
+    pipelined scan equals a hand-rolled stale-gradient reference built from
+    the same factored client/server sections."""
+    sa, _ = _tiny_sim(staleness=1)
+    sb, _ = _tiny_sim(staleness=0)
+    params, state = sb.params, sb._get_state()
+    pending, valid = None, False
+    client = jax.jit(sb._client_section)
+    server = jax.jit(sb._server_section)
+    for r in range(1, 5):
+        key = jax.random.fold_in(sb.base_key, r - 1)
+        new_pending = client(params, state, key)
+        if valid:
+            params, state, _ = server(params, state, pending, jnp.int32(r))
+        pending, valid = new_pending, True
+    sa.run_rounds(4)
+    assert _maxdiff(sa.params, params) < 1e-6
+
+
+def test_async_chunked_equals_oneshot():
+    """The in-flight cohort is carried across run_rounds calls (and between
+    run_round and run_rounds), so chunked driving follows one trajectory."""
+    sa, _ = _tiny_sim(staleness=1, codec="int8")
+    sb, _ = _tiny_sim(staleness=1, codec="int8")
+    sc, _ = _tiny_sim(staleness=1, codec="int8")
+    sa.run_rounds(5)
+    sb.run_rounds(2)
+    sb.run_rounds(3)
+    for _ in range(5):
+        sc.run_round()
+    assert _maxdiff(sa.params, sb.params) == 0.0
+    assert _maxdiff(sa.params, sc.params) == 0.0
+
+
+def test_async_restore_drops_inflight_round(tmp_path):
+    """restore_sim into an async sim that kept running discards the
+    pending cohort: the restored run restarts with a fresh bubble instead
+    of applying a stale update from the pre-restore trajectory."""
+    from repro.checkpoint import restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa, _ = _tiny_sim(staleness=1)
+    sa.run_rounds(3)
+    save_sim(ckdir, sa)
+    sa.run_rounds(4)              # sa._pending now holds an in-flight round
+    restore_sim(ckdir, sa)
+    assert sa._pending is None and float(sa._valid) == 0.0
+    sa.run_rounds(4)
+    sb, _ = _tiny_sim(staleness=1)
+    restore_sim(ckdir, sb)
+    sb.run_rounds(4)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+
+
+def test_async_mesh_combined():
+    """The pipeline composes with the sharded cohort section."""
+    sa, _ = _tiny_sim(staleness=1, codec="int4", mesh=cohort_mesh())
+    sb, _ = _tiny_sim(staleness=1, codec="int4")
+    sa.run_rounds(3)
+    sb.run_rounds(3)
+    assert _maxdiff(sa.params, sb.params) < 5e-4
+
+
+# ----------------------- 8-device subprocess ---------------------------------
+
+_SUBPROCESS_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+assert jax.device_count() == 8
+import tests.conftest  # installs the hypothesis shim when absent
+import tests.test_sharded as T
+
+# cohort 5 over 8 devices: padding slots live on real devices
+sa, _ = T._tiny_sim(cohort=5)
+sb, _ = T._tiny_sim(cohort=5, mesh=T.cohort_mesh())
+sa.run_rounds(2); sb.run_rounds(2)
+assert T._maxdiff(sa.params, sb.params) < 1e-5
+T.test_sharded_aggregate_matches_oracle(11, "int4")
+T.test_sharded_ef_checkpoint_roundtrip(type("P", (), {"__str__": lambda s: "/tmp/shard_ck"})())
+sc, _ = T._tiny_sim(cohort=5, staleness=1, codec="int8", mesh=T.cohort_mesh())
+sc.run_rounds(3)
+print("SHARDED_8DEV_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_8dev_subprocess(tmp_path):
+    """The in-process tests above, on 8 forced host devices (device count
+    is fixed at first jax init, so the main pytest process can't host
+    them unless CI already forced it)."""
+    if jax.device_count() >= 8:
+        pytest.skip("main process already multi-device; in-process tests "
+                    "cover this")
+    code = _SUBPROCESS_CODE.replace("/tmp/shard_ck",
+                                    os.path.join(str(tmp_path), "ck"))
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.path.dirname(SRC))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert "SHARDED_8DEV_OK" in out.stdout, (out.stdout[-1000:],
+                                             out.stderr[-2000:])
