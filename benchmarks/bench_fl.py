@@ -14,19 +14,22 @@ import jax
 import numpy as np
 
 from repro.data import federated_splits
-from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.fed import FLConfig, Simulator, Task, registered_methods
 from repro.models import lenet
 
 FAST = os.environ.get("BENCH_FAST", "1") == "1"
 
 DATASETS = ["cifar10", "emnist"] if FAST else ["cifar10", "cifar100",
                                                "tiny-imagenet", "emnist"]
-# "fedncv" = practical config (beta=0, small fixed alpha);
-# "fedncv-lit" = the literal Eq.10-12 estimator (beta=1) — included to make
-# the degeneracy finding visible (EXPERIMENTS.md §Repro).
-METHODS = ["fedavg", "fedprox", "scaffold", "fedrep", "fedper", "pfedsim",
-           "fedncv", "fedncv-lit", "fedncv+"]
+# The sweep is the method registry itself — a method added through
+# fed.api.register_method lands in Table 1 automatically — plus
+# "fedncv-lit", the literal Eq.10-12 estimator (beta=1), included to make
+# the degeneracy finding visible (EXPERIMENTS.md §Repro; "fedncv" is the
+# practical config: beta=0, small fixed alpha).
+METHODS = list(registered_methods()) + ["fedncv-lit"]
 
+# bench-only aliases: row label -> registered method it runs as
+ALIASES = {"fedncv-lit": "fedncv"}
 METHOD_MC = {
     "fedncv": dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5, ncv_beta=0.0),
     "fedncv-lit": dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5, ncv_beta=1.0),
@@ -54,12 +57,12 @@ def run_dataset(name: str, seed=0):
     rows, curves = [], {}
     for method in METHODS:
         params = lenet.init(cfg, jax.random.PRNGKey(seed))
-        sim_method = method.split("-")[0]      # "fedncv-lit" -> "fedncv"
+        sim_method = ALIASES.get(method, method)
         mc_kw = METHOD_MC.get(method, {})
-        fl = FLConfig(method=sim_method, n_clients=N_CLIENTS, cohort=COHORT,
-                      k_micro=4, micro_batch=16, server_lr=0.5,
-                      mc=MethodConfig(name=sim_method, local_lr=0.05,
-                                      local_epochs=2, **mc_kw))
+        fl = FLConfig.make(method=sim_method, n_clients=N_CLIENTS,
+                           cohort=COHORT, k_micro=4, micro_batch=16,
+                           server_lr=0.5, local_lr=0.05, local_epochs=2,
+                           **mc_kw)
         sim = Simulator(task, params, train, fl, seed=seed)
         t0 = time.time()
         curve = []

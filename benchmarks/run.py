@@ -75,8 +75,21 @@ def _emit_json(name: str, ok: bool, wall_s: float, stdout_text: str):
     print(f"bench:{name},json,{path}", flush=True)
 
 
+def _check_fl_registry_rows(payload) -> None:
+    """BENCH_fl_table1_fig1.json must carry a table1 row for every method
+    in the fed.api registry (the sweep is registry-driven: a registered
+    method that is missing from the table means the bench sweep and the
+    registry diverged)."""
+    from repro.fed import registered_methods
+    seen = {r["fields"][1] for r in payload["rows"]
+            if r["name"] == "table1" and len(r["fields"]) >= 2}
+    missing = sorted(set(registered_methods()) - seen)
+    assert not missing, f"registered methods missing from table1: {missing}"
+
+
 def smoke() -> None:
-    """Assert every committed BENCH_<name>.json still parses (CI gate)."""
+    """Assert every committed BENCH_<name>.json still parses, and that the
+    FL table's rows cover the method registry (CI gate)."""
     import glob
     failures = 0
     paths = sorted(glob.glob(os.path.join(os.getcwd(), "BENCH_*.json")))
@@ -90,6 +103,8 @@ def smoke() -> None:
             for field in ("bench", "ok", "wall_time_s", "rows"):
                 assert field in payload, f"missing field '{field}'"
             assert isinstance(payload["rows"], list)
+            if payload["bench"] == "fl_table1_fig1":
+                _check_fl_registry_rows(payload)
             print(f"smoke:{os.path.basename(path)},ok,"
                   f"{len(payload['rows'])} rows", flush=True)
         except Exception as e:

@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 from repro.data import federated_splits
-from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.fed import FLConfig, Simulator, Task
 from repro.models import lenet
 
 ROUNDS = 15
@@ -35,12 +35,14 @@ def main():
     for method, codec in runs:
         params = lenet.init(cfg, jax.random.PRNGKey(0))
         opts = dict(ratio=0.16) if codec == "topk" else {}
-        fl = FLConfig(method=method, n_clients=12, cohort=6, k_micro=4,
-                      micro_batch=16, server_lr=0.5, codec=codec,
-                      codec_opts=opts,
-                      mc=MethodConfig(name=method, local_lr=0.05,
-                                      local_epochs=2, ncv_alpha0=0.3,
-                                      ncv_alpha_lr=1e-5, ncv_beta=0.0))
+        # FLConfig.make resolves the method from the fed.api registry and
+        # validates the typed options against what the method reads
+        ncv_kw = dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5, ncv_beta=0.0) \
+            if method == "fedncv" else {}
+        fl = FLConfig.make(method=method, n_clients=12, cohort=6, k_micro=4,
+                           micro_batch=16, server_lr=0.5, codec=codec,
+                           codec_opts=opts, local_lr=0.05, local_epochs=2,
+                           **ncv_kw)
         sim = Simulator(task, params, train, fl, seed=0)
         diags = sim.run_rounds(ROUNDS)        # one dispatch for all rounds
         pre = sim.evaluate(test)

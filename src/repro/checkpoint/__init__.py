@@ -1,4 +1,4 @@
 from repro.checkpoint.ckpt import (  # noqa: F401
-    latest_step, restore, restore_sim, restore_step, save, save_sim,
-    save_step,
+    latest_step, read_meta, restore, restore_sim, restore_step, save,
+    save_sim, save_step,
 )

@@ -37,10 +37,18 @@ def save(path: str, tree, meta: dict | None = None):
     os.replace(tmp, path)          # atomic publish
 
 
-def restore(path: str, like):
-    """Restore into the structure of `like` (a template pytree)."""
+def _read_payload(path: str):
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+        return msgpack.unpackb(f.read(), raw=False)
+
+
+def restore(path: str, like, payload=None):
+    """Restore into the structure of `like` (a template pytree).  An
+    already-decoded `payload` (from `_read_payload`) skips the file read —
+    callers that validate meta first reuse one decode (restore_sim)."""
+    if payload is None:
+        payload = _read_payload(path)
+    payload = dict(payload)
     meta = payload.pop("_meta", {})
     flat_like = _flatten(like)
     missing = set(flat_like) - set(payload)
@@ -78,11 +86,20 @@ def save_step(directory: str, step: int, tree, meta=None, keep: int = 3):
         os.remove(os.path.join(directory, f"{s}.ckpt"))
 
 
-def restore_step(directory: str, like, step: int | None = None):
+def _step_path(directory: str, step: int | None) -> str:
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
-    return restore(os.path.join(directory, f"{step}.ckpt"), like)
+    return os.path.join(directory, f"{step}.ckpt")
+
+
+def restore_step(directory: str, like, step: int | None = None):
+    return restore(_step_path(directory, step), like)
+
+
+def read_meta(directory: str, step: int | None = None) -> dict:
+    """Read a checkpoint's meta dict without restoring its tree."""
+    return _read_payload(_step_path(directory, step)).get("_meta", {})
 
 
 # ---------------------------------------------------------------------------
@@ -92,27 +109,55 @@ def restore_step(directory: str, like, step: int | None = None):
 def save_sim(directory: str, sim, meta=None, keep: int = 3):
     """Checkpoint a `fed.Simulator` at its current round.
 
-    Persists the params together with the full per-client state dict —
-    alphas, SCAFFOLD c_u, personal heads, FedNCV+ h/h_sum, and the comm
-    codec's error-feedback residuals (`ef`) — so a restored run continues
-    the exact trajectory, compression state included.
+    Persists the params together with the full state dict the method's
+    `state_spec()` declares (fed/api.py) — every per-client and global
+    field (FedNCV alphas, SCAFFOLD c_u/c_global, personal heads, FedNCV+
+    h/h_sum, FedGLOMO momenta) plus the comm codec's error-feedback
+    residuals (`ef`) — so a restored run continues the exact trajectory,
+    compression state included.  Nothing here is per-method: a method
+    registered through `fed.api` checkpoints correctly by construction.
+    The meta records the method name and state keys for restore-time
+    validation.
     """
-    tree = dict(params=sim.params, state=sim._get_state())
+    state = sim._get_state()
+    tree = dict(params=sim.params, state=state)
     save_step(directory, sim.round_idx, tree,
-              dict(meta or {}, round_idx=sim.round_idx), keep=keep)
+              dict(meta or {}, round_idx=sim.round_idx,
+                   method=sim.fl.method, codec=sim.fl.codec,
+                   state_keys=sorted(state)), keep=keep)
 
 
 def restore_sim(directory: str, sim, step: int | None = None):
     """Restore a `save_sim` checkpoint into `sim` (must be configured with
-    the same FLConfig, codec included).  Returns the checkpoint meta.
+    the same FLConfig, codec included — validated against the checkpoint
+    meta).  Returns the checkpoint meta.
 
     The async pipeline's in-flight cohort is NOT checkpointed (DESIGN.md
     §6.2): any pending round on `sim` is dropped so the restored run
     restarts with a fresh pipeline bubble instead of applying a stale
     cohort from the pre-restore trajectory."""
     import jax.numpy as jnp
+    path = _step_path(directory, step)
+    payload = _read_payload(path)           # one read + decode
+    # validate method/codec/state-layout compatibility BEFORE the
+    # structural restore, so a mismatch reports the configuration error,
+    # not a low-level missing-key failure
+    saved = payload.get("_meta", {})
+    for key, want in (("method", sim.fl.method), ("codec", sim.fl.codec)):
+        have = saved.get(key, want)         # absent in pre-PR4 checkpoints
+        if have != want:
+            raise ValueError(
+                f"checkpoint was saved with {key}={have!r} but the "
+                f"simulator is configured with {key}={want!r}")
+    want_keys = sorted(sim._get_state())
+    have_keys = sorted(saved.get("state_keys", want_keys))
+    if have_keys != want_keys:
+        raise ValueError(
+            f"checkpoint state layout {have_keys} does not match the "
+            f"simulator's state_spec() layout {want_keys} (same method "
+            f"name, different state fields — version skew?)")
     like = dict(params=sim.params, state=sim._get_state())
-    tree, meta = restore_step(directory, like, step)
+    tree, meta = restore(path, like, payload=payload)
     sim.params = tree["params"]
     sim._set_state(tree["state"])
     sim.round_idx = int(meta.get("round_idx", sim.round_idx))

@@ -1,2 +1,6 @@
-from repro.fed.methods import MethodConfig, Task  # noqa: F401
-from repro.fed.simulator import FLConfig, Simulator  # noqa: F401
+from repro.fed.api import (  # noqa: F401
+    FedMethod, FLConfig, MethodCtx, RoundCtx, StateField, get_method,
+    register_method, registered_methods,
+)
+from repro.fed.methods import ClientOut, MethodConfig, Task  # noqa: F401
+from repro.fed.simulator import Simulator  # noqa: F401

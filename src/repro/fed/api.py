@@ -1,0 +1,522 @@
+"""repro.fed.api — the typed FedMethod strategy interface (DESIGN.md §7).
+
+A federated method is one object, not a string plus scattered `if`-chains:
+
+    FedMethod
+      .client_update(ctx, params, cstate, batches, key) -> ClientOut
+      .server_update(ctx, params, agg, state) -> (params, state, diag)
+      .state_spec(task, mc) -> tuple[StateField, ...]
+
+`state_spec()` is the load-bearing piece: it declares every piece of method
+state — name, per-client vs. global, how to initialize one instance, under
+which key clients see it, and whether client-returned values are scattered
+back after the round.  The Simulator (single-device, shard_map cohort and
+async paths alike), the `fed/distributed.py` runtime, and
+`checkpoint.save_sim`/`restore_sim` all consume the spec generically; a new
+method never touches any of them.
+
+Methods register under a name (`register_method`) and are looked up with
+`get_method`; `FLConfig.make(method=..., **method_opts)` is the validated
+construction path (it catches unknown method names, unknown options, and
+the historical silent `mc.name`/`fl.method` mismatch).
+
+Every aggregation-side method stays on the fused flat-buffer/codec hot loop:
+the generic server section computes the Eq. 10-12 weighted aggregate with
+the method's `beta(mc)` through the fused kernels (`ncv_aggregate[_q]`,
+`ncv_weighted_sum[_q/_q4]`); `server_update` only consumes the reduced
+(aggregate, ||agg||^2) pair plus scalar aux — no per-leaf python over the
+cohort stack.  Methods that genuinely need the dense per-client uploads
+(FedNCV+'s stale control variates) set `needs_dense_grads` and receive them
+decoded once in `ctx.grads`.
+
+Worked example (how to add a method): `fedglomo` at the bottom of this file
+is registered purely through this public API — local momentum as one
+per-client `StateField`, global momentum as one global `StateField`, a
+client wrapper and a server hook — and automatically runs on every
+execution backend, codec, the async pipeline, checkpointing, and the
+benchmark sweep (DESIGN.md §7.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing as tp
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import control_variates as cv
+from repro.fed import methods as M
+from repro.utils.tree_math import tree_axpy, tree_zeros_like
+
+
+class MethodCtx(tp.NamedTuple):
+    """Static context a client pass runs under (closed over inside jit)."""
+    task: M.Task
+    mc: M.MethodConfig
+
+
+class RoundCtx(tp.NamedTuple):
+    """Everything a server update may consume.
+
+    task/mc/fl are static python config; r (1-based round number), idx
+    (cohort client indices), sizes (per-client sample counts) and aux (the
+    stacked scalar diagnostics every client uploaded) are traced arrays.
+    `grads` is None unless the method sets `needs_dense_grads`, in which
+    case it is the dense stacked upload pytree (decoded from the wire once,
+    outside the method).
+    """
+    task: M.Task
+    mc: M.MethodConfig
+    fl: "FLConfig"
+    r: tp.Any
+    idx: tp.Any
+    sizes: tp.Any
+    aux: tp.Any
+    grads: tp.Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StateField:
+    """One declared piece of method state.
+
+    name        : key in the state dict (and `Simulator` attribute).
+    per_client  : True -> stored stacked (n_clients, ...), gathered at the
+                  cohort indices each round; False -> one global instance.
+    init        : (params, task, mc) -> one instance (a single client's
+                  value when per_client; the global value otherwise).
+    cstate_key  : key under which the cohort slice (per_client) or a
+                  broadcast copy (global) appears in the client-side cstate;
+                  None keeps the field server-only (never shipped to
+                  clients — e.g. FedNCV+'s stale gradient table).
+    scatter     : per_client only: write the client-returned cstate rows
+                  back at the cohort indices after the round (EF-residual
+                  style carry, like `alphas`).  Methods whose server
+                  computes the new per-client values itself (FedNCV's
+                  alpha adaptation) leave this False and scatter inside
+                  `server_update`.
+    """
+    name: str
+    per_client: bool
+    init: tp.Callable
+    cstate_key: str | None = None
+    scatter: bool = False
+
+
+def sgd_server(ctx: RoundCtx, params, agg, state):
+    """Default server update: theta <- theta - lr * aggregate."""
+    tree, norm = agg
+    lr = ctx.fl.server_lr
+    params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params,
+                          tree)
+    return params, state, dict(agg_norm=norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedMethod:
+    """A federated optimization method as one first-class strategy object.
+
+    The two required callables run inside jit/vmap/shard_map and must be
+    pure.  Everything else is declarative: `state_fields` (a tuple, or a
+    callable (task, mc) -> tuple when the fields depend on the task, e.g.
+    personal heads), the server-side CV coefficient `beta(mc)` fed to the
+    fused Eq. 10-12 reduction, and capability flags the runtimes branch on
+    *once at build time* (never inside the round body).
+    """
+    name: str
+    client_update: tp.Callable      # (ctx, params, cstate, batches, key)
+    server_update: tp.Callable = sgd_server   # (ctx, params, agg, state)
+    state_fields: tp.Any = ()       # tuple[StateField] | (task, mc) -> tuple
+    beta: tp.Callable = staticmethod(lambda mc: 0.0)
+    personal: bool = False          # evaluation overlays per-client heads
+    needs_dense_grads: bool = False  # server consumes per-client uploads
+    cohort_state_update: tp.Callable | None = None  # (ctx, cstates) -> cstates
+    distributed_ok: bool = True     # runnable under fed/distributed.make_round
+    options: tuple = ()             # MethodConfig fields this method reads
+    # (beyond COMMON_OPTIONS); FLConfig.make rejects options the chosen
+    # method would silently ignore
+    validate: tp.Callable | None = None             # (mc) -> None, raises
+    description: str = ""
+
+    def state_spec(self, task: M.Task, mc: M.MethodConfig
+                   ) -> tuple[StateField, ...]:
+        fields = self.state_fields
+        return tuple(fields(task, mc)) if callable(fields) else tuple(fields)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, FedMethod] = {}
+
+
+def register_method(method: FedMethod, *, overwrite: bool = False) -> FedMethod:
+    """Register `method` under `method.name`; returns it for chaining."""
+    if not overwrite and method.name in _REGISTRY:
+        raise ValueError(f"method '{method.name}' is already registered")
+    _REGISTRY[method.name] = method
+    return method
+
+
+def get_method(name: str) -> FedMethod:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown federated method '{name}'; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_methods() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# spec-driven generic state plumbing (consumed by every execution backend)
+# ---------------------------------------------------------------------------
+
+def init_state(fields: tuple[StateField, ...], params, task, mc,
+               n_clients: int, codec=None) -> dict:
+    """Build the full state dict a run carries: per-client fields stacked
+    to (n_clients, ...) leading dims, global fields as-is, plus the codec's
+    per-client error-feedback residuals under "ef" when stateful."""
+    state = {}
+    for f in fields:
+        if f.per_client:
+            state[f.name] = jax.vmap(lambda _, f=f: f.init(params, task, mc)
+                                     )(jnp.arange(n_clients))
+        else:
+            state[f.name] = f.init(params, task, mc)
+    if codec is not None and codec.stateful:
+        state["ef"] = jax.vmap(lambda _: codec.init_state()
+                               )(jnp.arange(n_clients))
+    return state
+
+
+def gather_cohort_states(fields: tuple[StateField, ...], state, idx):
+    """Cohort-sliced client states: per-client fields indexed at `idx`,
+    global fields broadcast to every slot.  Methods with no client-visible
+    state get a dummy leaf so the vmapped client pass has a cohort axis."""
+    cs = {}
+    for f in fields:
+        if f.cstate_key is None:
+            continue
+        if f.per_client:
+            cs[f.cstate_key] = jax.tree.map(lambda x: x[idx], state[f.name])
+        else:
+            cs[f.cstate_key] = jax.vmap(lambda _, f=f: state[f.name])(idx)
+    if not cs:
+        cs = dict(dummy=jnp.zeros(idx.shape[0]))
+    return cs
+
+
+def scatter_cohort_states(fields: tuple[StateField, ...], state, idx,
+                          cstates_new) -> dict:
+    """Write client-returned per-client state rows back at the cohort
+    indices (fields with scatter=True)."""
+    new = dict(state)
+    for f in fields:
+        if f.per_client and f.scatter and f.cstate_key is not None:
+            new[f.name] = jax.tree.map(lambda a, n: a.at[idx].set(n),
+                                       state[f.name],
+                                       cstates_new[f.cstate_key])
+    return new
+
+
+def with_codec(client_fn, codec):
+    """Compose a ctx-signature client fn with wire encoding (DESIGN.md §5).
+
+    The uploaded gradient leaves the client compressed: the wrapped fn
+    ravels `ClientOut.grad` into the flat (N,) vector and replaces it with
+    the codec's wire dict.  Stateful codecs (top-k error feedback) read and
+    write their per-client residual under the ``"ef"`` key of `cstate`, so
+    the residual rides the same gather/scatter path as every other
+    per-client state (alphas, c_u, personal heads).
+    """
+    from repro.utils.tree_math import ravel
+
+    def fn(ctx, params, cstate, batches, key):
+        k_local, k_enc = jax.random.split(key)
+        out = client_fn(ctx, params, cstate, batches, k_local)
+        vec, _ = ravel(out.grad)
+        state = cstate.get("ef") if codec.stateful else None
+        wire, new_state = codec.encode(vec, state, k_enc)
+        new_cstate = out.cstate
+        if codec.stateful:
+            new_cstate = dict(new_cstate, ef=new_state)
+        return out._replace(grad=wire, cstate=new_cstate)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# FLConfig (typed, validated construction)
+# ---------------------------------------------------------------------------
+
+# MethodConfig fields every method's local-training loop reads
+COMMON_OPTIONS = frozenset({"local_lr", "local_epochs"})
+
+@dataclasses.dataclass
+class FLConfig:
+    method: str = "fedncv"
+    n_clients: int = 100
+    cohort: int = 10                  # sampled clients per round
+    k_micro: int = 8                  # K microbatches (RLOO units)
+    micro_batch: int = 16
+    server_lr: float = 1.0
+    codec: str = "identity"           # client->server wire format (repro.comm)
+    codec_opts: dict = dataclasses.field(default_factory=dict)
+    staleness: int = 0                # 0 = sync; 1 = one-round-stale overlap
+    mc: M.MethodConfig = dataclasses.field(
+        default_factory=lambda: M.MethodConfig(name="fedncv"))
+
+    def __post_init__(self):
+        method = get_method(self.method)       # raises on unknown names
+        if self.mc.name != self.method:
+            raise ValueError(
+                f"FLConfig.method={self.method!r} does not match "
+                f"mc.name={self.mc.name!r} — the method config would be "
+                f"silently ignored; construct via FLConfig.make(method=...)")
+        if self.staleness not in (0, 1):
+            raise ValueError(f"staleness must be 0 or 1, got "
+                             f"{self.staleness}")
+        if not 1 <= self.cohort <= self.n_clients:
+            raise ValueError(f"cohort={self.cohort} must be in "
+                             f"[1, n_clients={self.n_clients}]")
+        if method.beta(self.mc) != 0.0 and self.cohort < 2:
+            raise ValueError(f"'{self.method}' uses the server-side control "
+                             f"variate (beta != 0): cohort must be >= 2")
+        if method.validate is not None:
+            method.validate(self.mc)
+
+    @classmethod
+    def make(cls, method: str = "fedncv", *, n_clients: int = 100,
+             cohort: int = 10, k_micro: int = 8, micro_batch: int = 16,
+             server_lr: float = 1.0, codec: str = "identity",
+             codec_opts: dict | None = None, staleness: int = 0,
+             **method_opts) -> "FLConfig":
+        """Validated construction: `method` must be registered, and
+        `method_opts` must be options the *chosen method* actually reads
+        (COMMON_OPTIONS plus its declared `FedMethod.options`) — both a
+        typo and an option the method would silently ignore raise instead
+        of training a default config."""
+        m = get_method(method)
+        allowed = COMMON_OPTIONS | set(m.options)
+        bad = sorted(set(method_opts) - allowed)
+        if bad:
+            raise TypeError(f"option(s) {bad} are not used by '{method}'; "
+                            f"valid options: {sorted(allowed)}")
+        return cls(method=method, n_clients=n_clients, cohort=cohort,
+                   k_micro=k_micro, micro_batch=micro_batch,
+                   server_lr=server_lr, codec=codec,
+                   codec_opts=dict(codec_opts or {}), staleness=staleness,
+                   mc=M.MethodConfig(name=method, **method_opts))
+
+
+# ---------------------------------------------------------------------------
+# the eight ported methods
+# ---------------------------------------------------------------------------
+
+def _client(fn):
+    """Adapt a raw methods.py client fn to the ctx signature."""
+    def client_update(ctx, params, cstate, batches, key):
+        return fn(ctx.mc, ctx.task, params, cstate, batches, key)
+    return client_update
+
+
+register_method(FedMethod(
+    name="fedavg",
+    client_update=_client(M.fedavg_client),
+    description="weighted mean of local SGD deltas (paper Eq. 2 baseline)",
+))
+
+def _fedprox_validate(mc: M.MethodConfig):
+    if mc.prox_mu < 0:
+        raise ValueError(f"prox_mu must be >= 0, got {mc.prox_mu}")
+
+
+register_method(FedMethod(
+    name="fedprox",
+    client_update=_client(M.fedprox_client),
+    options=("prox_mu",),
+    validate=_fedprox_validate,
+    description="FedAvg with a proximal term mu/2 ||p - p_t||^2",
+))
+
+
+def _scaffold_server(ctx: RoundCtx, params, agg, state):
+    params, state, diag = sgd_server(ctx, params, agg, state)
+    c_delta = jax.tree.map(lambda d: jnp.mean(d, 0), ctx.aux["delta_c"])
+    state = dict(state, c_global=tree_axpy(
+        ctx.fl.cohort / ctx.fl.n_clients, c_delta, state["c_global"]))
+    return params, state, diag
+
+
+register_method(FedMethod(
+    name="scaffold",
+    client_update=_client(M.scaffold_client),
+    server_update=_scaffold_server,
+    state_fields=(
+        StateField("c_u", per_client=True, cstate_key="c_u", scatter=True,
+                   init=lambda p, t, mc: tree_zeros_like(p)),
+        StateField("c_global", per_client=False, cstate_key="c_global",
+                   init=lambda p, t, mc: tree_zeros_like(p)),
+    ),
+    description="local gradients corrected by (c - c_u); client keeps c_u",
+))
+
+
+def _fedncv_server(ctx: RoundCtx, params, agg, state):
+    params, state, diag = sgd_server(ctx, params, agg, state)
+    mc, aux = ctx.mc, ctx.aux
+    stats = cv.ClientCVStats(None, aux["k"], aux["mean_norm_sq"],
+                             aux["sum_norm_sq"])
+    if mc.ncv_alpha_mode == "optimal":
+        alpha_new = jax.vmap(cv.optimal_alpha_single)(stats)
+    else:
+        alpha_new = jax.vmap(
+            lambda a, k, s1, s2: cv.alpha_descent_update(
+                a, cv.ClientCVStats(None, k, s1, s2), mc.ncv_alpha_lr))(
+            aux["alpha"], aux["k"], aux["mean_norm_sq"], aux["sum_norm_sq"])
+    state = dict(state, alphas=state["alphas"].at[ctx.idx].set(alpha_new))
+    return params, state, diag
+
+
+def _fedncv_validate(mc: M.MethodConfig):
+    if mc.ncv_alpha_mode not in ("descent", "optimal"):
+        raise ValueError(f"ncv_alpha_mode must be 'descent' or 'optimal', "
+                         f"got {mc.ncv_alpha_mode!r}")
+    if not 0.0 <= mc.ncv_alpha0 <= 1.0:
+        raise ValueError(f"ncv_alpha0 must be in [0, 1], got {mc.ncv_alpha0}")
+
+
+register_method(FedMethod(
+    name="fedncv",
+    client_update=_client(M.fedncv_client),
+    server_update=_fedncv_server,
+    state_fields=(
+        # scatter=False: the server computes the adapted alphas itself
+        # (Algorithm 1 line 12) and scatters inside server_update
+        StateField("alphas", per_client=True, cstate_key="alpha",
+                   init=lambda p, t, mc: jnp.float32(mc.ncv_alpha0)),
+    ),
+    beta=staticmethod(lambda mc: mc.ncv_beta),
+    options=("ncv_alpha0", "ncv_alpha_lr", "ncv_beta", "ncv_alpha_mode"),
+    validate=_fedncv_validate,
+    description="the paper: dual RLOO control variates (Algorithm 1)",
+))
+
+
+def _fedncv_plus_server(ctx: RoundCtx, params, agg, state):
+    del agg
+    params, sstate, diag = M.fedncv_plus_server(
+        ctx.mc, ctx.task, params, ctx.grads, ctx.sizes, ctx.idx,
+        dict(h=state["h"], h_sum=state["h_sum"]), ctx.fl.server_lr,
+        ctx.fl.n_clients)
+    return params, dict(state, h=sstate["h"], h_sum=sstate["h_sum"]), diag
+
+
+register_method(FedMethod(
+    name="fedncv+",
+    client_update=_client(M.fedavg_client),  # plain grads; server does the work
+    server_update=_fedncv_plus_server,
+    state_fields=(
+        # server-only (cstate_key=None): the stale gradient table h_u and
+        # its running sum never leave the server
+        StateField("h", per_client=True,
+                   init=lambda p, t, mc: tree_zeros_like(p)),
+        StateField("h_sum", per_client=False,
+                   init=lambda p, t, mc: tree_zeros_like(p)),
+    ),
+    needs_dense_grads=True,
+    distributed_ok=False,   # h is an all-clients table held at the server
+    description="beyond-paper: SAGA-style stale per-client server CVs",
+))
+
+
+def _personal_fields(task: M.Task, mc: M.MethodConfig):
+    return (StateField(
+        "personal", per_client=True, cstate_key="personal", scatter=True,
+        init=lambda p, t, mc: {k: p[k] for k in t.head_keys}),)
+
+
+register_method(FedMethod(
+    name="fedrep",
+    client_update=_client(M.fedrep_client),
+    state_fields=_personal_fields,
+    personal=True,
+    options=("head_local_steps",),
+    description="personal head fit first (body frozen), then shared body",
+))
+
+register_method(FedMethod(
+    name="fedper",
+    client_update=_client(M.fedper_client),
+    state_fields=_personal_fields,
+    personal=True,
+    description="body+head trained locally; body aggregated, head personal",
+))
+
+
+def _pfedsim_cohort_update(ctx: RoundCtx, cstates_new):
+    mixed = M.pfedsim_server_mix(ctx.aux["head"], cstates_new["personal"])
+    personal = jax.lax.cond(ctx.r % 10 == 0, lambda: mixed,
+                            lambda: cstates_new["personal"])
+    return dict(cstates_new, personal=personal)
+
+
+register_method(FedMethod(
+    name="pfedsim",
+    client_update=_client(M.pfedsim_client),
+    state_fields=_personal_fields,
+    personal=True,
+    cohort_state_update=_pfedsim_cohort_update,
+    description="FedAvg body + similarity-mixed personal classifiers",
+))
+
+
+# ---------------------------------------------------------------------------
+# fedglomo — the worked example: a new method purely through the public API
+# (DESIGN.md §7.3).  Global + local momentum (FedGLOMO-style, Das et al.):
+# each client smooths its uploaded update with a heavy-ball buffer carried
+# across the rounds it participates in, and the server applies the
+# aggregate through a global momentum buffer.
+# ---------------------------------------------------------------------------
+
+def fedglomo_client(ctx: MethodCtx, params, cstate, batches, key):
+    out = M.fedavg_client(ctx.mc, ctx.task, params, cstate, batches, key)
+    m_new = jax.tree.map(
+        lambda m_, g: ctx.mc.glomo_beta_local * m_ + g, cstate["m"], out.grad)
+    return out._replace(grad=m_new, cstate=dict(out.cstate, m=m_new))
+
+
+def _fedglomo_server(ctx: RoundCtx, params, agg, state):
+    tree, norm = agg
+    mc, lr = ctx.mc, ctx.fl.server_lr
+    v = jax.tree.map(
+        lambda vi, g: mc.glomo_beta_global * vi
+        + (1.0 - mc.glomo_beta_global) * g.astype(vi.dtype),
+        state["v"], tree)
+    params = jax.tree.map(lambda p, vi: p - lr * vi.astype(p.dtype), params, v)
+    return params, dict(state, v=v), dict(agg_norm=norm)
+
+
+def _fedglomo_validate(mc: M.MethodConfig):
+    for nm, b in (("glomo_beta_global", mc.glomo_beta_global),
+                  ("glomo_beta_local", mc.glomo_beta_local)):
+        if not 0.0 <= b < 1.0:
+            raise ValueError(f"{nm} must be in [0, 1), got {b}")
+
+
+register_method(FedMethod(
+    name="fedglomo",
+    client_update=fedglomo_client,
+    server_update=_fedglomo_server,
+    state_fields=(
+        StateField("m", per_client=True, cstate_key="m", scatter=True,
+                   init=lambda p, t, mc: tree_zeros_like(p)),
+        StateField("v", per_client=False,
+                   init=lambda p, t, mc: tree_zeros_like(p)),
+    ),
+    options=("glomo_beta_global", "glomo_beta_local"),
+    validate=_fedglomo_validate,
+    description="global + local momentum (FedGLOMO-style)",
+))

@@ -1,8 +1,8 @@
-"""Mesh-distributed FedNCV: the faithful per-client algorithm under
+"""Mesh-distributed federated rounds: any registered `FedMethod` under
 `jax.shard_map` — clients live on the ("pod","data") mesh axes, each shard
-computes its own microbatch gradients, RLOO statistics and message locally,
-and the server side runs as collectives.  Eq. 10-12 collapses to ONE
-parameter-sized all-reduce (the same volume FedAvg pays):
+computes its own client pass (microbatch gradients, RLOO statistics,
+message) locally, and the server side runs as collectives.  Eq. 10-12
+collapses to ONE parameter-sized all-reduce (the same volume FedAvg pays):
 
     n   = psum_u n_u                  (scalar)
     t   = psum_u n_u / (n - n_u)      (scalar)
@@ -12,10 +12,21 @@ parameter-sized all-reduce (the same volume FedAvg pays):
 which is algebraically identical to the two-pass form (weighted mean
 gbar_w + per-client LOO correction + second reduce) for arbitrary client
 weights and beta — expanding sum_u p_u (msg_u - beta c_{V\\u}) and
-collecting msg_u terms gives exactly the `ncv_coefficients` weights.  PR 3
-replaced the explicit two-psum form: half the collective volume per round,
-and the same weights the sharded-cohort simulator path uses
-(fed/sharded.py, DESIGN.md §6).
+collecting msg_u terms gives exactly the `ncv_coefficients` weights.
+`beta` comes from the method (`FedMethod.beta(mc)`): 0 for the weighted
+FedAvg family, `mc.ncv_beta` for FedNCV.
+
+PR 4 made the runtime method-agnostic: `make_round(method, ...)` builds a
+round for any registered strategy with `distributed_ok` — per-client state
+is threaded through the shard_map by the method's `state_spec()` (each
+shard owns its client's rows; full participation means the post-round
+write-back is a plain restack, no scatter), the client message is encoded
+*before* the psum-side collectives when a codec is given (the all-reduce
+operands carry exactly the quantization error the server would see), and
+the method's `server_update` — the same code the Simulator runs — applies
+the aggregate and refreshes global/per-client state outside the shard_map
+region.  `make_fedncv_round` survives as the legacy alphas-in/alphas-out
+wrapper.
 
 This is the validation path for the per-client semantics (the pure-GSPMD
 train step in launch/train.py is the big-model path where the equal-weight
@@ -24,14 +35,12 @@ replicated over client shards (LeNet, ~100M LMs).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import control_variates as cv
-from repro.fed.methods import MethodConfig, Task, _microbatch_grads
+from repro.fed import api
+from repro.fed.methods import MethodConfig, Task
 from repro.fed.sharded import shard_map_compat
 from repro.utils.tree_math import ravel, tree_norm_sq, unravel
 
@@ -40,81 +49,203 @@ def client_axes(mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float,
-                      codec=None):
-    """Returns round(params, alphas, batch, n_samples[, seeds[, ef]]).
+def init_distributed_state(method: api.FedMethod, params, task: Task,
+                           mc: MethodConfig, n_clients: int, codec=None):
+    """The state dict a `make_round` round threads: per-client fields with
+    (n_clients, ...) leading dims (shard these over the client axes),
+    global fields replicated, plus "ef" for stateful codecs."""
+    fields = method.state_spec(task, mc)
+    return api.init_state(fields, params, task, mc, n_clients, codec=codec)
 
-    batch leaves: (n_clients, K, b, ...) sharded on dim0 over client axes;
-    alphas/n_samples: (n_clients,) sharded likewise; params replicated.
+
+def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
+               codec=None, seed: int = 0):
+    """Build round(params, state, batch, n_samples, r[, seeds]) for any
+    registered method (name or FedMethod) with `distributed_ok`.
+
+    batch leaves: (n_clients, K, b, ...) sharded on dim0 over the client
+    axes — one client per shard; state: `init_distributed_state` layout
+    (per-client fields sharded on dim0, globals replicated); n_samples:
+    (n_clients,) sharded likewise; params replicated; r: traced round
+    number (drives round-indexed hooks, e.g. pFedSim's periodic head mix,
+    and the per-round client PRNG fold).  `seed` seeds the client-side
+    PRNG stream: each client pass receives fold_in(fold_in(key(seed), r),
+    client_index), so methods that consume randomness (dropout, DP noise)
+    vary per round, per client, and per experiment seed.
 
     With a non-identity `codec` (repro.comm) each shard encodes its message
-    *before* the psum-side collectives — the all-reduce operands carry
-    exactly the quantization/sparsification error the server would see from
-    compressed uploads — and the round takes per-client uint32 `seeds`
-    (stochastic rounding randomness, sharded like alphas).  A stateful
-    codec (top-k error feedback) additionally threads the per-client
-    residual `ef` (n_clients, N), returned updated after the alphas.  The
-    round reports `bytes_up`, the cohort's uploaded gradient-wire bytes
-    (the alpha statistics ride the collectives as 2 scalars per client).
+    *before* the psum-side collectives and the round takes per-client
+    uint32 `seeds` (stochastic rounding randomness, sharded like
+    n_samples); a stateful codec's per-client residual rides `state["ef"]`.
+    Returns (params, state, metrics): `agg_norm`, the pmean of every
+    scalar client aux statistic as `mean_<name>`, and `bytes_up` (the
+    cohort's uploaded gradient-wire bytes) under a codec.
     """
+    if isinstance(method, str):
+        method = api.get_method(method)
+    if not method.distributed_ok:
+        raise NotImplementedError(
+            f"method '{method.name}' is not supported by the distributed "
+            f"runtime (needs_dense_grads/all-client server state)")
+    if mc.name != method.name:
+        raise ValueError(f"make_round(method={method.name!r}) but "
+                         f"mc.name={mc.name!r} — the method config would "
+                         f"be silently ignored")
+    fields = method.state_spec(task, mc)
     ca = client_axes(mesh)
     use_wire = codec is not None and codec.name != "identity"
     stateful = use_wire and codec.stateful
+    beta = method.beta(mc)
+    ctx_c = api.MethodCtx(task, mc)
+    scatter_keys = tuple(f.cstate_key for f in fields
+                         if f.per_client and f.scatter
+                         and f.cstate_key is not None)
 
-    def body(params, alpha, batch, n_u, *extra):
+    def shard_cstate(state_l):
+        cs = {}
+        for f in fields:
+            if f.cstate_key is None:
+                continue
+            v = state_l[f.name]
+            cs[f.cstate_key] = jax.tree.map(lambda x: x[0], v) \
+                if f.per_client else v
+        if not cs:
+            cs = dict(dummy=jnp.zeros(()))
+        return cs
+
+    def body(params, batch, n_u, state_l, r, *extra):
         # strip the per-shard client dim (1 client per shard)
         local_batch = jax.tree.map(lambda x: x[0], batch)
-        alpha_u = alpha[0]
         n_u_local = n_u[0].astype(jnp.float32)
+        cstate = shard_cstate(state_l)
+        if stateful:
+            cstate["ef"] = state_l["ef"][0]
 
-        # ---- client side (Algorithm 1 lines 3-8), flat substrate ----
-        g_stack = _microbatch_grads(task, params, local_batch)
-        msg, stats, _ = cv.client_pass_flat(g_stack, alpha_u)
+        # ---- client side, on this client's shard ----
+        # distinct per-(seed, round, client) randomness
+        ai = jnp.int32(0)
+        for a in ca:
+            ai = ai * mesh.shape[a] + jax.lax.axis_index(a)
+        key_c = jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(seed), r), ai)
+        out = method.client_update(ctx_c, params, cstate, local_batch,
+                                   key_c)
+        msg, new_cstate = out.grad, out.cstate
 
         # ---- wire encode (DESIGN.md §5): before any collective ----
-        ef_new = None
         if use_wire:
             key_u = jax.random.PRNGKey(extra[0][0])
-            ef_u = extra[1][0] if stateful else None
+            ef_u = new_cstate.get("ef") if stateful else None
             vec, vspec = ravel(msg)
             wire, ef_new = codec.encode(vec, ef_u, key_u)
             msg = unravel(codec.decode(wire), vspec)
+            if stateful:
+                new_cstate = dict(new_cstate, ef=ef_new)
 
-        # ---- server side (lines 9-13): one weighted all-reduce ----
-        # w_u from two scalar psums (module docstring); the estimator is
-        # then the single parameter-sized psum g = psum_u w_u msg_u.
+        # ---- Eq. 10-12 collapse: one weighted all-reduce ----
         n = jax.lax.psum(n_u_local, ca)
-        t = jax.lax.psum(n_u_local / (n - n_u_local), ca)
         p_u = n_u_local / n
-        w_u = (1.0 - mc.ncv_beta * t) * p_u \
-            + mc.ncv_beta * p_u * n_u_local / (n - n_u_local)
+        if beta == 0.0:           # plain weighted mean (FedAvg family)
+            w_u = p_u
+        else:
+            t = jax.lax.psum(n_u_local / (n - n_u_local), ca)
+            w_u = (1.0 - beta * t) * p_u \
+                + beta * p_u * n_u_local / (n - n_u_local)
         agg = jax.tree.map(lambda m: jax.lax.psum(w_u * m, ca), msg)
 
-        new_params = jax.tree.map(
-            lambda p, g: (p - server_lr * g).astype(p.dtype), params, agg)
-        alpha_new = cv.alpha_descent_update(alpha_u, stats, mc.ncv_alpha_lr)
-        metrics = dict(
-            agg_norm=tree_norm_sq(agg),
-            mean_s1=jax.lax.pmean(stats.mean_norm_sq, ca),
-            mean_s2=jax.lax.pmean(stats.sum_norm_sq, ca),
-        )
-        if use_wire:
-            metrics["bytes_up"] = jax.lax.psum(
-                jnp.float32(codec.bytes_per_client()), ca)
-        out = (new_params, alpha_new[None])
+        # restack the per-client outputs (full participation: the
+        # write-back outside is a plain restack, no scatter conflicts)
+        cs_out = {k: jax.tree.map(lambda x: x[None], new_cstate[k])
+                  for k in scatter_keys}
         if stateful:
-            out += (ef_new[None],)
-        return out + (metrics,)
+            cs_out["ef"] = new_cstate["ef"][None]
+        ret = dict(agg=agg, cstates=cs_out,
+                   aux=jax.tree.map(lambda x: x[None], out.aux))
+        return ret
 
-    pspec = P()
-    cspec = P(ca)
-    in_specs = (pspec, cspec, cspec, cspec)       # params, alphas, batch, n_u
-    out_specs = (pspec, cspec) + ((cspec,) if stateful else ()) + (pspec,)
+    pspec, cspec = P(), P(ca)
+    state_specs = {f.name: (cspec if f.per_client else pspec)
+                   for f in fields}
+    if stateful:
+        state_specs["ef"] = cspec
+    in_specs = (pspec, cspec, cspec, state_specs, pspec)  # ... state, r
     if use_wire:
         in_specs += (cspec,)                      # seeds
+    out_specs = dict(agg=pspec, aux=cspec,
+                     cstates={k: cspec for k in scatter_keys})
     if stateful:
-        in_specs += (cspec,)                      # error-feedback residuals
-
-    round_fn = shard_map_compat(body, mesh, in_specs=in_specs,
+        out_specs["cstates"]["ef"] = cspec
+    shard_fn = shard_map_compat(body, mesh, in_specs=in_specs,
                                 out_specs=out_specs)
+
+    def round_fn(params, state, batch, n_samples, r, *extra):
+        m_total = n_samples.shape[0]
+        # a faithful FLConfig for RoundCtx.fl: full participation
+        # (cohort == n_clients), K/b read off the batch, the actual codec
+        _, k_micro, micro_batch = jax.tree.leaves(batch)[0].shape[:3]
+        fl = api.FLConfig(method=method.name, n_clients=m_total,
+                          cohort=m_total, k_micro=int(k_micro),
+                          micro_batch=int(micro_batch),
+                          server_lr=server_lr,
+                          codec=codec.name if codec is not None
+                          else "identity", mc=mc)
+        out = shard_fn(params, batch, n_samples, state, jnp.int32(r),
+                       *extra)
+        agg, aux, cstates = out["agg"], out["aux"], out["cstates"]
+        idx = jnp.arange(m_total)
+        ctx = api.RoundCtx(task=task, mc=mc, fl=fl, r=r, idx=idx,
+                           sizes=n_samples.astype(jnp.float32), aux=aux)
+
+        new_state = dict(state)
+        if stateful:
+            new_state["ef"] = cstates["ef"]
+        if method.cohort_state_update is not None:
+            cstates = method.cohort_state_update(ctx, cstates)
+        new_state = api.scatter_cohort_states(fields, new_state, idx,
+                                              cstates)
+        params, new_state, diag = method.server_update(
+            ctx, params, (agg, tree_norm_sq(agg)), new_state)
+
+        metrics = {k: v for k, v in diag.items()
+                   if getattr(v, "ndim", None) == 0}
+        for k, v in aux.items():
+            if getattr(v, "ndim", None) == 1:
+                metrics[f"mean_{k}"] = jnp.mean(v)
+        if use_wire:
+            metrics["bytes_up"] = jnp.float32(
+                m_total * codec.bytes_per_client())
+        return params, new_state, metrics
+
     return jax.jit(round_fn)
+
+
+def make_fedncv_round(task: Task, mesh, mc: MethodConfig, server_lr: float,
+                      codec=None):
+    """Legacy FedNCV wrapper around the generic `make_round`:
+    round(params, alphas, batch, n_samples[, seeds[, ef]]) ->
+    (params, alphas[, ef], metrics) with the PR-3 metric names.  The
+    wrapper is stateless, so the round number is fixed at 0 (FedNCV uses
+    no round-indexed hooks and its client consumes no randomness); drive
+    `make_round` directly for per-round PRNG variation."""
+    use_wire = codec is not None and codec.name != "identity"
+    stateful = use_wire and codec.stateful
+    round_fn = make_round("fedncv", task, mesh, mc, server_lr, codec=codec)
+
+    def legacy(params, alphas, batch, n_samples, *extra):
+        state = dict(alphas=alphas)
+        if stateful:
+            state["ef"] = extra[1]
+        seeds = (extra[0],) if use_wire else ()
+        params, state, metrics = round_fn(params, state, batch, n_samples,
+                                          jnp.int32(0), *seeds)
+        metrics = dict(agg_norm=metrics["agg_norm"],
+                       mean_s1=metrics["mean_mean_norm_sq"],
+                       mean_s2=metrics["mean_sum_norm_sq"],
+                       **({"bytes_up": metrics["bytes_up"]}
+                          if use_wire else {}))
+        out = (params, state["alphas"])
+        if stateful:
+            out += (state["ef"],)
+        return out + (metrics,)
+
+    return legacy

@@ -1,15 +1,13 @@
-"""Federated optimization methods: FedNCV (the paper) + the six comparison
-baselines from Table 1 (FedAvg, FedProx, SCAFFOLD, FedRep, FedPer, pFedSim)
-+ the beyond-paper FedNCV+ (stale server control variates, FedVARP-style).
+"""Client/server building blocks of the federated methods: FedNCV (the
+paper) + the six comparison baselines from Table 1 (FedAvg, FedProx,
+SCAFFOLD, FedRep, FedPer, pFedSim) + the beyond-paper FedNCV+ (stale server
+control variates, FedVARP-style).
 
-Every method is factored into two pure, vmap/pjit-friendly functions:
-
-    client_update(task, params, cstate, batches, key) -> ClientOut
-    server_update(task, params, souts, n_samples)     -> (params, sstate)
-
-`batches` is a pytree whose leaves are stacked (K, micro_batch, ...) — the K
-RLOO units.  All methods consume the same structure so the simulator and the
-distributed runtime can swap methods without re-plumbing.
+These are pure, vmap/pjit-friendly functions over a fixed structure:
+`batches` is a pytree whose leaves are stacked (K, micro_batch, ...) — the
+K RLOO units.  The typed strategy objects that bind them into runnable
+methods (state specs, server updates, the registry) live in `fed/api.py`;
+runtimes never dispatch on method names, only on `FedMethod` instances.
 """
 from __future__ import annotations
 
@@ -21,8 +19,8 @@ import jax.numpy as jnp
 
 from repro.core import control_variates as cv
 from repro.utils.tree_math import (
-    ravel, tree_axpy, tree_mean, tree_scale, tree_sub, tree_zeros_like,
-    tree_dot, tree_norm_sq, unravel,
+    tree_axpy, tree_mean, tree_norm_sq, tree_scale, tree_sub,
+    tree_zeros_like, unravel,
 )
 
 
@@ -45,35 +43,14 @@ class MethodConfig:
     ncv_beta: float = 1.0        # server-side CV coefficient (paper: 1)
     ncv_alpha_mode: str = "descent"   # "descent" (Alg.1) | "optimal" (Prop.2)
     head_local_steps: int = 3    # FedRep: head-only steps before body pass
+    glomo_beta_global: float = 0.9   # FedGLOMO: server momentum coefficient
+    glomo_beta_local: float = 0.5    # FedGLOMO: client heavy-ball coefficient
 
 
 class ClientOut(tp.NamedTuple):
     grad: tp.Any                 # uploaded gradient-like pytree
     cstate: tp.Any               # new per-client state
     aux: tp.Any                  # scalar diagnostics dict
-
-
-def with_codec(client_fn, codec):
-    """Compose a client fn with wire encoding (DESIGN.md §5).
-
-    The uploaded gradient leaves the client compressed: the wrapped fn
-    ravels `ClientOut.grad` into the flat (N,) vector and replaces it with
-    the codec's wire dict.  Stateful codecs (top-k error feedback) read and
-    write their per-client residual under the ``"ef"`` key of `cstate`, so
-    the residual rides the same gather/scatter path as every other
-    per-client state (alphas, c_u, personal heads).
-    """
-    def fn(mc, task, params, cstate, batches, key):
-        k_local, k_enc = jax.random.split(key)
-        out = client_fn(mc, task, params, cstate, batches, k_local)
-        vec, _ = ravel(out.grad)
-        state = cstate.get("ef") if codec.stateful else None
-        wire, new_state = codec.encode(vec, state, k_enc)
-        new_cstate = out.cstate
-        if codec.stateful:
-            new_cstate = dict(new_cstate, ef=new_state)
-        return out._replace(grad=wire, cstate=new_cstate)
-    return fn
 
 
 def _aggregate(grads_stacked, n_samples, beta, codec, spec):
@@ -138,21 +115,6 @@ def fedavg_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
     return ClientOut(grad, cstate, dict())
 
 
-def fedavg_server(mc, task, params, grads_stacked, n_samples, sstate, lr,
-                  codec=None, spec=None, agg=None):
-    """`codec`/`spec` switch the server onto the compressed wire:
-    `grads_stacked` is then the stacked wire dict and the aggregate is taken
-    by fused dequantize-aggregate (or per-client decode) over it.  `agg`
-    (an (aggregate pytree, ||agg||^2) pair) bypasses the reduction entirely
-    — the sharded-cohort path precomputes it inside its shard_map region
-    (fed/sharded.py) and `grads_stacked` may then be None."""
-    if agg is None:
-        agg = _aggregate(grads_stacked, n_samples, 0.0, codec, spec)
-    agg, agg_norm = agg
-    params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
-    return params, sstate, dict(agg_norm=agg_norm)
-
-
 # ---------------------------------------------------------------------------
 # FedProx: proximal term mu/2 ||p - p_t||^2 in the local objective
 # ---------------------------------------------------------------------------
@@ -200,10 +162,6 @@ def scaffold_client(mc: MethodConfig, task: Task, params, cstate, batches,
     return ClientOut(grad, dict(cstate, c_u=c_u_new), dict(delta_c=delta_c))
 
 
-def scaffold_init_cstate(params):
-    return dict(c_global=tree_zeros_like(params), c_u=tree_zeros_like(params))
-
-
 # ---------------------------------------------------------------------------
 # FedNCV (the paper, Algorithm 1)
 # ---------------------------------------------------------------------------
@@ -247,38 +205,6 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
     aux = dict(mean_norm_sq=stats.mean_norm_sq, sum_norm_sq=stats.sum_norm_sq,
                k=stats.k, alpha=alpha)
     return ClientOut(grad, cstate, aux)
-
-
-def fedncv_server(mc: MethodConfig, task, params, grads_stacked, n_samples,
-                  aux, sstate, lr, codec=None, spec=None, agg=None):
-    """Server side of Algorithm 1 (lines 9-13): networked aggregation (Eq.
-    10-12, one fused pass over the flat cohort stack) + alpha_u adaptation
-    (line 12, or Prop. 2 closed form — M scalars, done outside the kernel).
-
-    With a `codec`, `grads_stacked` is the stacked wire and the aggregation
-    runs directly on the compressed uploads (fused dequantize-aggregate for
-    int8); the alpha statistics ride in `aux` uncompressed (4 scalars).
-    A precomputed `agg` pair short-circuits the reduction (sharded path,
-    see `fedavg_server`)."""
-    if agg is None:
-        agg = _aggregate(grads_stacked, n_samples, mc.ncv_beta, codec, spec)
-    agg, agg_norm = agg
-    params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
-
-    stats = cv.ClientCVStats(None, aux["k"], aux["mean_norm_sq"],
-                             aux["sum_norm_sq"])
-    if mc.ncv_alpha_mode == "optimal":
-        alpha_new = jax.vmap(cv.optimal_alpha_single)(stats)
-    else:
-        alpha_new = jax.vmap(
-            lambda a, k, s1, s2: cv.alpha_descent_update(
-                a, cv.ClientCVStats(None, k, s1, s2), mc.ncv_alpha_lr))(
-            aux["alpha"], aux["k"], aux["mean_norm_sq"], aux["sum_norm_sq"])
-    return params, sstate, dict(alpha=alpha_new, agg_norm=agg_norm)
-
-
-def fedncv_init_cstate(params, mc: MethodConfig):
-    return dict(alpha=jnp.float32(mc.ncv_alpha0))
 
 
 # ---------------------------------------------------------------------------
@@ -370,10 +296,6 @@ def pfedsim_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
     head_flat = jnp.concatenate([jnp.ravel(cstate["personal"][k])
                                  for k in task.head_keys])
     return out._replace(aux=dict(head=head_flat))
-
-
-def personal_init_cstate(task: Task, params):
-    return dict(personal={k: params[k] for k in task.head_keys})
 
 
 def pfedsim_server_mix(heads, personals, temp=5.0):

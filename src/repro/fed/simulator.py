@@ -38,13 +38,14 @@ pipeline bubble (no update is applied; its diagnostics row reads zero).
 Bounded staleness: every applied update is exactly one round old —
 `theta_r = server(theta_{r-1}, clients(theta_{r-2}, cohort_{r-1}))`.
 
-The same `methods.py` client/server functions are reused by the
-mesh-distributed runtime (fed/distributed.py), so what this simulator
-validates is exactly what runs on the pod.
+Methods are `fed.api.FedMethod` strategies resolved from the registry
+(DESIGN.md §7): all per-client/global state handling — init, cohort
+gather/scatter, checkpointing — is driven by the method's `state_spec()`,
+so the round body here is method-agnostic.  The same strategies are reused
+by the mesh-distributed runtime (fed/distributed.py), so what this
+simulator validates is exactly what runs on the pod.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -52,39 +53,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import comm
+from repro.fed import api
 from repro.fed import methods as M
 from repro.fed import sharded
+from repro.fed.api import FLConfig  # noqa: F401  (re-export: public API)
 from repro.utils.tree_math import (
-    flat_spec, ravel_stack, tree_axpy, tree_bytes, tree_zeros_like, unravel,
+    flat_spec, ravel_stack, tree_bytes, unravel,
 )
-
-CLIENT_FNS = {
-    "fedavg": M.fedavg_client,
-    "fedprox": M.fedprox_client,
-    "scaffold": M.scaffold_client,
-    "fedncv": M.fedncv_client,
-    "fedncv+": M.fedavg_client,          # plain grads; server does the work
-    "fedrep": M.fedrep_client,
-    "fedper": M.fedper_client,
-    "pfedsim": M.pfedsim_client,
-}
-
-PERSONAL_METHODS = ("fedrep", "fedper", "pfedsim")
-
-
-@dataclasses.dataclass
-class FLConfig:
-    method: str = "fedncv"
-    n_clients: int = 100
-    cohort: int = 10                  # sampled clients per round
-    k_micro: int = 8                  # K microbatches (RLOO units)
-    micro_batch: int = 16
-    server_lr: float = 1.0
-    codec: str = "identity"           # client->server wire format (repro.comm)
-    codec_opts: dict = dataclasses.field(default_factory=dict)
-    staleness: int = 0                # 0 = sync; 1 = one-round-stale overlap
-    mc: M.MethodConfig = dataclasses.field(
-        default_factory=lambda: M.MethodConfig(name="fedncv"))
 
 
 def _tree_where(flag, new, old):
@@ -103,6 +78,8 @@ class Simulator:
         """
         assert fl.staleness in (0, 1), fl.staleness
         self.task, self.fl = task, fl
+        self.method = api.get_method(fl.method)
+        self._fields = self.method.state_spec(task, fl.mc)
         self.mesh = mesh
         if mesh is not None:
             assert len(mesh.axis_names) == 1, mesh.axis_names
@@ -124,30 +101,18 @@ class Simulator:
         from repro.kernels import default_interpret
         self._use_pallas = not default_interpret()
 
-        # per-client state
-        if fl.method == "scaffold":
-            self.c_u = jax.vmap(lambda _: tree_zeros_like(params))(
-                jnp.arange(m))
-            self.c_global = tree_zeros_like(params)
-        elif fl.method == "fedncv":
-            self.alphas = jnp.full((m,), fl.mc.ncv_alpha0, jnp.float32)
-        elif fl.method in PERSONAL_METHODS:
-            self.personal = jax.vmap(
-                lambda _: {k: params[k] for k in task.head_keys})(
-                jnp.arange(m))
-        if fl.method == "fedncv+":
-            self.h = jax.vmap(lambda _: tree_zeros_like(params))(
-                jnp.arange(m))
-            self.h_sum = tree_zeros_like(params)
-        if self.codec.stateful:
-            # per-client error-feedback residuals, carried like `alphas`;
-            # under a mesh the (M, N) buffer is stored sharded over clients
-            # (scatter/gather at the cohort indices is resolved by GSPMD)
-            self.ef = jax.vmap(lambda _: self.codec.init_state())(
-                jnp.arange(m))
-            if mesh is not None and m % self.n_devices == 0:
-                self.ef = jax.device_put(
-                    self.ef, NamedSharding(mesh, P(self.caxis)))
+        # method + codec state, built from the declarative state_spec():
+        # per-client fields live in (M, ...) buffers gathered/scattered at
+        # the cohort indices, global fields are plain pytrees.  The codec's
+        # per-client error-feedback residuals ride under "ef"; under a mesh
+        # the (M, N) buffer is stored sharded over clients (scatter/gather
+        # at the cohort indices is resolved by GSPMD).
+        self._state = api.init_state(self._fields, params, task, fl.mc, m,
+                                     codec=self.codec)
+        if self.codec.stateful and mesh is not None \
+                and m % self.n_devices == 0:
+            self._state["ef"] = jax.device_put(
+                self._state["ef"], NamedSharding(mesh, P(self.caxis)))
 
         # async pipeline buffers (round in flight; None until first round)
         self._pending = None
@@ -164,36 +129,41 @@ class Simulator:
         self._eval_jit = jax.jit(self._eval_core,
                                  static_argnames=("personalize_steps",))
 
+        # state-field names double as attributes (__getattr__/__setattr__
+        # redirection): a field shadowing a real instance attribute would
+        # silently split reads from writes — refuse it loudly instead
+        clash = sorted({f.name for f in self._fields} & set(self.__dict__))
+        if clash:
+            raise ValueError(
+                f"state_spec() field name(s) {clash} collide with "
+                f"Simulator attributes; rename the StateField(s)")
+
     # ------------------------------------------------------------------
-    # method state <-> attribute plumbing (attributes are the public API)
+    # method state plumbing: one spec-shaped dict; the field names double
+    # as read-only simulator attributes (sim.alphas, sim.personal, sim.ef)
     # ------------------------------------------------------------------
     def _get_state(self):
-        fl = self.fl
-        state = dict()
-        if fl.method == "scaffold":
-            state = dict(c_u=self.c_u, c_global=self.c_global)
-        elif fl.method == "fedncv":
-            state = dict(alphas=self.alphas)
-        elif fl.method in PERSONAL_METHODS:
-            state = dict(personal=self.personal)
-        elif fl.method == "fedncv+":
-            state = dict(h=self.h, h_sum=self.h_sum)
-        if self.codec.stateful:
-            state["ef"] = self.ef
-        return state
+        return dict(self._state)
 
     def _set_state(self, state):
-        fl = self.fl
-        if fl.method == "scaffold":
-            self.c_u, self.c_global = state["c_u"], state["c_global"]
-        elif fl.method == "fedncv":
-            self.alphas = state["alphas"]
-        elif fl.method in PERSONAL_METHODS:
-            self.personal = state["personal"]
-        elif fl.method == "fedncv+":
-            self.h, self.h_sum = state["h"], state["h_sum"]
-        if self.codec.stateful:
-            self.ef = state["ef"]
+        self._state = dict(state)
+
+    def __getattr__(self, name):
+        state = self.__dict__.get("_state")
+        if state is not None and name in state:
+            return state[name]
+        raise AttributeError(
+            f"{type(self).__name__!s} has no attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        # writes to spec-field names update the live state dict, so
+        # `sim.alphas = x` keeps its pre-PR4 meaning instead of leaving a
+        # stale shadow the run would silently ignore
+        state = self.__dict__.get("_state")
+        if state is not None and name in state:
+            self._state = dict(state, **{name: value})
+            return
+        super().__setattr__(name, value)
 
     # ------------------------------------------------------------------
     # one round, fully on device
@@ -226,18 +196,7 @@ class Simulator:
                 if k not in ("client_idx", "client_sizes")}
 
     def _cohort_cstates(self, state, idx):
-        fl = self.fl
-        if fl.method == "scaffold":
-            cs = dict(
-                c_u=jax.tree.map(lambda x: x[idx], state["c_u"]),
-                c_global=jax.vmap(lambda _: state["c_global"])(idx))
-        elif fl.method == "fedncv":
-            cs = dict(alpha=state["alphas"][idx])
-        elif fl.method in PERSONAL_METHODS:
-            cs = dict(personal=jax.tree.map(lambda x: x[idx],
-                                            state["personal"]))
-        else:
-            cs = dict(dummy=jnp.zeros(idx.shape[0]))
+        cs = api.gather_cohort_states(self._fields, state, idx)
         if self.codec.stateful:
             cs["ef"] = state["ef"][idx]
         return cs
@@ -250,11 +209,11 @@ class Simulator:
         return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
 
     def _client_fn(self):
-        client_fn = CLIENT_FNS[self.fl.method]
+        client_fn = self.method.client_update
         # non-identity codecs compress the upload at the end of the client fn
         # and the servers aggregate straight off the wire (DESIGN.md §5)
         if self.codec.name != "identity":
-            client_fn = M.with_codec(client_fn, self.codec)
+            client_fn = api.with_codec(client_fn, self.codec)
         return client_fn
 
     def _client_section(self, params, state, key):
@@ -272,15 +231,16 @@ class Simulator:
         return self._client_section_sharded(params, state, key)
 
     def _client_section_local(self, params, state, key):
-        task, fl = self.task, self.fl
-        client_fn, mc = self._client_fn(), self.fl.mc
+        fl = self.fl
+        client_fn = self._client_fn()
+        ctx = api.MethodCtx(self.task, fl.mc)
         kd, kk = jax.random.split(key)
         idx, sel, sizes = self._draw_cohort_sel(kd)
         batches = self._gather_batch(self.data, sel)
         cstates = self._cohort_cstates(state, idx)
         keys = self._slot_keys(kk, fl.cohort)
         outs = jax.vmap(
-            lambda cs, b, k: client_fn(mc, task, params, cs, b, k)
+            lambda cs, b, k: client_fn(ctx, params, cs, b, k)
         )(cstates, batches, keys)
         return dict(idx=idx, sizes=sizes, grads=outs.grad,
                     cstates=outs.cstate, aux=outs.aux)
@@ -290,14 +250,15 @@ class Simulator:
         dim — each device gathers, trains and encodes only its local slice
         of the (padded) cohort, and the Eq. 10-12 reduction is the sharded
         fused path (local kernel pass + one psum, fed/sharded.py)."""
-        task, fl, codec = self.task, self.fl, self.codec
+        fl, codec = self.fl, self.codec
         client_fn, mc = self._client_fn(), self.fl.mc
+        ctx = api.MethodCtx(self.task, mc)
         axis, dcount = self.caxis, self.n_devices
         use_wire = codec.name != "identity"
-        # fedncv+ updates per-client control variates h_u at the server:
-        # it needs the dense per-client uploads, not just the aggregate
-        agg_path = fl.method != "fedncv+"
-        beta = mc.ncv_beta if fl.method == "fedncv" else 0.0
+        # dense-grad methods (FedNCV+'s per-client h_u) need the per-client
+        # uploads at the server, not just the aggregate
+        agg_path = not self.method.needs_dense_grads
+        beta = self.method.beta(mc)
 
         kd, kk = jax.random.split(key)
         idx, sel, sizes = self._draw_cohort_sel(kd)
@@ -314,7 +275,7 @@ class Simulator:
         def body(params, data, cstates_l, sel_l, sizes_l, keys_l):
             batch = self._gather_batch(data, sel_l)
             outs = jax.vmap(
-                lambda cs, b, k: client_fn(mc, task, params, cs, b, k)
+                lambda cs, b, k: client_fn(ctx, params, cs, b, k)
             )(cstates_l, batch, keys_l)
             ret = dict(cstates=outs.cstate, aux=outs.aux)
             if agg_path:
@@ -357,9 +318,12 @@ class Simulator:
         return pending
 
     def _server_section(self, params, state, pending, r):
-        """Per-method server update + per-client state scatter from a
-        pending client section.  Pure; jit/scan-able."""
-        task, fl, codec = self.task, self.fl, self.codec
+        """Generic server half of a round, driven entirely by the method's
+        state_spec() and server_update: codec EF scatter, the fused
+        Eq. 10-12 aggregation with the method's beta, cohort state
+        write-back, then the method's server update.  Pure; jit/scan-able.
+        No per-method branches — a registered method never touches this."""
+        fl, codec, method = self.fl, self.codec, self.method
         mc = fl.mc
         use_wire = codec.name != "identity"
         idx, sizes = pending["idx"], pending["sizes"]
@@ -374,45 +338,36 @@ class Simulator:
                 new_state["ef"] = jax.lax.with_sharding_constraint(
                     new_state["ef"],
                     NamedSharding(self.mesh, P(self.caxis)))
-        wire_kw = dict(codec=codec, spec=self._grad_spec) if use_wire else {}
-        if "agg_vec" in pending:          # sharded path precomputed Eq.10-12
-            wire_kw = dict(agg=(unravel(pending["agg_vec"], self._grad_spec),
-                                pending["agg_norm"]))
-        if fl.method == "fedncv":
-            params, _, diag = M.fedncv_server(
-                mc, task, params, grads, sizes, aux, dict(), fl.server_lr,
-                **wire_kw)
-            new_state["alphas"] = state["alphas"].at[idx].set(
-                diag.pop("alpha"))
-        elif fl.method == "fedncv+":
-            if use_wire:   # FedNCV+ updates per-client h_u: needs dense grads
-                grads = comm.decode_stack(codec, grads, self._grad_spec)
-            params, sstate, diag = M.fedncv_plus_server(
-                mc, task, params, grads, sizes, idx,
-                dict(h=state["h"], h_sum=state["h_sum"]),
-                fl.server_lr, fl.n_clients)
-            new_state["h"], new_state["h_sum"] = sstate["h"], sstate["h_sum"]
+
+        # dense per-client uploads, decoded once, only if the method asks
+        dense = None
+        if method.needs_dense_grads:
+            dense = comm.decode_stack(codec, grads, self._grad_spec) \
+                if use_wire else grads
+        ctx = api.RoundCtx(task=self.task, mc=mc, fl=fl, r=r, idx=idx,
+                           sizes=sizes, aux=aux, grads=dense)
+
+        # per-client state write-back at the cohort indices (spec-driven);
+        # the method may transform the cohort slice first (pFedSim's
+        # similarity mixing of the uploaded heads)
+        if method.cohort_state_update is not None:
+            new_cstates = method.cohort_state_update(ctx, new_cstates)
+        new_state = api.scatter_cohort_states(self._fields, new_state, idx,
+                                              new_cstates)
+
+        # the fused flat-buffer/codec aggregation (Eq. 10-12 with the
+        # method's beta); the sharded path already reduced inside shard_map
+        if method.needs_dense_grads:
+            agg = None
+        elif "agg_vec" in pending:        # sharded path precomputed Eq.10-12
+            agg = (unravel(pending["agg_vec"], self._grad_spec),
+                   pending["agg_norm"])
         else:
-            params, _, diag = M.fedavg_server(
-                mc, task, params, grads, sizes, dict(), fl.server_lr,
-                **wire_kw)
-            if fl.method == "scaffold":
-                c_delta = jax.tree.map(lambda d: jnp.mean(d, 0),
-                                       aux["delta_c"])
-                new_state["c_u"] = jax.tree.map(
-                    lambda a, n: a.at[idx].set(n),
-                    state["c_u"], new_cstates["c_u"])
-                new_state["c_global"] = tree_axpy(
-                    fl.cohort / fl.n_clients, c_delta, state["c_global"])
-            elif fl.method in PERSONAL_METHODS:
-                personal_new = new_cstates["personal"]
-                if fl.method == "pfedsim":
-                    mixed = M.pfedsim_server_mix(aux["head"], personal_new)
-                    personal_new = jax.lax.cond(
-                        r % 10 == 0, lambda: mixed, lambda: personal_new)
-                new_state["personal"] = jax.tree.map(
-                    lambda a, n: a.at[idx].set(n),
-                    state["personal"], personal_new)
+            agg = M._aggregate(grads, sizes, method.beta(mc),
+                               codec if use_wire else None, self._grad_spec)
+
+        params, new_state, diag = method.server_update(ctx, params, agg,
+                                                       new_state)
         diag = {k: v for k, v in diag.items()
                 if getattr(v, "ndim", None) == 0}
         # total uploaded bytes this round: gradient wire + auxiliary uploads
@@ -577,7 +532,6 @@ class Simulator:
         evaluated params are the ones every client pass issued so far has
         seen (the bounded-staleness contract, DESIGN.md §6).
         """
-        fl = self.fl
         pool = jnp.asarray(eval_data["client_idx"])          # (M, n_max)
         m, n_max = pool.shape
         sizes_all = jnp.asarray(eval_data["client_sizes"]).astype(jnp.int32)
@@ -595,7 +549,7 @@ class Simulator:
                 jnp.arange(n_max)[None, :] < sizes[:, None],
                 feats["labels"], -1)
             personal = jax.tree.map(lambda x: x[lo:hi], self.personal) \
-                if fl.method in PERSONAL_METHODS else None
+                if self.method.personal else None
             s, v = self._eval_jit(self.params, personal, feats, labels_eval,
                                   sizes, personalize_steps=personalize_steps)
             acc_sum += float(s)

@@ -34,8 +34,16 @@ from repro.utils.tree_math import tree_norm_sq
 
 def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
                     ncv: bool = True, alpha_lr: float = 1e-3,
-                    grad_dtype=jnp.float32, codec=None, mesh=None):
+                    grad_dtype=jnp.float32, codec=None, mesh=None,
+                    method: str | None = None):
     """Returns train_step(params, alpha, batch) -> (params, alpha, metrics).
+
+    `method` resolves against the fed.api registry ("fedncv" or "fedavg";
+    a typo raises with the registered names).  The GSPMD path is the
+    equal-weight/full-participation regime where the server-side LOO term
+    cancels (Appendix A Eq. 16), so only those two methods are meaningful
+    here — per-client state methods run under fed/distributed.py or the
+    Simulator.  `ncv` remains the boolean alias (ncv=True == "fedncv").
 
     codec (repro.comm) makes the step wire-aware: the per-shard mean
     gradient — the "client message" of the GSPMD path — is encoded and
@@ -51,6 +59,14 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
     stochastic-rounding randomness): train_step(params, alpha, batch,
     seed).
     """
+    if method is not None:
+        from repro.fed import get_method
+        if get_method(method).name not in ("fedncv", "fedavg"):
+            raise NotImplementedError(
+                f"the GSPMD train step supports 'fedncv'/'fedavg' (the "
+                f"equal-weight regime); '{method}' needs per-client state "
+                f"— use fed.distributed.make_round or the Simulator")
+        ncv = method == "fedncv"
 
     def split(x):
         b = x.shape[0]
@@ -192,6 +208,8 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--k-micro", type=int, default=4)
     ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--method", default=None,
+                    help="registry method name (fedncv | fedavg)")
     ap.add_argument("--no-ncv", action="store_true")
     args = ap.parse_args()
 
@@ -202,7 +220,8 @@ def main():
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"{cfg.name}: {n / 1e6:.1f}M params (reduced={args.reduced})")
     step_fn = jax.jit(make_train_step(cfg, k_micro=args.k_micro, lr=args.lr,
-                                      ncv=not args.no_ncv))
+                                      ncv=not args.no_ncv,
+                                      method=args.method))
     alpha = jnp.float32(0.25)
     key = jax.random.PRNGKey(1)
     t0 = time.time()

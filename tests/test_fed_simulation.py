@@ -7,11 +7,12 @@ import numpy as np
 import pytest
 
 from repro.data import federated_splits
-from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.fed import (FLConfig, MethodConfig, Simulator, Task,
+                       registered_methods)
 from repro.models import lenet
 
-METHODS = ["fedavg", "fedprox", "scaffold", "fedncv", "fedncv+",
-           "fedrep", "fedper", "pfedsim"]
+# every registered method — a new register_method() joins this matrix
+METHODS = registered_methods()
 
 
 def _make_task(spec):
