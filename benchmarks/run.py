@@ -25,7 +25,12 @@ BENCHES = [
     ("scalability_fig2", "benchmarks.bench_scalability"),  # Figure 2
     ("ablation", "benchmarks.bench_ablation"),     # alpha / K sweeps
     ("comm", "benchmarks.bench_comm"),             # codec accuracy-vs-bytes
+    ("sampling", "benchmarks.bench_sampling"),     # cohort samplers (§8)
 ]
+
+# benches whose BENCH_<name>.json must exist for the smoke gate to pass
+# (committed artifacts: a missing file means the sweep never ran)
+REQUIRED_BENCHES = {"fl_table1_fig1", "sampling"}
 
 
 class _Tee(io.TextIOBase):
@@ -87,15 +92,33 @@ def _check_fl_registry_rows(payload) -> None:
     assert not missing, f"registered methods missing from table1: {missing}"
 
 
+def _check_sampling_rows(payload) -> None:
+    """BENCH_sampling.json must carry rows for every registered cohort
+    sampler (the sweep is registry-driven, like the FL table: a sampler
+    registered in fed.sampling that is missing from the bench means the
+    two diverged)."""
+    from repro.fed import registered_samplers
+    seen = {r["fields"][0] for r in payload["rows"]
+            if r["name"] == "sampling_var" and r["fields"]}
+    missing = sorted(set(registered_samplers()) - seen)
+    assert not missing, f"registered samplers missing from bench: {missing}"
+
+
 def smoke() -> None:
-    """Assert every committed BENCH_<name>.json still parses, and that the
-    FL table's rows cover the method registry (CI gate)."""
+    """Assert every committed BENCH_<name>.json still parses, that the
+    required benches are present, and that the FL table / sampling rows
+    cover their registries (CI gate)."""
     import glob
     failures = 0
     paths = sorted(glob.glob(os.path.join(os.getcwd(), "BENCH_*.json")))
     if not paths:
         print("smoke: no BENCH_*.json found", flush=True)
         sys.exit(1)
+    have = {os.path.basename(p)[len("BENCH_"):-len(".json")] for p in paths}
+    for name in sorted(REQUIRED_BENCHES - have):
+        failures += 1
+        print(f"smoke:BENCH_{name}.json,FAILED,required bench artifact "
+              f"missing", flush=True)
     for path in paths:
         try:
             with open(path) as f:
@@ -105,6 +128,8 @@ def smoke() -> None:
             assert isinstance(payload["rows"], list)
             if payload["bench"] == "fl_table1_fig1":
                 _check_fl_registry_rows(payload)
+            if payload["bench"] == "sampling":
+                _check_sampling_rows(payload)
             print(f"smoke:{os.path.basename(path)},ok,"
                   f"{len(payload['rows'])} rows", flush=True)
         except Exception as e:

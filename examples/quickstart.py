@@ -1,6 +1,6 @@
 """Quickstart: FedNCV vs FedAvg on synthetic Dirichlet(0.1) non-IID data.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--sampler NAME] [--rounds N]
 
 Trains LeNet-5 federatedly for 15 rounds with each method and prints the
 pre-/post-personalization accuracy — the paper's Table-1 protocol in
@@ -8,19 +8,39 @@ miniature.  The 15 rounds run as ONE device dispatch (`sim.run_rounds`,
 the lax.scan driver from the flat-buffer hot path), and the per-round
 `bytes_up` diagnostic shows what each client->server wire format costs:
 the compressed codecs (repro.comm) cut uploaded bytes 2-5x at matching
-accuracy.
+accuracy.  `--sampler` swaps the cohort-selection strategy
+(repro.fed.sampling: uniform | importance | similarity).
+
+Expected output (CPU, ~2 minutes; exact numbers vary by jax version but
+pre-test accuracies land around 0.65-0.75, post-personalization around
+0.90-0.95, and the compressed codecs stay within ~2 points of identity at
+~4x fewer uploaded bytes):
+
+    fedavg   codec=identity pre-test=0.69..  post-test=0.94..  up=  1453.3 KiB/round
+    fedncv   codec=identity pre-test=0.71..  post-test=0.92..  up=  1453.4 KiB/round  mean alpha_u=0.301
+    fedncv   codec=int8     pre-test=0.71..  post-test=0.92..  up=   366.3 KiB/round  mean alpha_u=0.301
+    fedncv   codec=topk     pre-test=0.69..  post-test=0.92..  up=   348.9 KiB/round  mean alpha_u=0.301
 """
+import argparse
+
 import jax
 import numpy as np
 
 from repro.data import federated_splits
-from repro.fed import FLConfig, Simulator, Task
+from repro.fed import FLConfig, Simulator, Task, registered_samplers
 from repro.models import lenet
 
 ROUNDS = 15
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sampler", default="uniform",
+                    choices=sorted(registered_samplers()),
+                    help="cohort-selection strategy (repro.fed.sampling)")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    args = ap.parse_args()
+
     spec, train, test = federated_splits("cifar10", n_clients=12, alpha=0.1,
                                          seed=0, scale=0.15, noise=1.2,
                                          class_sep=0.8)
@@ -35,16 +55,16 @@ def main():
     for method, codec in runs:
         params = lenet.init(cfg, jax.random.PRNGKey(0))
         opts = dict(ratio=0.16) if codec == "topk" else {}
-        # FLConfig.make resolves the method from the fed.api registry and
-        # validates the typed options against what the method reads
+        # FLConfig.make resolves the method AND the cohort sampler from
+        # their registries and validates the typed options of each
         ncv_kw = dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5, ncv_beta=0.0) \
             if method == "fedncv" else {}
         fl = FLConfig.make(method=method, n_clients=12, cohort=6, k_micro=4,
                            micro_batch=16, server_lr=0.5, codec=codec,
-                           codec_opts=opts, local_lr=0.05, local_epochs=2,
-                           **ncv_kw)
+                           codec_opts=opts, sampler=args.sampler,
+                           local_lr=0.05, local_epochs=2, **ncv_kw)
         sim = Simulator(task, params, train, fl, seed=0)
-        diags = sim.run_rounds(ROUNDS)        # one dispatch for all rounds
+        diags = sim.run_rounds(args.rounds)   # one dispatch for all rounds
         pre = sim.evaluate(test)
         post = sim.evaluate(test, personalize_steps=3)
         kb_up = float(diags["bytes_up"][-1]) / 1024.0

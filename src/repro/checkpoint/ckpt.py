@@ -113,17 +113,20 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
     `state_spec()` declares (fed/api.py) — every per-client and global
     field (FedNCV alphas, SCAFFOLD c_u/c_global, personal heads, FedNCV+
     h/h_sum, FedGLOMO momenta) plus the comm codec's error-feedback
-    residuals (`ef`) — so a restored run continues the exact trajectory,
-    compression state included.  Nothing here is per-method: a method
-    registered through `fed.api` checkpoints correctly by construction.
-    The meta records the method name and state keys for restore-time
-    validation.
+    residuals (`ef`) and the cohort sampler's tables (`sampler`:
+    importance EMA norms, similarity sketches/ages — DESIGN.md §8) — so a
+    restored run continues the exact trajectory, compression and selection
+    state included.  Nothing here is per-method or per-sampler: anything
+    registered through `fed.api`/`fed.sampling` checkpoints correctly by
+    construction.  The meta records the method/codec/sampler names and
+    state keys for restore-time validation.
     """
     state = sim._get_state()
     tree = dict(params=sim.params, state=state)
     save_step(directory, sim.round_idx, tree,
               dict(meta or {}, round_idx=sim.round_idx,
                    method=sim.fl.method, codec=sim.fl.codec,
+                   sampler=sim.fl.sampler,
                    state_keys=sorted(state)), keep=keep)
 
 
@@ -143,8 +146,15 @@ def restore_sim(directory: str, sim, step: int | None = None):
     # structural restore, so a mismatch reports the configuration error,
     # not a low-level missing-key failure
     saved = payload.get("_meta", {})
-    for key, want in (("method", sim.fl.method), ("codec", sim.fl.codec)):
-        have = saved.get(key, want)         # absent in pre-PR4 checkpoints
+    # absent meta keys: method/codec predate PR 4 and default leniently to
+    # the configured value; an absent sampler key definitionally means the
+    # checkpoint was written under uniform selection, so it must FAIL
+    # against a non-uniform configuration here (with the configuration
+    # error) instead of falling through to the state_keys mismatch below
+    for key, want, absent in (("method", sim.fl.method, sim.fl.method),
+                              ("codec", sim.fl.codec, sim.fl.codec),
+                              ("sampler", sim.fl.sampler, "uniform")):
+        have = saved.get(key, absent)
         if have != want:
             raise ValueError(
                 f"checkpoint was saved with {key}={have!r} but the "

@@ -1,5 +1,12 @@
 """Client->server wire codecs over the flat gradient substrate.
 
+The paper's server estimator (PAPER.md Eq. 10-12) is *linear* in the
+uploaded client gradients, which is the whole design space of this module:
+any unbiased per-upload compression commutes with the aggregation
+(DESIGN.md §5.2), and the collapsed weighted-sum form of Eq. 10-12 lets
+the quantized formats aggregate straight off the wire without ever
+materializing f32 uploads.
+
 Every client upload in this repo is ultimately one contiguous (N,) f32
 vector (utils.tree_math.ravel of the gradient pytree), so a codec is a pair
 of pure jnp maps over that vector:

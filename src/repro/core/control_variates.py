@@ -1,5 +1,12 @@
 """RLOO control-variate primitives — the mathematical core of FedNCV.
 
+Equation numbers throughout refer to the source paper (PAPER.md,
+arxiv 2310.17200): Eq. 8-9 are the client-level RLOO reshape over the K
+microbatch gradients, Eq. 10-12 the server-level networked aggregation
+over the sampled cohort, and Algorithm 1 line 12 the per-client alpha
+adaptation.  DESIGN.md §1 records the reproduction findings (including
+the degeneracies of the literal estimator).
+
 Two implementations of every quantity:
 
 * a **naive oracle** that materializes all K leave-one-out baselines exactly as
@@ -207,6 +214,11 @@ def networked_aggregate(client_grads, n_samples, beta=1.0):
     Under full participation and equal weights the beta=1 aggregate is exactly
     zero (DESIGN.md §1.1) — this function is meant to run on a *sampled
     cohort*, where c_{V\\u} is a genuine variance-reducing baseline.
+
+    The estimator is linear in the per-client weights, so it stays unbiased
+    under any cohort-selection distribution when `n_samples` carries the
+    sampler's inverse-probability-scaled effective counts (repro.fed.sampling,
+    DESIGN.md §8.2) instead of the raw shard sizes.
     """
     n_samples = jnp.asarray(n_samples, jnp.float32)
     n = jnp.sum(n_samples)

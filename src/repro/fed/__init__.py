@@ -3,4 +3,7 @@ from repro.fed.api import (  # noqa: F401
     register_method, registered_methods,
 )
 from repro.fed.methods import ClientOut, MethodConfig, Task  # noqa: F401
+from repro.fed.sampling import (  # noqa: F401
+    CohortSampler, get_sampler, register_sampler, registered_samplers,
+)
 from repro.fed.simulator import Simulator  # noqa: F401

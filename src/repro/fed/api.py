@@ -16,9 +16,13 @@ async paths alike), the `fed/distributed.py` runtime, and
 method never touches any of them.
 
 Methods register under a name (`register_method`) and are looked up with
-`get_method`; `FLConfig.make(method=..., **method_opts)` is the validated
-construction path (it catches unknown method names, unknown options, and
-the historical silent `mc.name`/`fl.method` mismatch).
+`get_method`; `FLConfig.make(method=..., sampler=..., **opts)` is the
+validated construction path (it catches unknown method/sampler names,
+unknown options, and the historical silent `mc.name`/`fl.method`
+mismatch).  Cohort selection is the sibling registry in
+`repro.fed.sampling` (DESIGN.md §8): `FLConfig.sampler` names a
+`CohortSampler` whose inverse-probability weights keep the Eq. 10-12
+aggregation (PAPER.md) unbiased under non-uniform selection.
 
 Every aggregation-side method stays on the fused flat-buffer/codec hot loop:
 the generic server section computes the Eq. 10-12 weighted aggregate with
@@ -46,6 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import control_variates as cv
 from repro.fed import methods as M
+from repro.fed import sampling
 from repro.utils.tree_math import tree_axpy, tree_zeros_like
 
 
@@ -63,7 +68,15 @@ class RoundCtx(tp.NamedTuple):
     stacked scalar diagnostics every client uploaded) are traced arrays.
     `grads` is None unless the method sets `needs_dense_grads`, in which
     case it is the dense stacked upload pytree (decoded from the wire once,
-    outside the method).
+    outside the method).  `weights` are the effective sample counts the
+    Eq. 10-12 aggregation ran with — equal to `sizes` under the uniform
+    sampler, `sizes` scaled by the sampler's inverse-probability factors
+    otherwise (repro.fed.sampling, DESIGN.md §8.2); None when the runtime
+    predates cohort sampling (fed/distributed full participation).
+    `invp` carries those raw 1/(M q_u) factors themselves, and is None
+    whenever the sampler does not reweight (uniform/exchangeable
+    selection) — dense-grad servers use it to Horvitz-Thompson-weight
+    per-client terms directly.
     """
     task: M.Task
     mc: M.MethodConfig
@@ -73,6 +86,8 @@ class RoundCtx(tp.NamedTuple):
     sizes: tp.Any
     aux: tp.Any
     grads: tp.Any = None
+    weights: tp.Any = None
+    invp: tp.Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,6 +280,8 @@ class FLConfig:
     codec: str = "identity"           # client->server wire format (repro.comm)
     codec_opts: dict = dataclasses.field(default_factory=dict)
     staleness: int = 0                # 0 = sync; 1 = one-round-stale overlap
+    sampler: str = "uniform"          # cohort selection (repro.fed.sampling)
+    sampler_opts: dict = dataclasses.field(default_factory=dict)
     mc: M.MethodConfig = dataclasses.field(
         default_factory=lambda: M.MethodConfig(name="fedncv"))
 
@@ -286,28 +303,61 @@ class FLConfig:
                              f"variate (beta != 0): cohort must be >= 2")
         if method.validate is not None:
             method.validate(self.mc)
+        # sampler name + option validation mirrors the method's: unknown
+        # samplers and typo'd/foreign options raise at construction
+        sampling.resolve_opts(sampling.get_sampler(self.sampler),
+                              self.sampler_opts)
 
     @classmethod
     def make(cls, method: str = "fedncv", *, n_clients: int = 100,
              cohort: int = 10, k_micro: int = 8, micro_batch: int = 16,
              server_lr: float = 1.0, codec: str = "identity",
              codec_opts: dict | None = None, staleness: int = 0,
-             **method_opts) -> "FLConfig":
-        """Validated construction: `method` must be registered, and
-        `method_opts` must be options the *chosen method* actually reads
-        (COMMON_OPTIONS plus its declared `FedMethod.options`) — both a
-        typo and an option the method would silently ignore raise instead
-        of training a default config."""
+             sampler: str = "uniform", sampler_opts: dict | None = None,
+             **opts) -> "FLConfig":
+        """Validated construction: `method` and `sampler` must be
+        registered, and every extra keyword must be an option one of them
+        actually reads — method options are COMMON_OPTIONS plus the
+        method's declared `FedMethod.options`, sampler options are the
+        `CohortSampler.options` of the chosen sampler (they may also be
+        passed via the explicit `sampler_opts` dict).  A typo, an option
+        the chosen method/sampler would silently ignore, and an
+        ambiguously-named option all raise instead of training a default
+        config."""
         m = get_method(method)
-        allowed = COMMON_OPTIONS | set(m.options)
-        bad = sorted(set(method_opts) - allowed)
+        smp = sampling.get_sampler(sampler)
+        m_allowed = COMMON_OPTIONS | set(m.options)
+        s_allowed = set(smp.options)
+        # only *passed* options can be ambiguous — a latent name collision
+        # between a method and a sampler the caller never exercises must
+        # not make the pair unusable (sampler_opts= remains the escape
+        # hatch, and it genuinely bypasses this routing)
+        ambiguous = sorted(m_allowed & s_allowed & set(opts))
+        if ambiguous:
+            raise TypeError(
+                f"option name(s) {ambiguous} are claimed by both method "
+                f"'{method}' and sampler '{sampler}' — pass them via "
+                f"sampler_opts= to disambiguate")
+        bad = sorted(set(opts) - m_allowed - s_allowed)
         if bad:
-            raise TypeError(f"option(s) {bad} are not used by '{method}'; "
-                            f"valid options: {sorted(allowed)}")
+            raise TypeError(f"option(s) {bad} are not used by '{method}' "
+                            f"or sampler '{sampler}'; valid options: "
+                            f"{sorted(m_allowed | s_allowed)}")
+        s_opts = dict(sampler_opts or {})
+        s_kwargs = {k: v for k, v in opts.items() if k in s_allowed}
+        doubled = sorted(set(s_opts) & set(s_kwargs))
+        if doubled:
+            raise TypeError(
+                f"sampler option(s) {doubled} passed both as keyword(s) "
+                f"and in sampler_opts= — remove one (nothing here is "
+                f"resolved silently)")
+        s_opts.update(s_kwargs)
+        method_opts = {k: v for k, v in opts.items() if k in m_allowed}
         return cls(method=method, n_clients=n_clients, cohort=cohort,
                    k_micro=k_micro, micro_batch=micro_batch,
                    server_lr=server_lr, codec=codec,
                    codec_opts=dict(codec_opts or {}), staleness=staleness,
+                   sampler=sampler, sampler_opts=s_opts,
                    mc=M.MethodConfig(name=method, **method_opts))
 
 
@@ -344,7 +394,16 @@ register_method(FedMethod(
 
 def _scaffold_server(ctx: RoundCtx, params, agg, state):
     params, state, diag = sgd_server(ctx, params, agg, state)
-    c_delta = jax.tree.map(lambda d: jnp.mean(d, 0), ctx.aux["delta_c"])
+    # the c_global refresh is a sampled estimate of the population-mean
+    # control-variate drift, so under a reweighting cohort sampler each
+    # term carries its 1/(M q_u) factor (DESIGN.md §8.2) — same HT
+    # correction as the fedncv+ dense path; ctx.invp is None under
+    # uniform/exchangeable selection (plain mean, bit-identical)
+    dc = ctx.aux["delta_c"]
+    if ctx.invp is not None:
+        dc = jax.tree.map(
+            lambda d: d * ctx.invp.reshape((-1,) + (1,) * (d.ndim - 1)), dc)
+    c_delta = jax.tree.map(lambda d: jnp.mean(d, 0), dc)
     state = dict(state, c_global=tree_axpy(
         ctx.fl.cohort / ctx.fl.n_clients, c_delta, state["c_global"]))
     return params, state, diag
@@ -407,10 +466,15 @@ register_method(FedMethod(
 
 def _fedncv_plus_server(ctx: RoundCtx, params, agg, state):
     del agg
+    # non-uniform cohort samplers: HT-weight the correction term with the
+    # sampler's own 1/(M q_u) factors so the dense-grad path stays
+    # unbiased too (DESIGN.md §8.2); ctx.invp is None under uniform/
+    # exchangeable selection and the plain cohort mean is bit-identical
+    # to the pre-sampling path.
     params, sstate, diag = M.fedncv_plus_server(
         ctx.mc, ctx.task, params, ctx.grads, ctx.sizes, ctx.idx,
         dict(h=state["h"], h_sum=state["h_sum"]), ctx.fl.server_lr,
-        ctx.fl.n_clients)
+        ctx.fl.n_clients, invp=ctx.invp)
     return params, dict(state, h=sstate["h"], h_sum=sstate["h_sum"]), diag
 
 

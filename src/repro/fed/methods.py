@@ -216,15 +216,30 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
 # ---------------------------------------------------------------------------
 
 def fedncv_plus_server(mc, task, params, grads_stacked, n_samples, idx,
-                       sstate, lr, m_total):
+                       sstate, lr, m_total, invp=None):
     """mean_all(h) comes from the running sum `h_sum` kept in `sstate` and
     updated incrementally at the cohort indices, so the per-round cost is
-    O(cohort * N) instead of re-reducing all M_total stale gradients."""
+    O(cohort * N) instead of re-reducing all M_total stale gradients.
+
+    `invp` ((cohort,) or None): inverse-probability factors 1/(M q_u) of a
+    non-uniform cohort sampler (repro.fed.sampling, DESIGN.md §8.2).  The
+    correction term is the sampled estimate of mean_all(g - h), so under
+    non-uniform selection each term is Horvitz-Thompson-weighted:
+    corr = (1/C) sum_u invp_u (g_u - h_u).  None (or all-ones, i.e.
+    uniform/exchangeable selection) is the plain cohort mean.  The h-table
+    bookkeeping (h_all scatter, h_sum increment) always uses the raw
+    deltas — it tracks the table exactly, not an expectation."""
     h_all, h_sum = sstate["h"], sstate["h_sum"]   # (M_total, ...), (...)
     h_mean = tree_scale(h_sum, 1.0 / m_total)
     h_cohort = jax.tree.map(lambda h: h[idx], h_all)
     delta = tree_sub(grads_stacked, h_cohort)     # leaves (cohort, ...)
-    corr = tree_mean(delta, axis=0)
+    if invp is None:
+        corr = tree_mean(delta, axis=0)
+    else:
+        corr = jax.tree.map(
+            lambda d: jnp.mean(
+                d * invp.reshape((-1,) + (1,) * (d.ndim - 1)), axis=0),
+            delta)
     agg = jax.tree.map(jnp.add, h_mean, corr)
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
     h_all = jax.tree.map(lambda h, g: h.at[idx].set(g), h_all, grads_stacked)

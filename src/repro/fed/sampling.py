@@ -1,0 +1,387 @@
+"""repro.fed.sampling — variance-aware cohort sampling (DESIGN.md §8).
+
+FedNCV's server-side RLOO estimator (PAPER.md Eq. 10-12) is unbiased for
+*any* client-selection distribution, provided the per-client weights fed to
+`ncv_coefficients` compensate the selection: the Horvitz-Thompson condition
+
+    E_S [ sum_{u in S} (n_u / pi_u) g_u ]  =  sum_{u=1}^M n_u g_u
+
+holds whenever `pi_u` is client u's inclusion probability in the sampled
+cohort S.  This module makes the selection distribution a first-class,
+pluggable subsystem mirroring the `fed/api.py` method registry: a
+`CohortSampler` draws the cohort *inside jit* (the round body stays one
+scanned dispatch), carries its per-client statistics in the same state dict
+as `alphas`/EF residuals (so it rides the lax.scan carry, the shard_map
+cohort path, the async pipeline, and `checkpoint.save_sim`/`restore_sim`
+unchanged), and returns the inverse-probability factors that keep Eq. 10-12
+unbiased.
+
+Samplers:
+
+* ``uniform``    — without-replacement `jax.random.choice`, the historical
+  default.  Stateless, no reweighting: trajectories are bit-identical to the
+  pre-sampling-subsystem simulator.
+* ``importance`` — per-client probabilities proportional to a running EMA of
+  each client's flat upload norm ||g_u||, mixed with a uniform floor
+  (`imp_mix`) so every client keeps a nonzero inclusion probability.  The
+  cohort is drawn without replacement by Gumbel-top-k (one `top_k` over M
+  perturbed log-probabilities — jit/lax-friendly, no rejection loop), and
+  the draw returns 1/(M q_u) inverse-probability factors; the simulator
+  multiplies them into the sample counts before `ncv_coefficients`, which is
+  exactly the self-normalized Horvitz-Thompson correction (§8.2).  Norm-
+  proportional selection concentrates rounds on the clients that currently
+  dominate Var[g] — the partial-variance-reduction lever of Li et al. 2022.
+* ``similarity`` — diversity-maximizing selection over a low-rank sketch of
+  each client's last flat update.  Clients upload a d-dimensional random
+  projection of the (N,) upload vector the hot path already materializes
+  (`sketch_projection`, d·4 extra bytes/round); the server keeps an EMA
+  sketch table (M, d) and greedily picks a cohort of maximal sketch
+  dispersion (farthest-point traversal with a staleness bonus and Gumbel
+  exploration noise — a C-step `fori_loop`, fully lax-friendly).  A spread
+  cohort under Dirichlet skew is a stratified sample: label-homogeneous
+  clients stop crowding the cohort, which lowers Var[g] without reweighting.
+
+Registering a sampler (the §8.3 walkthrough mirrors §7.3's fedglomo):
+
+    register_sampler(CohortSampler(
+        name="mine",
+        draw=lambda opts, state, key, m, c: (idx, invp_or_None),
+        init_state=lambda opts, m: dict(...),     # omit if stateless
+        update=lambda opts, state, idx, sizes, aux: state,
+        options=("mine_knob",), defaults=dict(mine_knob=1.0),
+    ))
+
+`FLConfig.make(sampler="mine", mine_knob=2.0)` then validates the option
+names exactly like method options, and every execution backend (scan
+driver, chunked driving, async staleness=1, shard_map cohort mesh) and
+`checkpoint.save_sim` consume the sampler generically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing as tp
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree_math import ravel
+
+# Reserved aux keys: when a sampler needs per-client statistics of the round
+# (`needs_norms` / `sketch_dim`), the client pass is wrapped by `with_stats`
+# and the statistics ride the same aux dict as FedNCV's S1/S2 scalars — so
+# they flow through vmap, the shard_map cohort path and the async pending
+# carry for free, and `bytes_up` accounts for them honestly (they ARE
+# uploaded bytes: 4 for the norm, 4·d for the sketch).
+NORM_KEY = "smp_norm"
+SKETCH_KEY = "smp_sketch"
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSampler:
+    """A cohort-selection strategy as one first-class object (DESIGN.md §8).
+
+    draw        : (opts, state, key, n_clients, cohort) -> (idx, invp).
+                  Runs inside jit every round.  `idx` is the (cohort,) int32
+                  client-index vector (without replacement); `invp` is the
+                  (cohort,) inverse-probability factor 1/(M q_u) multiplied
+                  into the sample counts before `ncv_coefficients`
+                  (Eq. 10-12 unbiasedness, §8.2), or None for no reweighting
+                  (uniform / exchangeable selection).  `state` is the
+                  sampler's entry of the run state dict (None if stateless).
+    init_state  : (opts, n_clients) -> dict of arrays, or None when the
+                  sampler is stateless.  The dict lives under the "sampler"
+                  key of the run's state dict — scanned, sharded,
+                  checkpointed and restored exactly like `alphas`/EF
+                  residuals.
+    update      : (opts, state, idx, sizes, aux) -> state.  Post-round
+                  refresh from the cohort's uploaded statistics (sizes and
+                  aux rows have (cohort,) leading dims).  Runs in the
+                  server half of the round, so under `staleness=1` the
+                  refresh lands one round late — the same bounded-staleness
+                  contract as alpha adaptation.
+    needs_norms : clients additionally upload ||upload||_2 (one scalar,
+                  aux[NORM_KEY]).
+    sketch_dim  : opts -> d.  d > 0: clients additionally upload a
+                  d-dimensional random sketch of the flat upload
+                  (aux[SKETCH_KEY]).
+    options     : sampler-option names `FLConfig.make` accepts and
+                  validates; `defaults` supplies their values when omitted.
+    validate    : (opts) -> None, raises on bad option values.
+    """
+    name: str
+    draw: tp.Callable
+    init_state: tp.Callable | None = None
+    update: tp.Callable | None = None
+    needs_norms: bool = False
+    sketch_dim: tp.Callable = lambda opts: 0
+    options: tuple = ()
+    defaults: dict = dataclasses.field(default_factory=dict)
+    validate: tp.Callable | None = None
+    description: str = ""
+
+    @property
+    def stateful(self) -> bool:
+        return self.init_state is not None
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors fed/api.py's method registry)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, CohortSampler] = {}
+
+
+def register_sampler(sampler: CohortSampler, *,
+                     overwrite: bool = False) -> CohortSampler:
+    """Register `sampler` under `sampler.name`; returns it for chaining."""
+    if not overwrite and sampler.name in _REGISTRY:
+        raise ValueError(f"sampler '{sampler.name}' is already registered")
+    if set(sampler.defaults) - set(sampler.options):
+        raise ValueError(
+            f"sampler '{sampler.name}' has defaults for undeclared options: "
+            f"{sorted(set(sampler.defaults) - set(sampler.options))}")
+    if sampler.update is not None and sampler.init_state is None:
+        # update refreshes the state dict — without init_state there is no
+        # state to refresh, and the failure would otherwise surface as an
+        # opaque KeyError inside the jitted round body
+        raise ValueError(
+            f"sampler '{sampler.name}' declares update() but no "
+            f"init_state(): a post-round update needs state to update")
+    _REGISTRY[sampler.name] = sampler
+    return sampler
+
+
+def get_sampler(name: str) -> CohortSampler:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown cohort sampler '{name}'; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_samplers() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_opts(sampler: CohortSampler, opts: dict | None) -> dict:
+    """Merge user options over the sampler's defaults, rejecting unknown
+    names and bad values — the same contract as `FLConfig.make`'s method
+    options (a typo'd knob raises instead of silently training defaults)."""
+    opts = dict(opts or {})
+    bad = sorted(set(opts) - set(sampler.options))
+    if bad:
+        raise TypeError(
+            f"option(s) {bad} are not used by sampler '{sampler.name}'; "
+            f"valid options: {sorted(sampler.options)}")
+    resolved = {**sampler.defaults, **opts}
+    if sampler.validate is not None:
+        sampler.validate(resolved)
+    return resolved
+
+
+# ---------------------------------------------------------------------------
+# client-side statistics plumbing
+# ---------------------------------------------------------------------------
+
+def with_stats(client_fn, *, norm: bool = False, proj=None):
+    """Wrap a ctx-signature client fn to also upload sampler statistics.
+
+    Applied *before* the codec wrapper (`api.with_codec`), so the norm and
+    sketch are computed on the raw f32 upload, not the quantized wire.  The
+    gradient itself is returned unchanged; the statistics ride `aux` under
+    the reserved NORM_KEY / SKETCH_KEY names.
+    """
+    def fn(ctx, params, cstate, batches, key):
+        out = client_fn(ctx, params, cstate, batches, key)
+        vec, _ = ravel(out.grad)
+        aux = dict(out.aux)
+        if norm:
+            aux[NORM_KEY] = jnp.sqrt(jnp.sum(vec * vec))
+        if proj is not None:
+            aux[SKETCH_KEY] = proj @ vec
+        return out._replace(aux=aux)
+    return fn
+
+
+def sketch_projection(n: int, d: int):
+    """Deterministic (d, N) Rademacher/sqrt(d) sketch matrix.
+
+    Derived from a fixed key (never from the run seed), so single-device,
+    mesh and checkpoint-restored runs all sketch through the same
+    projection — the sketch table in the sampler state stays comparable
+    across backends without persisting the matrix itself.
+    """
+    key = jax.random.PRNGKey(0x5CE7C)
+    signs = jax.random.rademacher(key, (d, n), dtype=jnp.float32)
+    return signs / jnp.sqrt(jnp.float32(d))
+
+
+def gumbel_top_k(key, log_q, k: int):
+    """Weighted sampling of k items without replacement, inside jit.
+
+    Adds i.i.d. Gumbel noise to the log-probabilities and takes the top-k
+    perturbed values — distributionally identical to sequential sampling
+    without replacement from q (Gumbel-top-k trick), with no data-dependent
+    control flow: one `top_k` over M lanes.
+    """
+    g = jax.random.gumbel(key, log_q.shape, dtype=log_q.dtype)
+    _, idx = jax.lax.top_k(log_q + g, k)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# uniform — the historical default, bit-identical
+# ---------------------------------------------------------------------------
+
+def _uniform_draw(opts, state, key, m, c):
+    del opts, state
+    # exactly the pre-subsystem simulator draw: same primitive, same key —
+    # trajectories with sampler="uniform" are bit-identical to the old path
+    return jax.random.choice(key, m, (c,), replace=False), None
+
+
+register_sampler(CohortSampler(
+    name="uniform",
+    draw=_uniform_draw,
+    description="without-replacement uniform choice (bit-identical default)",
+))
+
+
+# ---------------------------------------------------------------------------
+# importance — gradient-norm-proportional with exact HT reweighting
+# ---------------------------------------------------------------------------
+
+def _importance_q(opts, state, m):
+    """Normalized selection probabilities from the EMA contribution table
+    (n_u ||g_u|| — the variance-optimal importance distribution for a
+    weighted-sum estimator is proportional to each term's norm), mixed
+    with a uniform floor (`imp_mix`) keeping every inclusion probability
+    >= imp_mix / M (bounded HT factors, every client stays reachable)."""
+    e = state["score"]
+    q = (1.0 - opts["imp_mix"]) * e / jnp.maximum(jnp.sum(e), 1e-20) \
+        + opts["imp_mix"] / m
+    return q / jnp.sum(q)          # exact renormalization (f32 guard)
+
+
+def _importance_draw(opts, state, key, m, c):
+    q = _importance_q(opts, state, m)
+    idx = gumbel_top_k(key, jnp.log(q), c)
+    # 1/(M q_u): the self-normalized Horvitz-Thompson factor (§8.2) — for
+    # q = 1/M it is exactly 1, so an untrained table reproduces uniform
+    # weighting.  Multiplied into n_u before ncv_coefficients.
+    invp = 1.0 / (m * q[idx])
+    return idx, invp
+
+
+def _importance_update(opts, state, idx, sizes, aux):
+    rho = opts["imp_ema"]
+    e = state["score"]
+    # relative EMA: scores are only ever used normalized, so track the
+    # contribution norm relative to the cohort mean — the table stays O(1)
+    # as gradients shrink over training instead of decaying toward the
+    # uniform floor
+    contrib = sizes * aux[NORM_KEY]
+    rel = contrib / jnp.maximum(jnp.mean(contrib), 1e-20)
+    e = e.at[idx].set((1.0 - rho) * e[idx] + rho * rel)
+    return dict(state, score=e)
+
+
+def _importance_validate(opts):
+    if not 0.0 < opts["imp_mix"] <= 1.0:
+        raise ValueError(f"imp_mix must be in (0, 1], got {opts['imp_mix']}")
+    if not 0.0 < opts["imp_ema"] <= 1.0:
+        raise ValueError(f"imp_ema must be in (0, 1], got {opts['imp_ema']}")
+
+
+register_sampler(CohortSampler(
+    name="importance",
+    draw=_importance_draw,
+    # score table initialized to 1: round 1 selects uniformly (invp == 1
+    # exactly) and the table adapts as cohorts report their upload norms
+    init_state=lambda opts, m: dict(score=jnp.ones((m,), jnp.float32)),
+    update=_importance_update,
+    needs_norms=True,
+    options=("imp_mix", "imp_ema"),
+    defaults=dict(imp_mix=0.5, imp_ema=0.2),
+    validate=_importance_validate,
+    description="P(u) ∝ EMA n_u||g_u|| with uniform floor; Gumbel-top-k + "
+                "inverse-probability weights (unbiased)",
+))
+
+
+# ---------------------------------------------------------------------------
+# similarity — diversity-maximizing selection over low-rank update sketches
+# ---------------------------------------------------------------------------
+
+def _similarity_draw(opts, state, key, m, c):
+    sk = state["sketch"]                                   # (M, d)
+    nrm = jnp.sqrt(jnp.sum(sk * sk, axis=1, keepdims=True))
+    unit = sk / jnp.maximum(nrm, 1e-12)        # direction, not magnitude
+    age = state["age"]                                     # (M,)
+    noise = opts["sim_noise"] * jax.random.gumbel(key, (m,))
+    # farthest-point traversal: C greedy picks of
+    #   argmax  min-dist²-to-selected + sim_explore·age + Gumbel noise.
+    # With a fresh all-zero table every direction ties, so selection is
+    # driven by the exchangeable age+noise score — i.e. uniform — and the
+    # estimator needs no reweighting (§8.2); as the table fills, the picks
+    # spread over update directions (a stratified cohort under label skew).
+    base = opts["sim_explore"] * age + noise
+    big = jnp.float32(4.0)                 # max unit-sphere dist² — the
+    # min-dist² ceiling, so the first pick is decided by the base score
+
+    def pick(k_, carry):
+        idx, mind2, taken = carry
+        score = jnp.where(taken, -jnp.inf, jnp.minimum(mind2, big) + base)
+        u = jnp.argmax(score)
+        d2 = jnp.sum((unit - unit[u][None, :]) ** 2, axis=1)
+        return (idx.at[k_].set(u), jnp.minimum(mind2, d2),
+                taken.at[u].set(True))
+
+    carry = (jnp.zeros((c,), jnp.int32), jnp.full((m,), jnp.inf),
+             jnp.zeros((m,), bool))
+    idx, _, _ = jax.lax.fori_loop(0, c, pick, carry)
+    return idx, None
+
+
+def _similarity_update(opts, state, idx, sizes, aux):
+    del sizes
+    rho = opts["sim_ema"]
+    sk = state["sketch"]
+    new = (1.0 - rho) * sk[idx] + rho * aux[SKETCH_KEY]
+    age = state["age"] + 1.0
+    return dict(state, sketch=sk.at[idx].set(new), age=age.at[idx].set(0.0))
+
+
+def _similarity_validate(opts):
+    if not (isinstance(opts["sim_dim"], int) and opts["sim_dim"] >= 1):
+        raise ValueError(f"sim_dim must be an int >= 1, got "
+                         f"{opts['sim_dim']!r}")
+    if not 0.0 < opts["sim_ema"] <= 1.0:
+        raise ValueError(f"sim_ema must be in (0, 1], got {opts['sim_ema']}")
+    if opts["sim_noise"] < 0.0 or opts["sim_explore"] < 0.0:
+        raise ValueError("sim_noise and sim_explore must be >= 0")
+    if opts["sim_noise"] == 0.0 and opts["sim_explore"] == 0.0:
+        # both zero makes the draw fully deterministic: on the initial
+        # all-zero sketch table every score ties, argmax picks clients
+        # [0..C-1] forever, and the rest of the population is never
+        # trained — the §8.2 exchangeability argument needs at least one
+        # source of coverage (staleness bonus or exploration noise)
+        raise ValueError(
+            "at least one of sim_noise / sim_explore must be > 0: a fully "
+            "deterministic draw permanently starves the unselected clients")
+
+
+register_sampler(CohortSampler(
+    name="similarity",
+    draw=_similarity_draw,
+    init_state=lambda opts, m: dict(
+        sketch=jnp.zeros((m, opts["sim_dim"]), jnp.float32),
+        age=jnp.zeros((m,), jnp.float32)),
+    update=_similarity_update,
+    sketch_dim=lambda opts: opts["sim_dim"],
+    options=("sim_dim", "sim_ema", "sim_explore", "sim_noise"),
+    defaults=dict(sim_dim=8, sim_ema=0.5, sim_explore=0.25, sim_noise=0.5),
+    validate=_similarity_validate,
+    description="greedy farthest-point cohort over EMA update sketches "
+                "(+staleness bonus, Gumbel exploration)",
+))

@@ -88,7 +88,11 @@ def sharded_aggregate(stack_local, n_local, beta=1.0, *, axis_name: str,
 
     stack_local: this device's slice — a dense (C_loc, N) f32 array when
     `codec` is None, else the codec's stacked wire dict with (C_loc, ...)
-    leaves.  n_local: (C_loc,) sample counts (0 for padded slots).
+    leaves.  n_local: (C_loc,) effective sample counts (0 for padded
+    slots) — the raw shard sizes under uniform cohort selection, or the
+    sampler's inverse-probability-scaled counts under non-uniform
+    selection (repro.fed.sampling, DESIGN.md §8.2); the zero-padding rule
+    applies to them identically.
     Returns (agg (N,) f32, ||agg||^2), replicated across the axis.  The
     norm is computed from the psum'd aggregate (partial norms do not add
     across shards — cross terms), costing one extra N-read.

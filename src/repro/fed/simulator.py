@@ -5,9 +5,11 @@ non-IID shards, a sampled cohort per round, local training, server
 aggregation per method, and pre-/post-personalization evaluation
 ("test before" / "test after" in Table 1).
 
-The whole round lives on device: cohort sampling (`jax.random.choice`),
-microbatch gather (`jnp.take` into the resident dataset), the vmapped client
-pass, and the per-method server update all run inside one jit.  Multi-round
+The whole round lives on device: the cohort draw (a registered
+`repro.fed.sampling.CohortSampler` — uniform by default, importance/
+similarity for variance-aware selection, DESIGN.md §8), microbatch gather
+(`jnp.take` into the resident dataset), the vmapped client pass, and the
+per-method server update all run inside one jit.  Multi-round
 driving goes through `run_rounds(n)`, which `lax.scan`s the round body with
 donated params/state buffers so an n-round benchmark pays one dispatch + one
 host sync instead of n.  Evaluation is a single padded, vmapped pass over
@@ -55,6 +57,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import comm
 from repro.fed import api
 from repro.fed import methods as M
+from repro.fed import sampling
 from repro.fed import sharded
 from repro.fed.api import FLConfig  # noqa: F401  (re-export: public API)
 from repro.utils.tree_math import (
@@ -101,6 +104,17 @@ class Simulator:
         from repro.kernels import default_interpret
         self._use_pallas = not default_interpret()
 
+        # cohort selection strategy (repro.fed.sampling, DESIGN.md §8):
+        # the draw runs inside jit each round; sampler state (if any) lives
+        # under the "sampler" key of the run state dict, and samplers that
+        # consume per-client statistics get them via the client-pass
+        # wrapper (sampling.with_stats) riding the aux dict
+        self.smp = sampling.get_sampler(fl.sampler)
+        self._smp_opts = sampling.resolve_opts(self.smp, fl.sampler_opts)
+        d_sketch = self.smp.sketch_dim(self._smp_opts)
+        self._sketch_proj = sampling.sketch_projection(
+            self._grad_spec.n, d_sketch) if d_sketch else None
+
         # method + codec state, built from the declarative state_spec():
         # per-client fields live in (M, ...) buffers gathered/scattered at
         # the cohort indices, global fields are plain pytrees.  The codec's
@@ -113,6 +127,16 @@ class Simulator:
                 and m % self.n_devices == 0:
             self._state["ef"] = jax.device_put(
                 self._state["ef"], NamedSharding(mesh, P(self.caxis)))
+        # stateful samplers carry their tables in the same state dict
+        # ("sampler" key): scanned, checkpointed, restored like alphas/EF.
+        # Stateless samplers (uniform) leave the dict untouched, so the
+        # state layout — and pre-sampling checkpoints — are unchanged.
+        if self.smp.stateful:
+            if any(f.name == "sampler" for f in self._fields):
+                raise ValueError(
+                    "method state field 'sampler' collides with the cohort "
+                    "sampler's state key; rename the StateField")
+            self._state["sampler"] = self.smp.init_state(self._smp_opts, m)
 
         # async pipeline buffers (round in flight; None until first round)
         self._pending = None
@@ -168,18 +192,25 @@ class Simulator:
     # ------------------------------------------------------------------
     # one round, fully on device
     # ------------------------------------------------------------------
-    def _draw_cohort_sel(self, key):
+    def _draw_cohort_sel(self, state, key):
         """Device-side cohort + sample selection (indices only, no gather).
 
-        Cohort clients are drawn without replacement; microbatch samples are
-        drawn uniformly (with replacement) from each client's shard via a
-        padded index-table lookup — no host round-trip.  Returns (idx
-        (cohort,), sel (cohort, K, b) dataset rows, sizes (cohort,)).
+        The cohort is drawn by the configured `CohortSampler` (DESIGN.md
+        §8) — without replacement, inside jit; microbatch samples are drawn
+        uniformly (with replacement) from each client's shard via a padded
+        index-table lookup — no host round-trip.  Returns (idx (cohort,),
+        sel (cohort, K, b) dataset rows, sizes (cohort,) true sample
+        counts, weights (cohort,) effective counts for the Eq. 10-12
+        aggregation).  `weights` is `sizes` scaled by the sampler's
+        inverse-probability factors (§8.2 unbiasedness); for samplers with
+        no reweighting (uniform) it is `sizes` itself, bit-identical.
         """
         fl, data = self.fl, self.data
         kc, kp = jax.random.split(key)
-        idx = jax.random.choice(kc, fl.n_clients, (fl.cohort,), replace=False)
+        idx, invp = self.smp.draw(self._smp_opts, state.get("sampler"), kc,
+                                  fl.n_clients, fl.cohort)
         sizes = data["client_sizes"][idx].astype(jnp.float32)
+        weights = sizes if invp is None else sizes * invp
         pool = data["client_idx"][idx]                   # (cohort, n_max)
         need = fl.k_micro * fl.micro_batch
         u = jax.random.uniform(kp, (fl.cohort, need))
@@ -188,7 +219,7 @@ class Simulator:
         sel = jnp.take_along_axis(pool, jnp.maximum(pos, 0), axis=1)
         sel = jnp.maximum(sel, 0).reshape(fl.cohort, fl.k_micro,
                                           fl.micro_batch)
-        return idx, sel, sizes
+        return idx, sel, sizes, weights, invp
 
     def _gather_batch(self, data, sel):
         """sel (cohort', K, b) dataset rows -> batch pytree (cohort', K, b, ...)."""
@@ -210,6 +241,12 @@ class Simulator:
 
     def _client_fn(self):
         client_fn = self.method.client_update
+        # sampler statistics (upload norm / sketch) are computed on the raw
+        # f32 upload, so the stats wrapper goes on before the codec
+        if self.smp.needs_norms or self._sketch_proj is not None:
+            client_fn = sampling.with_stats(client_fn,
+                                            norm=self.smp.needs_norms,
+                                            proj=self._sketch_proj)
         # non-identity codecs compress the upload at the end of the client fn
         # and the servers aggregate straight off the wire (DESIGN.md §5)
         if self.codec.name != "identity":
@@ -235,15 +272,21 @@ class Simulator:
         client_fn = self._client_fn()
         ctx = api.MethodCtx(self.task, fl.mc)
         kd, kk = jax.random.split(key)
-        idx, sel, sizes = self._draw_cohort_sel(kd)
+        idx, sel, sizes, weights, invp = self._draw_cohort_sel(state, kd)
         batches = self._gather_batch(self.data, sel)
         cstates = self._cohort_cstates(state, idx)
         keys = self._slot_keys(kk, fl.cohort)
         outs = jax.vmap(
             lambda cs, b, k: client_fn(ctx, params, cs, b, k)
         )(cstates, batches, keys)
-        return dict(idx=idx, sizes=sizes, grads=outs.grad,
-                    cstates=outs.cstate, aux=outs.aux)
+        pending = dict(idx=idx, sizes=sizes, weights=weights,
+                       grads=outs.grad, cstates=outs.cstate, aux=outs.aux)
+        # reweighting samplers carry the raw 1/(M q_u) factors for the
+        # dense-grad server path; the key's presence is a static,
+        # per-configuration fact, so scan/async carries stay type-stable
+        if invp is not None:
+            pending["invp"] = invp
+        return pending
 
     def _client_section_sharded(self, params, state, key):
         """Mesh mode: the cohort work runs in a shard_map over the cohort
@@ -261,18 +304,20 @@ class Simulator:
         beta = self.method.beta(mc)
 
         kd, kk = jax.random.split(key)
-        idx, sel, sizes = self._draw_cohort_sel(kd)
+        idx, sel, sizes, weights, invp = self._draw_cohort_sel(state, kd)
         cp = sharded.padded_cohort_size(fl.cohort, dcount)
         pad = cp - fl.cohort
         # zero-weight padding slots (n_u = 0 -> w_u = 0 exactly, §6): the
         # padded rows alias client 0's pool but contribute nothing
         idx_p = jnp.pad(idx, (0, pad))
         sel_p = sharded.pad_cohort(sel, dcount)
-        sizes_p = jnp.pad(sizes, (0, pad))
+        # the sampler's effective counts (not the raw sizes) drive the
+        # sharded Eq. 10-12 coefficients — zero-padded like everything else
+        weights_p = jnp.pad(weights, (0, pad))
         cstates_p = self._cohort_cstates(state, idx_p)
         keys_p = self._slot_keys(kk, cp)
 
-        def body(params, data, cstates_l, sel_l, sizes_l, keys_l):
+        def body(params, data, cstates_l, sel_l, weights_l, keys_l):
             batch = self._gather_batch(data, sel_l)
             outs = jax.vmap(
                 lambda cs, b, k: client_fn(ctx, params, cs, b, k)
@@ -283,7 +328,7 @@ class Simulator:
                 if not use_wire:
                     stack_l, _ = ravel_stack(stack_l)
                 ret["agg_vec"], ret["agg_norm"] = sharded.sharded_aggregate(
-                    stack_l, sizes_l, beta, axis_name=axis,
+                    stack_l, weights_l, beta, axis_name=axis,
                     codec=codec if use_wire else None,
                     use_pallas=self._use_pallas)
             else:
@@ -301,15 +346,17 @@ class Simulator:
             body, self.mesh,
             in_specs=(rspec, rspec, cspec, cspec, cspec, cspec),
             out_specs=out_specs)
-        out = fn(params, self.data, cstates_p, sel_p, sizes_p, keys_p)
+        out = fn(params, self.data, cstates_p, sel_p, weights_p, keys_p)
 
         # strip the padding slots so the pending dict always carries exact
         # (cohort,) leading dims (scatter at padded idx would corrupt
         # client 0's state)
         unpad = (lambda t: jax.tree.map(lambda x: x[:fl.cohort], t)) \
             if pad else (lambda t: t)
-        pending = dict(idx=idx, sizes=sizes, cstates=unpad(out["cstates"]),
-                       aux=unpad(out["aux"]))
+        pending = dict(idx=idx, sizes=sizes, weights=weights,
+                       cstates=unpad(out["cstates"]), aux=unpad(out["aux"]))
+        if invp is not None:
+            pending["invp"] = invp
         if agg_path:
             pending["agg_vec"] = out["agg_vec"]
             pending["agg_norm"] = out["agg_norm"]
@@ -327,6 +374,7 @@ class Simulator:
         mc = fl.mc
         use_wire = codec.name != "identity"
         idx, sizes = pending["idx"], pending["sizes"]
+        weights = pending["weights"]
         grads, aux = pending.get("grads"), pending["aux"]
         new_cstates = pending["cstates"]
 
@@ -339,13 +387,21 @@ class Simulator:
                     new_state["ef"],
                     NamedSharding(self.mesh, P(self.caxis)))
 
+        # sampler-state refresh from the cohort's uploaded statistics
+        # (importance EMA norms, similarity sketches/ages) — under the
+        # async pipeline this lands one round late, like alpha adaptation
+        if self.smp.update is not None:
+            new_state["sampler"] = self.smp.update(
+                self._smp_opts, new_state["sampler"], idx, sizes, aux)
+
         # dense per-client uploads, decoded once, only if the method asks
         dense = None
         if method.needs_dense_grads:
             dense = comm.decode_stack(codec, grads, self._grad_spec) \
                 if use_wire else grads
         ctx = api.RoundCtx(task=self.task, mc=mc, fl=fl, r=r, idx=idx,
-                           sizes=sizes, aux=aux, grads=dense)
+                           sizes=sizes, aux=aux, grads=dense,
+                           weights=weights, invp=pending.get("invp"))
 
         # per-client state write-back at the cohort indices (spec-driven);
         # the method may transform the cohort slice first (pFedSim's
@@ -356,14 +412,16 @@ class Simulator:
                                               new_cstates)
 
         # the fused flat-buffer/codec aggregation (Eq. 10-12 with the
-        # method's beta); the sharded path already reduced inside shard_map
+        # method's beta and the sampler's effective counts — §8.2 keeps the
+        # estimator unbiased under non-uniform selection); the sharded path
+        # already reduced inside shard_map with the same weights
         if method.needs_dense_grads:
             agg = None
         elif "agg_vec" in pending:        # sharded path precomputed Eq.10-12
             agg = (unravel(pending["agg_vec"], self._grad_spec),
                    pending["agg_norm"])
         else:
-            agg = M._aggregate(grads, sizes, method.beta(mc),
+            agg = M._aggregate(grads, weights, method.beta(mc),
                                codec if use_wire else None, self._grad_spec)
 
         params, new_state, diag = method.server_update(ctx, params, agg,

@@ -1,0 +1,530 @@
+"""The cohort-sampling subsystem (fed/sampling.py, DESIGN.md §8): registry
+and FLConfig validation, bit-identical uniform default, Horvitz-Thompson
+unbiasedness of the non-uniform samplers, sampler-state checkpointing, and
+mesh/async composition.
+
+The standing contracts:
+
+* `uniform` draws through the exact pre-subsystem primitive with the exact
+  pre-subsystem key, and its aggregation weights ARE the sample counts —
+  trajectories are bit-identical to the simulator before sampling existed.
+* `importance`/`similarity` feed effective counts into `ncv_coefficients`
+  such that the empirical mean of the aggregate over selection randomness
+  matches the full-participation weighted gradient (§8.2).
+* Sampler state is ordinary run state: scanned, checkpointed, restored,
+  and identical (to f32 summation order) between single-device and mesh.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import federated_splits
+from repro.fed import (FLConfig, Simulator, Task, get_sampler,
+                       registered_samplers, sampling)
+from repro.kernels.rloo.rloo import ncv_coefficients
+from repro.models import lenet
+
+SAMPLERS = registered_samplers()
+
+
+def _maxdiff(a, b):
+    return max((float(jnp.max(jnp.abs(x - y)))
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))),
+               default=0.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    spec, train, test = federated_splits("mnist", n_clients=6, alpha=0.5,
+                                         seed=0, scale=0.1)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    return task, params, train, test
+
+
+def _sim(tiny_setup, sampler="uniform", method="fedncv", codec="identity",
+         staleness=0, mesh=None, seed=0, **opts):
+    task, params, train, _ = tiny_setup
+    params = jax.tree.map(jnp.copy, params)   # run_rounds donates buffers
+    kw = dict(ncv_beta=0.0) if method == "fedncv" else {}
+    fl = FLConfig.make(method=method, n_clients=6, cohort=3, k_micro=3,
+                       micro_batch=4, server_lr=0.5, codec=codec,
+                       staleness=staleness, sampler=sampler,
+                       local_epochs=1, **kw, **opts)
+    return Simulator(task, params, train, fl, seed=seed, mesh=mesh)
+
+
+# ----------------------------- registry / config ------------------------------
+
+def test_registry_has_all_samplers():
+    assert {"uniform", "importance", "similarity"} <= set(SAMPLERS)
+
+
+def test_get_sampler_unknown_name_lists_registry():
+    with pytest.raises(KeyError, match="uniform"):
+        get_sampler("unifrom")
+
+
+def test_register_sampler_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        sampling.register_sampler(get_sampler("uniform"))
+    sampling.register_sampler(get_sampler("uniform"), overwrite=True)
+
+
+def test_register_sampler_rejects_update_without_state():
+    """update() without init_state() would KeyError inside the jitted
+    round — refused at registration instead."""
+    with pytest.raises(ValueError, match="init_state"):
+        sampling.register_sampler(sampling.CohortSampler(
+            name="_probe_bad",
+            draw=lambda opts, state, key, m, c: (jnp.arange(c), None),
+            update=lambda opts, state, idx, sizes, aux: state))
+
+
+def test_make_allows_latent_option_collision():
+    """A method/sampler pair whose option-name sets merely intersect is
+    usable as long as the colliding name is not passed as a bare kwarg;
+    sampler_opts= bypasses the routing entirely."""
+    probe = sampling.CohortSampler(
+        name="_probe_collide",
+        draw=lambda opts, state, key, m, c:
+            (jax.random.choice(key, m, (c,), replace=False), None),
+        options=("local_lr",), defaults=dict(local_lr=0.5))
+    sampling.register_sampler(probe)
+    try:
+        FLConfig.make(method="fedavg", sampler="_probe_collide")  # no raise
+        fl = FLConfig.make(method="fedavg", sampler="_probe_collide",
+                           sampler_opts=dict(local_lr=0.25))
+        assert fl.sampler_opts == dict(local_lr=0.25)
+        with pytest.raises(TypeError, match="claimed by both"):
+            FLConfig.make(method="fedavg", sampler="_probe_collide",
+                          local_lr=0.25)       # bare kwarg is ambiguous
+    finally:
+        sampling._REGISTRY.pop("_probe_collide")
+
+
+def test_make_rejects_unknown_sampler():
+    with pytest.raises(KeyError, match="unknown cohort sampler"):
+        FLConfig.make(sampler="importence")
+
+
+def test_make_rejects_unknown_sampler_option():
+    with pytest.raises(TypeError, match="imp_mixx"):
+        FLConfig.make(sampler="importance", imp_mixx=0.5)
+    # an option of a *different* sampler is just as foreign
+    with pytest.raises(TypeError, match="sim_dim"):
+        FLConfig.make(sampler="importance", sim_dim=4)
+    with pytest.raises(TypeError, match="imp_mix"):
+        FLConfig.make(sampler="uniform", imp_mix=0.5)
+
+
+def test_make_routes_sampler_options():
+    fl = FLConfig.make(method="fedncv", sampler="importance", imp_mix=0.5,
+                       ncv_beta=0.0)
+    assert fl.sampler_opts == dict(imp_mix=0.5)
+    assert fl.mc.ncv_beta == 0.0            # method opts still land in mc
+    fl2 = FLConfig.make(sampler="similarity",
+                        sampler_opts=dict(sim_dim=4), sim_ema=0.9)
+    assert fl2.sampler_opts == dict(sim_dim=4, sim_ema=0.9)
+    # the same option via both surfaces is a conflict, not a silent
+    # kwarg-wins override
+    with pytest.raises(TypeError, match="sim_ema"):
+        FLConfig.make(sampler="similarity",
+                      sampler_opts=dict(sim_ema=0.2), sim_ema=0.9)
+
+
+def test_sampler_option_values_validated():
+    with pytest.raises(ValueError, match="imp_mix"):
+        FLConfig.make(sampler="importance", imp_mix=0.0)
+    with pytest.raises(ValueError, match="sim_dim"):
+        FLConfig.make(sampler="similarity", sim_dim=0)
+    # a fully deterministic similarity draw (no staleness bonus, no
+    # exploration noise) would starve the unselected clients forever
+    with pytest.raises(ValueError, match="sim_noise"):
+        FLConfig.make(sampler="similarity", sim_noise=0.0, sim_explore=0.0)
+
+
+# --------------------- uniform: the bit-identical default ---------------------
+
+def test_uniform_draw_matches_pre_subsystem_formula(tiny_setup):
+    """The uniform cohort draw is the exact historical computation: same
+    primitive (`jax.random.choice` without replacement), same key (first
+    split of the round key) — seeded trajectories cannot move."""
+    sim = _sim(tiny_setup)
+    for r in range(4):
+        key = jax.random.fold_in(sim.base_key, r)
+        kc, _ = jax.random.split(key)
+        want = jax.random.choice(kc, sim.fl.n_clients, (sim.fl.cohort,),
+                                 replace=False)
+        idx, _, sizes, weights, invp = sim._draw_cohort_sel(
+            sim._get_state(), key)
+        assert jnp.array_equal(idx, want)
+        assert weights is sizes             # no reweighting, literally
+        assert invp is None                 # and no invp in the pending
+
+
+def test_uniform_is_the_default_and_adds_no_state(tiny_setup):
+    sa = _sim(tiny_setup)                   # default FLConfig: uniform
+    task, params, train, _ = tiny_setup
+    fl = FLConfig.make(method="fedncv", n_clients=6, cohort=3, k_micro=3,
+                       micro_batch=4, server_lr=0.5, ncv_beta=0.0)
+    assert fl.sampler == "uniform"
+    sa.run_rounds(3)
+    assert "sampler" not in sa._get_state()  # stateless: layout unchanged
+
+
+@pytest.mark.parametrize("staleness", [0, 1])
+def test_uniform_trajectory_bit_identical_to_explicit(tiny_setup, staleness):
+    """sampler='uniform' and the implicit default walk one trajectory,
+    sync and async alike (the subsystem rewired the draw without touching
+    its randomness)."""
+    sa = _sim(tiny_setup, sampler="uniform", staleness=staleness)
+    sb = _sim(tiny_setup, staleness=staleness)
+    sa.run_rounds(4)
+    sb.run_rounds(4)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+    assert _maxdiff(sa._get_state(), sb._get_state()) == 0.0
+
+
+def test_uniform_mesh_draw_identical(tiny_setup):
+    """The cohort indices are drawn outside the shard_map, so mesh and
+    single-device runs sample the same clients (DESIGN.md §6/§8)."""
+    from repro.sharding import cohort_mesh
+    sa = _sim(tiny_setup)
+    sb = _sim(tiny_setup, mesh=cohort_mesh())
+    key = jax.random.fold_in(sa.base_key, 0)
+    ia = sa._draw_cohort_sel(sa._get_state(), key)[0]
+    ib = sb._draw_cohort_sel(sb._get_state(), key)[0]
+    assert jnp.array_equal(ia, ib)
+
+
+# ------------------ unbiasedness of the weighted estimator --------------------
+# sampler-level statistical checks on fixed synthetic gradients: the
+# self-normalized Horvitz-Thompson estimator (sizes * invp through
+# ncv_coefficients) must reproduce the full-participation weighted mean
+# over selection randomness (DESIGN.md §8.2).
+
+M_STAT, C_STAT, D_STAT, T_STAT = 24, 8, 5, 3000
+
+
+def _stat_problem():
+    g = jax.random.normal(jax.random.PRNGKey(42), (M_STAT, D_STAT)) \
+        + jnp.arange(M_STAT)[:, None] / 8.0
+    n = jnp.asarray(np.random.default_rng(0).integers(5, 40, M_STAT),
+                    jnp.float32)
+    full = (n[:, None] * g).sum(0) / n.sum()
+    return g, n, full
+
+
+def _mean_estimate(name, state, *, reweight=True):
+    g, n, full = _stat_problem()
+    smp = get_sampler(name)
+    opts = sampling.resolve_opts(smp, {})
+
+    def one(k):
+        idx, invp = smp.draw(opts, state, k, M_STAT, C_STAT)
+        w_eff = n[idx] if (invp is None or not reweight) else n[idx] * invp
+        w = ncv_coefficients(w_eff, 0.0)
+        return (w[:, None] * g[idx]).sum(0)
+
+    ests = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(7), T_STAT))
+    return float(jnp.linalg.norm(ests.mean(0) - full)
+                 / jnp.linalg.norm(full))
+
+
+def test_uniform_estimator_unbiased():
+    assert _mean_estimate("uniform", None) < 0.03
+
+
+def test_importance_estimator_unbiased_under_skewed_table():
+    """A heavily skewed EMA-norm table (15x spread) biases the selection
+    hard toward high-norm clients; the 1/(M q) factors cancel it."""
+    state = dict(score=jnp.linspace(0.2, 3.0, M_STAT))
+    err = _mean_estimate("importance", state)
+    assert err < 0.05, err
+    # negative control: the same skewed selection WITHOUT the inverse-
+    # probability weights is badly biased — the reweighting is load-bearing
+    err_raw = _mean_estimate("importance", state, reweight=False)
+    assert err_raw > 0.10, err_raw
+
+
+def test_similarity_estimator_unbiased():
+    """Fresh table: selection is exchangeable (age+noise only) == uniform.
+    Trained table: the Gumbel exploration keeps every client reachable and
+    the spread cohort stays representative."""
+    smp = get_sampler("similarity")
+    opts = sampling.resolve_opts(smp, {})
+    fresh = smp.init_state(opts, M_STAT)
+    assert _mean_estimate("similarity", fresh) < 0.03
+    trained = dict(fresh, sketch=jax.random.normal(
+        jax.random.PRNGKey(3), (M_STAT, opts["sim_dim"])))
+    assert _mean_estimate("similarity", trained) < 0.05
+
+
+def test_importance_invp_is_one_on_fresh_table():
+    """Untrained EMA table == uniform probabilities: the inverse-probability
+    factor is exactly 1, so round 1 of importance weighting is exactly the
+    uniform weighting (no cold-start distortion)."""
+    smp = get_sampler("importance")
+    opts = sampling.resolve_opts(smp, {})
+    state = smp.init_state(opts, 10)
+    _, invp = smp.draw(opts, state, jax.random.PRNGKey(0), 10, 4)
+    np.testing.assert_allclose(np.asarray(invp), 1.0, rtol=1e-6)
+
+
+def test_gumbel_top_k_marginals_match_probabilities():
+    """Gumbel-top-1 == categorical(q): the empirical top-1 frequencies must
+    track a skewed q (the WOR generalization rides the same mechanism)."""
+    q = jnp.asarray([0.05, 0.1, 0.15, 0.3, 0.4])
+    idx = jax.vmap(lambda k: sampling.gumbel_top_k(k, jnp.log(q), 1)[0])(
+        jax.random.split(jax.random.PRNGKey(0), 8000))
+    freq = np.bincount(np.asarray(idx), minlength=5) / 8000.0
+    np.testing.assert_allclose(freq, np.asarray(q), atol=0.02)
+
+
+def test_draws_are_without_replacement():
+    for name in SAMPLERS:
+        smp = get_sampler(name)
+        opts = sampling.resolve_opts(smp, {})
+        state = smp.init_state(opts, 8) if smp.stateful else None
+        idx, _ = smp.draw(opts, state, jax.random.PRNGKey(5), 8, 5)
+        assert len(np.unique(np.asarray(idx))) == 5, name
+
+
+# --------------------------- end-to-end behavior ------------------------------
+
+def test_fedncv_plus_correction_is_ht_weighted():
+    """The dense-grad path (fedncv+) weights its correction term by the
+    sampler's inverse-probability factors: E over draws of
+    (1/C) sum invp_u (g_u - h_u) must match mean_all(g - h) under a
+    skewed selection distribution, and invp=None must reproduce the
+    plain cohort mean bitwise (the uniform bit-identity contract)."""
+    from repro.fed.methods import MethodConfig, fedncv_plus_server
+    m_tot, c, d = 12, 4, 7
+    key = jax.random.PRNGKey(0)
+    g_all = jax.random.normal(key, (m_tot, d))
+    h_all = jax.random.normal(jax.random.fold_in(key, 1), (m_tot, d))
+    params = jnp.zeros((d,))
+    sstate = dict(h=h_all, h_sum=jnp.sum(h_all, axis=0))
+    mc = MethodConfig(name="fedncv+")
+    target = jnp.mean(g_all - h_all, axis=0) + jnp.mean(h_all, axis=0)
+
+    smp = get_sampler("importance")
+    opts = sampling.resolve_opts(smp, {})
+    state = dict(score=jnp.linspace(0.3, 2.5, m_tot))
+    n = jnp.ones((m_tot,))
+
+    def upd(k):
+        idx, invp = smp.draw(opts, state, k, m_tot, c)
+        p, _, _ = fedncv_plus_server(mc, None, params, g_all[idx], n[idx],
+                                     idx, sstate, 1.0, m_tot, invp=invp)
+        return -p         # lr=1, params=0: -update == the aggregate
+    aggs = jax.vmap(upd)(jax.random.split(jax.random.PRNGKey(3), 3000))
+    err = float(jnp.linalg.norm(aggs.mean(0) - target)
+                / jnp.linalg.norm(target))
+    assert err < 0.05, err
+
+    # invp of exactly ones == the invp=None path, bitwise
+    idx = jnp.arange(c)
+    p_none, _, _ = fedncv_plus_server(mc, None, params, g_all[idx], n[idx],
+                                      idx, sstate, 1.0, m_tot)
+    p_ones, _, _ = fedncv_plus_server(mc, None, params, g_all[idx], n[idx],
+                                      idx, sstate, 1.0, m_tot,
+                                      invp=jnp.ones((c,)))
+    assert jnp.array_equal(p_none, p_ones)
+
+
+def test_scaffold_c_global_is_ht_weighted():
+    """SCAFFOLD's c_global refresh is the same class of sampled population
+    mean as fedncv+'s correction: under a reweighting sampler each
+    delta_c_u carries its 1/(M q_u) factor, and invp=None (uniform) is the
+    plain mean bitwise."""
+    from repro.fed import MethodConfig, get_method
+    from repro.fed.api import FLConfig, RoundCtx
+    m_tot, c, d = 8, 4, 5
+    key = jax.random.PRNGKey(1)
+    delta_c = jax.random.normal(key, (c, d))
+    invp = jnp.asarray([0.5, 2.0, 1.5, 0.8])
+    params = jnp.zeros((d,))
+    state = dict(c_global=jnp.zeros((d,)))
+    fl = FLConfig.make(method="scaffold", n_clients=m_tot, cohort=c)
+    agg = (jnp.zeros((d,)), jnp.float32(0.0))
+
+    def run(invp_):
+        ctx = RoundCtx(task=None, mc=fl.mc, fl=fl, r=jnp.int32(1),
+                       idx=jnp.arange(c), sizes=jnp.ones((c,)),
+                       aux=dict(delta_c=delta_c), invp=invp_)
+        _, st, _ = get_method("scaffold").server_update(ctx, params, agg,
+                                                        dict(state))
+        return st["c_global"]
+
+    want = (c / m_tot) * jnp.mean(delta_c * invp[:, None], axis=0)
+    np.testing.assert_allclose(np.asarray(run(invp)), np.asarray(want),
+                               rtol=1e-6)
+    assert jnp.array_equal(run(None), run(jnp.ones((c,))))
+
+
+@pytest.mark.parametrize("method", ["fedncv", "fedavg", "scaffold",
+                                    "fedncv+"])
+@pytest.mark.parametrize("sampler", ["importance", "similarity"])
+def test_nonuniform_smoke_across_methods(sampler, method, tiny_setup):
+    sim = _sim(tiny_setup, sampler=sampler, method=method)
+    diags = sim.run_rounds(3)
+    assert np.isfinite(np.asarray(diags["agg_norm"])).all()
+    for x in jax.tree.leaves(sim.params):
+        assert np.isfinite(np.asarray(x)).all()
+    assert "sampler" in sim._get_state()
+
+
+def test_importance_state_adapts(tiny_setup):
+    sim = _sim(tiny_setup, sampler="importance")
+    sim.run_rounds(4)
+    score = np.asarray(sim.sampler["score"])
+    assert (score != 1.0).any()             # EMA table moved off its init
+    assert (score > 0).all()
+
+
+def test_similarity_state_adapts_and_ages(tiny_setup):
+    sim = _sim(tiny_setup, sampler="similarity", sim_dim=4)
+    sim.run_rounds(4)
+    st = sim.sampler
+    assert float(jnp.sum(st["sketch"] ** 2)) > 0.0
+    # sampled-this-round clients have age 0; ages never exceed the horizon
+    age = np.asarray(st["age"])
+    assert (age == 0).any() and (age <= 4).all()
+
+
+def test_sampler_stats_ride_bytes_up(tiny_setup):
+    """The norm/sketch uploads are real wire bytes: bytes_up accounts for
+    them (4 per norm scalar, 4*d per sketch row)."""
+    base = _sim(tiny_setup).run_rounds(1)["bytes_up"][-1]
+    imp = _sim(tiny_setup, sampler="importance").run_rounds(1)["bytes_up"][-1]
+    sim = _sim(tiny_setup, sampler="similarity",
+               sim_dim=4).run_rounds(1)["bytes_up"][-1]
+    cohort = 3
+    assert float(imp - base) == 4 * cohort
+    assert float(sim - base) == 4 * 4 * cohort
+
+
+# ------------------------ checkpoint / mesh / async ---------------------------
+
+@pytest.mark.parametrize("sampler", ["importance", "similarity"])
+def test_checkpoint_roundtrip_sampler_state(sampler, tiny_setup, tmp_path):
+    """Sampler tables are run state: a restored run continues the exact
+    selection trajectory (same cohorts, same weights, same params)."""
+    from repro.checkpoint import read_meta, restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(tiny_setup, sampler=sampler)
+    sa.run_rounds(2)
+    save_sim(ckdir, sa)
+    sa.run_rounds(2)
+    sb = _sim(tiny_setup, sampler=sampler)
+    assert read_meta(ckdir)["sampler"] == sampler
+    meta = restore_sim(ckdir, sb)
+    assert "sampler" in meta["state_keys"]
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+    assert _maxdiff(sa._get_state(), sb._get_state()) == 0.0
+
+
+def test_checkpoint_rejects_sampler_mismatch(tiny_setup, tmp_path):
+    from repro.checkpoint import restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(tiny_setup, sampler="importance")
+    sa.run_rounds(1)
+    save_sim(ckdir, sa)
+    sb = _sim(tiny_setup, sampler="similarity")
+    with pytest.raises(ValueError, match="importance"):
+        restore_sim(ckdir, sb)
+
+
+def test_pre_subsystem_checkpoint_means_uniform(tiny_setup, tmp_path):
+    """A checkpoint with no sampler meta (pre-PR-5 layout) is
+    definitionally a uniform-selection run: restoring it into a
+    non-uniform simulator must fail with the sampler configuration error,
+    not a confusing low-level state_keys mismatch; restoring into a
+    uniform simulator works."""
+    from repro import checkpoint as ck
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(tiny_setup)                       # uniform: no sampler state
+    sa.run_rounds(1)
+    state = sa._get_state()
+    # exactly what pre-PR-5 save_sim wrote: no "sampler" meta key
+    ck.save_step(ckdir, sa.round_idx,
+                 dict(params=sa.params, state=state),
+                 dict(round_idx=sa.round_idx, method=sa.fl.method,
+                      codec=sa.fl.codec, state_keys=sorted(state)))
+    sb = _sim(tiny_setup, sampler="importance")
+    with pytest.raises(ValueError, match="sampler"):
+        ck.restore_sim(ckdir, sb)
+    sc = _sim(tiny_setup)
+    ck.restore_sim(ckdir, sc)                   # uniform restores fine
+    assert _maxdiff(sa.params, sc.params) == 0.0
+
+
+@pytest.mark.parametrize("sampler", ["importance", "similarity"])
+def test_mesh_matches_single_device(sampler, tiny_setup):
+    """Mesh-mode rounds track single-device rounds for the non-uniform
+    samplers too: the draw runs outside the shard_map, the HT weights ride
+    the padded zero-weight rule, and the stats/sketches meet the same
+    state tables (f32 summation order only)."""
+    from repro.sharding import cohort_mesh
+    sa = _sim(tiny_setup, sampler=sampler)
+    sb = _sim(tiny_setup, sampler=sampler, mesh=cohort_mesh())
+    sa.run_rounds(2)
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) < 1e-5
+    assert _maxdiff(sa._get_state()["sampler"],
+                    sb._get_state()["sampler"]) < 1e-5
+
+
+@pytest.mark.parametrize("sampler", ["importance", "similarity"])
+def test_async_chunking_one_trajectory(sampler, tiny_setup):
+    """staleness=1 with a stateful sampler: chunked driving follows the
+    one pipelined trajectory (sampler state rides the scan carry and the
+    in-flight pending dict like every other piece of state)."""
+    sa = _sim(tiny_setup, sampler=sampler, staleness=1)
+    sb = _sim(tiny_setup, sampler=sampler, staleness=1)
+    sa.run_rounds(4)
+    sb.run_rounds(2)
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) < 5e-7
+    assert _maxdiff(sa._get_state(), sb._get_state()) < 5e-7
+
+
+def test_fedncv_plus_async_carries_invp(tiny_setup):
+    """The dense-grad method under a reweighting sampler in async mode:
+    the 1/(M q_u) factors ride the pending carry across scan steps (the
+    carry's key set is static per configuration), and chunked driving
+    follows one trajectory."""
+    sa = _sim(tiny_setup, sampler="importance", method="fedncv+",
+              staleness=1)
+    sb = _sim(tiny_setup, sampler="importance", method="fedncv+",
+              staleness=1)
+    sa.run_rounds(4)
+    sb.run_rounds(2)
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) < 5e-7
+    for x in jax.tree.leaves(sa.params):
+        assert np.isfinite(np.asarray(x)).all()
+
+
+@pytest.mark.parametrize("sampler", ["importance", "similarity"])
+def test_codec_composes_with_sampler(sampler, tiny_setup):
+    """Wire compression and sampling are orthogonal subsystems: the stats
+    wrapper runs on the raw f32 upload before the codec, and the fused
+    dequantize-aggregate consumes the sampler's weights."""
+    sim = _sim(tiny_setup, sampler=sampler, codec="int8")
+    diags = sim.run_rounds(2)
+    assert np.isfinite(np.asarray(diags["agg_norm"])).all()
+    want = {"alphas", "sampler", "ef"} if sim.codec.stateful \
+        else {"alphas", "sampler"}
+    assert set(sim._get_state()) == want

@@ -1,0 +1,87 @@
+"""Docs link checker (CI gate): every relative markdown link in the
+top-level *.md files must resolve — the target file exists, and if the
+link carries a #fragment into a markdown file, a heading with that
+GitHub-style anchor slug exists there.
+
+    python tools/check_docs.py [files...]        # default: repo-root *.md
+
+Pure stdlib, no repo imports: runs before any pip install in CI.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop non-word chars (keeping
+    spaces and hyphens), spaces -> hyphens.  Backticks, parens, slashes,
+    dots and section marks all vanish."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    """All anchors GitHub renders for the file's headings, including the
+    -1/-2... suffixes it appends to disambiguate duplicate titles."""
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    seen: dict[str, int] = {}
+    anchors = set()
+    for m in HEADING_RE.finditer(text):
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+        seen[slug] = n + 1
+    return anchors
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, frag = target.partition("#")
+        tpath = os.path.normpath(os.path.join(base, ref)) if ref \
+            else os.path.abspath(path)
+        if not os.path.exists(tpath):
+            errors.append(f"{path}: broken link target '{target}' "
+                          f"({tpath} does not exist)")
+            continue
+        if frag and tpath.endswith(".md"):
+            if frag not in anchors_of(tpath):
+                errors.append(f"{path}: anchor '#{frag}' not found in "
+                              f"{os.path.relpath(tpath)}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = argv or sorted(glob.glob(os.path.join(root, "*.md")))
+    errors = []
+    for path in files:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(f"docs-check: {e}")
+    n_links = len(files)
+    if errors:
+        print(f"docs-check: FAILED ({len(errors)} broken link(s) across "
+              f"{n_links} file(s))")
+        return 1
+    print(f"docs-check: ok ({n_links} markdown file(s), all links resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
