@@ -1,0 +1,197 @@
+"""Fault-tolerance sweep (DESIGN.md §9): what do client faults cost, and
+how much of it do the robust server aggregators buy back?
+
+Three measurements, all registry-driven (a fault model registered in
+`fed.faults` or an aggregator registered in `fed.aggregators` lands here
+automatically; `run.py --smoke` asserts it):
+
+1. **Per-fault-model sanity rows** — every registered fault model runs a
+   short fedncv/mean training burst at its default options, reporting the
+   final pre-test accuracy and the mean per-round live count.  This is the
+   coverage row: a fault model that trains to NaN or silently drops every
+   client shows up here before anything subtler does.
+
+2. **Byzantine resistance** — the paper-protocol question: with
+   f = 20% of clients sending scaled gradients (byz_scale x), how much of
+   the accuracy gap between the honest run and the poisoned weighted-mean
+   run does each robust aggregator recover?  Full participation so the
+   adversarial count per round is deterministic and the trim band can be
+   sized to cover it (k = floor(trim_frac * m) >= n_byzantine).
+   `recovered` is (acc_agg - acc_mean) / (acc_honest - acc_mean); the
+   acceptance bar is >= 0.5 for trimmed_mean and median.
+
+3. **Dropout rounds-to-target** — sampled cohorts with 20% / 40%
+   Bernoulli dropout (survivors reweighted by 1/p, DESIGN.md §9 condition),
+   reporting rounds to the target pre-test accuracy vs the no-fault run.
+   Honest dropout costs rounds, not bias: the reweighted estimator keeps
+   the same fixed point, so the curve shifts right rather than plateauing
+   lower.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.data import federated_splits
+from repro.fed import FLConfig, Simulator, Task
+from repro.fed.aggregators import registered_aggregators
+from repro.fed.faults import registered_faults
+from repro.models import lenet
+
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+
+N_CLIENTS = 12
+COHORT = 4
+ROUNDS = 30 if FAST else 60
+ROUNDS_BYZ = 24 if FAST else 48
+ROUNDS_MODEL = 10              # sanity rows only need a burst
+EVAL_EVERY = 2
+SEEDS = (0,) if FAST else (0, 1, 2)
+TARGET_ACC = 0.55      # dropout shifts the curve right; 0.55 is the
+# mid-training crossing every method still reaches inside the FAST
+# horizon at 40% dropout
+METHODS = ["fedncv", "fedavg", "scaffold"]
+METHOD_MC = {"fedncv": dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5,
+                            ncv_beta=0.0)}
+
+BYZ_FRAC = 0.2
+BYZ_SCALE = 50.0
+# full participation: n_byzantine = ceil(0.2 * 12) = 3 adversaries per
+# round, so trim k = floor(0.25 * 12) = 3 covers them exactly
+AGG_OPTS = {"trimmed_mean": dict(trim_frac=0.25)}
+
+
+def make_setup(seed=0):
+    spec, train, test = federated_splits("cifar10", n_clients=N_CLIENTS,
+                                         alpha=0.1, seed=seed, scale=0.15,
+                                         noise=1.2, class_sep=0.8)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    return cfg, task, train, test
+
+
+def _run(seed, method, rounds, *, cohort=COHORT, fault="none",
+         fault_opts=None, aggregator="mean", agg_opts=None,
+         eval_every=None):
+    """One training run; returns (accuracy curve, diag dict of arrays)."""
+    cfg, task, train, test = make_setup(seed)
+    params = lenet.init(cfg, jax.random.PRNGKey(seed))
+    fl = FLConfig.make(
+        method=method, n_clients=N_CLIENTS, cohort=cohort,
+        k_micro=4, micro_batch=16, server_lr=0.5, local_lr=0.05,
+        local_epochs=2, fault=fault, fault_opts=fault_opts or {},
+        aggregator=aggregator, agg_opts=agg_opts or {},
+        **METHOD_MC.get(method, {}))
+    sim = Simulator(task, params, train, fl, seed=seed)
+    # drive in short chunks even when only the final accuracy is wanted:
+    # the CPU scan driver unrolls, and one small compiled scan reused
+    # across every run beats compiling a rounds-long graph per config
+    every = eval_every or min(rounds, 6)
+    curve, diags_all = [], []
+    for r in range(0, rounds, every):
+        n = min(every, rounds - r)
+        diags_all.append(sim.run_rounds(n))
+        curve.append((r + n, sim.evaluate(test)))
+    diags = {k: np.concatenate([np.asarray(d[k]) for d in diags_all])
+             for k in diags_all[0]}
+    return curve, diags
+
+
+def rounds_to_target(curve):
+    for r, acc in curve:
+        if acc >= TARGET_ACC:
+            return r
+    return -1                     # never reached inside the horizon
+
+
+def fault_model_rows():
+    """Part 1: one short burst per registered fault model at defaults."""
+    for name in registered_faults():
+        t0 = time.time()
+        curve, diags = _run(SEEDS[0], "fedncv", ROUNDS_MODEL, fault=name)
+        live = (float(np.mean(diags["live"])) if "live" in diags
+                else float(COHORT))
+        acc = curve[-1][1]
+        assert np.isfinite(acc), f"fault '{name}' trained to non-finite"
+        print(f"faults_model,{name},final_acc={acc:.4f},"
+              f"mean_live={live:.2f},rounds={ROUNDS_MODEL},"
+              f"sec={time.time() - t0:.1f}", flush=True)
+
+
+def byzantine_sweep():
+    """Part 2: method x aggregator accuracy under a 20% scale attack."""
+    fopts = dict(byz_frac=BYZ_FRAC, byz_attack="scale",
+                 byz_scale=BYZ_SCALE)
+    for method in METHODS:
+        honest, t0 = [], time.time()
+        for seed in SEEDS:
+            curve, _ = _run(seed, method, ROUNDS_BYZ, cohort=N_CLIENTS)
+            honest.append(curve[-1][1])
+        acc_h = float(np.mean(honest))
+        by_agg = {}
+        for agg in registered_aggregators():
+            finals = []
+            for seed in SEEDS:
+                curve, _ = _run(seed, method, ROUNDS_BYZ,
+                                cohort=N_CLIENTS, fault="byzantine",
+                                fault_opts=fopts, aggregator=agg,
+                                agg_opts=AGG_OPTS.get(agg, {}))
+                acc = curve[-1][1]
+                finals.append(acc if np.isfinite(acc) else 0.0)
+            by_agg[agg] = float(np.mean(finals))
+        gap = acc_h - by_agg["mean"]
+        for agg in registered_aggregators():
+            rec = (by_agg[agg] - by_agg["mean"]) / gap if gap > 1e-3 \
+                else 1.0
+            print(f"faults_byz,{method},{agg},final_acc={by_agg[agg]:.4f},"
+                  f"honest_acc={acc_h:.4f},recovered={rec:.2f},"
+                  f"byz_frac={BYZ_FRAC},byz_scale={BYZ_SCALE:g},"
+                  f"seeds={len(SEEDS)},rounds={ROUNDS_BYZ},"
+                  f"sec={time.time() - t0:.1f}", flush=True)
+
+
+def dropout_sweep():
+    """Part 3: rounds-to-target under reweighted Bernoulli dropout."""
+    for method in METHODS:
+        for rate in (0.0, 0.2, 0.4):
+            rtt, finals, t0 = [], [], time.time()
+            for seed in SEEDS:
+                fault = "dropout" if rate > 0.0 else "none"
+                fopts = dict(drop_rate=rate) if rate > 0.0 else {}
+                curve, _ = _run(seed, method, ROUNDS, fault=fault,
+                                fault_opts=fopts,
+                                eval_every=EVAL_EVERY)
+                rtt.append(rounds_to_target(curve))
+                finals.append(curve[-1][1])
+            hit = [r for r in rtt if r > 0]
+            mean_rtt = float(np.mean(hit)) if len(hit) == len(rtt) \
+                else -1.0
+            print(f"faults_dropout,{method},rate={rate:.1f},"
+                  f"rounds_to_{TARGET_ACC:.2f}={mean_rtt:.1f},"
+                  f"final_acc={float(np.mean(finals)):.4f},"
+                  f"seeds={len(SEEDS)},rounds={ROUNDS},"
+                  f"sec={time.time() - t0:.1f}", flush=True)
+
+
+def main():
+    print(f"# fault-tolerance sweep (DESIGN.md §9; FAST={FAST}): "
+          f"M={N_CLIENTS}, Dirichlet alpha=0.1")
+    print("# (1) per-fault-model training burst at default options")
+    fault_model_rows()
+    print(f"# (2) accuracy under {BYZ_FRAC:.0%} scaled-gradient clients, "
+          f"per method x aggregator (full participation)")
+    byzantine_sweep()
+    print(f"# (3) rounds to pre-test accuracy >= {TARGET_ACC} under "
+          f"reweighted dropout (-1 = not reached)")
+    dropout_sweep()
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,8 @@ mirrors each benchmark's output into a machine-readable ``BENCH_<name>.json``
 (wall time + parsed CSV rows) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --smoke         # artifact gate
+    PYTHONPATH=src python -m benchmarks.run --compare OLD/  # perf gate
 
 Set BENCH_FAST=0 for the full-size (slow) protocol.
 """
@@ -26,11 +28,22 @@ BENCHES = [
     ("ablation", "benchmarks.bench_ablation"),     # alpha / K sweeps
     ("comm", "benchmarks.bench_comm"),             # codec accuracy-vs-bytes
     ("sampling", "benchmarks.bench_sampling"),     # cohort samplers (§8)
+    ("faults", "benchmarks.bench_faults"),         # fault tolerance (§9)
 ]
 
 # benches whose BENCH_<name>.json must exist for the smoke gate to pass
 # (committed artifacts: a missing file means the sweep never ran)
-REQUIRED_BENCHES = {"fl_table1_fig1", "sampling"}
+REQUIRED_BENCHES = {"fl_table1_fig1", "sampling", "faults"}
+
+# per-row numeric fields the --compare perf gate guards, with the relative
+# slack each is allowed before the diff counts as a regression.  bytes_up
+# is deterministic (codec layout), so it gets an exact-ish bar; timing
+# fields are machine-noisy and only gate gross (>50%) slowdowns.
+COMPARE_KEYS = {
+    "bytes_up": 0.01,          # higher = regression (uplink cost)
+    "sec_per_round": 0.50,     # higher = regression (round wall-clock)
+}
+COMPARE_WALL_TOL = 0.50        # per-bench wall_time_s slack
 
 
 class _Tee(io.TextIOBase):
@@ -104,6 +117,109 @@ def _check_sampling_rows(payload) -> None:
     assert not missing, f"registered samplers missing from bench: {missing}"
 
 
+def _check_faults_rows(payload) -> None:
+    """BENCH_faults.json must carry a sanity row for every registered
+    fault model and a byzantine row for every registered aggregator (both
+    sweeps are registry-driven, like the FL table: a fault model or
+    aggregator registered in `fed` that is missing from the bench means
+    the two diverged)."""
+    from repro.fed.aggregators import registered_aggregators
+    from repro.fed.faults import registered_faults
+    seen_f = {r["fields"][0] for r in payload["rows"]
+              if r["name"] == "faults_model" and r["fields"]}
+    missing = sorted(set(registered_faults()) - seen_f)
+    assert not missing, f"registered faults missing from bench: {missing}"
+    seen_a = {r["fields"][1] for r in payload["rows"]
+              if r["name"] == "faults_byz" and len(r["fields"]) >= 2}
+    missing = sorted(set(registered_aggregators()) - seen_a)
+    assert not missing, (f"registered aggregators missing from byzantine "
+                         f"sweep: {missing}")
+
+
+def _row_index(payload):
+    """Rows keyed by (name, *identity fields); numeric ``k=v`` fields
+    parsed out per row.  Identity = the fields without '='."""
+    index = {}
+    for r in payload.get("rows", []):
+        ident, vals = [r["name"]], {}
+        for f in r["fields"]:
+            if "=" in f:
+                k, _, v = f.partition("=")
+                try:
+                    vals[k] = float(v)
+                except ValueError:
+                    ident.append(f)       # e.g. json paths; keep as id
+            else:
+                ident.append(f)
+        index[tuple(ident)] = vals
+    return index
+
+
+def compare(old_dir: str) -> None:
+    """Perf gate: diff the BENCH_*.json in `old_dir` (the base revision's
+    committed artifacts) against the ones in the working tree and exit
+    nonzero if a guarded field regressed — per-bench wall_time_s, or a
+    per-row COMPARE_KEYS field (bytes_up, sec_per_round).  Rows present
+    on only one side are reported but never fail the gate (new benches
+    and retired rows are normal across PRs); FAST-mode mismatches skip
+    the bench entirely, since the protocols are different sizes."""
+    import glob
+    if os.path.isfile(old_dir):
+        old_paths = [old_dir]
+    else:
+        old_paths = sorted(glob.glob(os.path.join(old_dir,
+                                                  "BENCH_*.json")))
+    if not old_paths:
+        print(f"compare: no BENCH_*.json under {old_dir}", flush=True)
+        sys.exit(1)
+    regressions = 0
+    for old_path in old_paths:
+        with open(old_path) as f:
+            old = json.load(f)
+        name = old["bench"]
+        new_path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
+        if not os.path.exists(new_path):
+            print(f"compare:{name},skipped,no current artifact",
+                  flush=True)
+            continue
+        with open(new_path) as f:
+            new = json.load(f)
+        if old.get("fast") != new.get("fast"):
+            print(f"compare:{name},skipped,FAST-mode mismatch",
+                  flush=True)
+            continue
+        ow, nw = old.get("wall_time_s", 0.0), new.get("wall_time_s", 0.0)
+        if ow > 0 and nw > ow * (1.0 + COMPARE_WALL_TOL):
+            regressions += 1
+            print(f"compare:{name},REGRESSION,wall_time_s "
+                  f"{ow:.1f}s -> {nw:.1f}s "
+                  f"(+{100.0 * (nw / ow - 1.0):.0f}%)", flush=True)
+        old_rows, new_rows = _row_index(old), _row_index(new)
+        for ident in sorted(set(old_rows) ^ set(new_rows),
+                            key=lambda t: tuple(map(str, t))):
+            side = "dropped" if ident in old_rows else "added"
+            print(f"compare:{name},note,row {side}: "
+                  f"{','.join(ident)}", flush=True)
+        checked = 0
+        for ident in set(old_rows) & set(new_rows):
+            for key, tol in COMPARE_KEYS.items():
+                if key not in old_rows[ident] or \
+                        key not in new_rows[ident]:
+                    continue
+                ov, nv = old_rows[ident][key], new_rows[ident][key]
+                checked += 1
+                if ov > 0 and nv > ov * (1.0 + tol):
+                    regressions += 1
+                    print(f"compare:{name},REGRESSION,"
+                          f"{','.join(ident)} {key} "
+                          f"{ov:g} -> {nv:g} "
+                          f"(+{100.0 * (nv / ov - 1.0):.0f}%, "
+                          f"tol {100.0 * tol:.0f}%)", flush=True)
+        print(f"compare:{name},ok,{checked} guarded fields checked",
+              flush=True)
+    sys.exit(1 if regressions else 0)
+
+
 def smoke() -> None:
     """Assert every committed BENCH_<name>.json still parses, that the
     required benches are present, and that the FL table / sampling rows
@@ -130,6 +246,8 @@ def smoke() -> None:
                 _check_fl_registry_rows(payload)
             if payload["bench"] == "sampling":
                 _check_sampling_rows(payload)
+            if payload["bench"] == "faults":
+                _check_faults_rows(payload)
             print(f"smoke:{os.path.basename(path)},ok,"
                   f"{len(payload['rows'])} rows", flush=True)
         except Exception as e:
@@ -143,9 +261,16 @@ def main() -> None:
     ap.add_argument("--only")
     ap.add_argument("--smoke", action="store_true",
                     help="only validate that existing BENCH_*.json parse")
+    ap.add_argument("--compare", metavar="OLD",
+                    help="perf gate: diff current BENCH_*.json against "
+                         "the artifacts in OLD (a directory or a single "
+                         "json); exit nonzero on wall-clock / bytes_up "
+                         "regressions")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+    if args.compare:
+        compare(args.compare)
     failures = 0
     for name, module in BENCHES:
         if args.only and args.only != name:

@@ -1,61 +1,101 @@
-"""Batched serving example: prefill + KV-cache decode on a small gemma2-style
-model (sliding-window + global alternating attention, logit softcap).
+"""Minimal federated-learning *server loop* over the simulator.
 
-    PYTHONPATH=src python examples/serve.py --batch 8 --decode 64
+    PYTHONPATH=src python examples/serve.py [--rounds N] [--fault NAME]
+                                            [--aggregator NAME] [--smoke]
 
-Runs greedy decoding for a batch of requests and reports tokens/s — the same
-`decode_step` the dry-run lowers as `serve_step` for decode_32k/long_500k.
+This is the quickstart's training loop turned inside out: instead of one
+`run_rounds(N)` scan, the server loop below drives `sim.run_round()` one
+round at a time — the shape a real coordinator has, where each round's
+cohort draw, client pass and robust aggregation happen inside the jitted
+round and the host only sees the per-round scalar tracker line it prints
+(round index, aggregate norm, uploaded bytes, live-client count).  Between
+rounds the host is free to do server-side things a scan cannot: here it
+evaluates every --eval-every rounds and reacts to faulted rounds
+(DESIGN.md §9 — `--fault dropout` drops clients, `--fault byzantine`
+corrupts them; pair the latter with `--aggregator trimmed_mean` or
+`median` to watch the robust reduction hold the trajectory).
+
+`--smoke` runs a 2-round loop on a tiny split and prints SERVE_SMOKE_OK —
+wired into tests/test_serve.py so this example stops bit-rotting.
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
-from repro import configs
-from repro.models import api
+from repro.data import federated_splits
+from repro.fed import (FLConfig, Simulator, Task, registered_aggregators,
+                       registered_faults)
+from repro.models import lenet
+
+
+def build_sim(n_clients, cohort, fault, fault_opts, aggregator, scale,
+              seed=0):
+    spec, train, test = federated_splits("cifar10", n_clients=n_clients,
+                                         alpha=0.1, seed=seed, scale=scale,
+                                         noise=1.2, class_sep=0.8)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params = lenet.init(cfg, jax.random.PRNGKey(seed))
+    fl = FLConfig.make(method="fedncv", n_clients=n_clients, cohort=cohort,
+                       k_micro=3, micro_batch=8, server_lr=0.5,
+                       local_epochs=1, ncv_beta=0.0,
+                       fault=fault, fault_opts=fault_opts,
+                       aggregator=aggregator)
+    return Simulator(task, params, train, fl, seed=seed), test
+
+
+def serve(sim, test, rounds, eval_every):
+    """The server loop: round -> tracker line -> periodic eval."""
+    for _ in range(rounds):
+        diag = sim.run_round()
+        line = (f"round {sim.round_idx:3d}  "
+                f"agg_norm={diag['agg_norm']:9.4f}")
+        if "bytes_up" in diag:
+            line += f"  up={diag['bytes_up'] / 1024:8.1f} KiB"
+        if "live" in diag:
+            line += f"  live={diag['live']:.0f}"
+        print(line, flush=True)
+        if eval_every and sim.round_idx % eval_every == 0:
+            acc = sim.evaluate(test)
+            print(f"round {sim.round_idx:3d}  eval accuracy {acc:.3f}",
+                  flush=True)
+    return sim
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt", type=int, default=32)
-    ap.add_argument("--decode", type=int, default=64)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--cohort", type=int, default=4)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--fault", default="none",
+                    choices=sorted(registered_faults()))
+    ap.add_argument("--drop-rate", type=float, default=0.3,
+                    help="dropout rate when --fault dropout")
+    ap.add_argument("--aggregator", default="mean",
+                    choices=sorted(registered_aggregators()))
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 tiny rounds, print SERVE_SMOKE_OK and exit")
     args = ap.parse_args()
 
-    cfg = configs.get("gemma2-9b").reduced()
-    key = jax.random.PRNGKey(0)
-    params = api.init_params(cfg, key)
-    cache_len = args.prompt + args.decode
-    cache = api.init_cache(cfg, args.batch, cache_len)
+    if args.smoke:
+        sim, test = build_sim(n_clients=6, cohort=3, fault="dropout",
+                              fault_opts=dict(drop_rate=0.3),
+                              aggregator="trimmed_mean", scale=0.05)
+        serve(sim, test, rounds=2, eval_every=2)
+        print("SERVE_SMOKE_OK", flush=True)
+        return
 
-    prompt = jax.random.randint(key, (args.batch, args.prompt), 0, cfg.vocab)
-    decode = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos))
-
-    # prefill by stepping the decoder over the prompt (teacher-forced)
-    tok = prompt[:, :1]
-    for i in range(args.prompt):
-        logits, cache = decode(params, cache, prompt[:, i:i + 1],
-                               jnp.int32(i))
-    # greedy decode
-    out = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    t0 = time.time()
-    for i in range(args.decode):
-        logits, cache = decode(params, cache, tok,
-                               jnp.int32(args.prompt + i))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    toks = args.batch * args.decode
-    seq = jnp.concatenate(out, axis=1)
-    print(f"decoded {args.decode} tokens x batch {args.batch} "
-          f"in {dt:.2f}s -> {toks / dt:.1f} tok/s (1 CPU core, reduced model)")
-    print("sample token ids:", seq[0, :16].tolist())
-    assert not bool(jnp.isnan(logits).any())
-    print("no NaNs; sliding-window ring caches exercised "
-          f"(local cache len {cfg.sliding_window})")
+    fault_opts = dict(drop_rate=args.drop_rate) \
+        if args.fault == "dropout" else {}
+    sim, test = build_sim(args.clients, args.cohort, args.fault, fault_opts,
+                          args.aggregator, scale=0.15)
+    serve(sim, test, args.rounds, args.eval_every)
+    print(f"final eval accuracy {sim.evaluate(test):.3f}")
 
 
 if __name__ == "__main__":

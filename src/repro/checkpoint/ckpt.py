@@ -114,12 +114,14 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
     field (FedNCV alphas, SCAFFOLD c_u/c_global, personal heads, FedNCV+
     h/h_sum, FedGLOMO momenta) plus the comm codec's error-feedback
     residuals (`ef`) and the cohort sampler's tables (`sampler`:
-    importance EMA norms, similarity sketches/ages — DESIGN.md §8) — so a
-    restored run continues the exact trajectory, compression and selection
-    state included.  Nothing here is per-method or per-sampler: anything
-    registered through `fed.api`/`fed.sampling` checkpoints correctly by
-    construction.  The meta records the method/codec/sampler names and
-    state keys for restore-time validation.
+    importance EMA norms, similarity sketches/ages — DESIGN.md §8) and the
+    fault model's availability state (`faults`: Markov on/off bits —
+    DESIGN.md §9) — so a restored run continues the exact trajectory,
+    compression, selection and availability state included.  Nothing here
+    is per-method, per-sampler or per-fault-model: anything registered
+    through `fed.api`/`fed.sampling`/`fed.faults` checkpoints correctly
+    by construction.  The meta records the method/codec/sampler/
+    aggregator/fault names and state keys for restore-time validation.
     """
     state = sim._get_state()
     tree = dict(params=sim.params, state=state)
@@ -127,6 +129,7 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
               dict(meta or {}, round_idx=sim.round_idx,
                    method=sim.fl.method, codec=sim.fl.codec,
                    sampler=sim.fl.sampler,
+                   aggregator=sim.fl.aggregator, fault=sim.fl.fault,
                    state_keys=sorted(state)), keep=keep)
 
 
@@ -146,14 +149,35 @@ def restore_sim(directory: str, sim, step: int | None = None):
     # structural restore, so a mismatch reports the configuration error,
     # not a low-level missing-key failure
     saved = payload.get("_meta", {})
+    # strategy names recorded in the meta must exist in THIS build's
+    # registries — a checkpoint from a branch with an unregistered
+    # method/sampler/aggregator/fault must fail with the roster, not with
+    # a downstream shape or missing-key error
+    from repro.fed import api as _api
+    from repro.fed import aggregators as _aggs
+    from repro.fed import faults as _faults
+    from repro.fed import sampling as _sampling
+    for key, roster in (("method", _api.registered_methods()),
+                        ("sampler", _sampling.registered_samplers()),
+                        ("aggregator", _aggs.registered_aggregators()),
+                        ("fault", _faults.registered_faults())):
+        have = saved.get(key)
+        if have is not None and have not in roster:
+            raise ValueError(
+                f"checkpoint names {key}={have!r}, which is not "
+                f"registered in this build — registered {key}s: "
+                f"{sorted(roster)}")
     # absent meta keys: method/codec predate PR 4 and default leniently to
-    # the configured value; an absent sampler key definitionally means the
-    # checkpoint was written under uniform selection, so it must FAIL
-    # against a non-uniform configuration here (with the configuration
-    # error) instead of falling through to the state_keys mismatch below
+    # the configured value; an absent sampler (aggregator, fault) key
+    # definitionally means the checkpoint was written under uniform
+    # selection (the mean aggregator, no faults), so it must FAIL against
+    # a different configuration here (with the configuration error)
+    # instead of falling through to the state_keys mismatch below
     for key, want, absent in (("method", sim.fl.method, sim.fl.method),
                               ("codec", sim.fl.codec, sim.fl.codec),
-                              ("sampler", sim.fl.sampler, "uniform")):
+                              ("sampler", sim.fl.sampler, "uniform"),
+                              ("aggregator", sim.fl.aggregator, "mean"),
+                              ("fault", sim.fl.fault, "none")):
         have = saved.get(key, absent)
         if have != want:
             raise ValueError(

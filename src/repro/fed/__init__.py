@@ -1,6 +1,12 @@
+from repro.fed.aggregators import (  # noqa: F401
+    Aggregator, get_aggregator, register_aggregator, registered_aggregators,
+)
 from repro.fed.api import (  # noqa: F401
     FedMethod, FLConfig, MethodCtx, RoundCtx, StateField, get_method,
     register_method, registered_methods,
+)
+from repro.fed.faults import (  # noqa: F401
+    FaultModel, get_fault, register_fault, registered_faults,
 )
 from repro.fed.methods import ClientOut, MethodConfig, Task  # noqa: F401
 from repro.fed.sampling import (  # noqa: F401

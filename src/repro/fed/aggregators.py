@@ -1,0 +1,302 @@
+"""repro.fed.aggregators — server-side aggregation strategies (DESIGN.md §9).
+
+The server reduction of every aggregate-then-correct method used to be one
+hardwired op: the fused Eq. 10-12 weighted sum.  That op is the *honest*
+estimator — a single Byzantine client scaling its upload by 10x owns the
+round.  This module makes the reduction a registered strategy object
+(mirroring `FedMethod` / `CohortSampler` / `FaultModel`):
+
+    mean          the historical fused weighted sum (Eq. 10-12 with the
+                  method's beta) — the default, bit-identical to the
+                  pre-registry simulator, including the fused
+                  dequantize-aggregate wire paths and the sharded
+                  one-psum path.
+    trimmed_mean  coordinate-wise trimmed mean: per coordinate, drop the
+                  k = floor(trim_frac * m_valid) smallest and largest
+                  reporting values, average the rest.
+    median        coordinate-wise median (the maximally-trimmed band).
+    norm_clip     Eq. 10-12 weighted sum with each upload's contribution
+                  clipped to clip_mult x the median reporting norm — a
+                  robust *scale* filter that keeps the HT weighting (and
+                  hence beta) intact.
+
+All of them run on the flat (cohort, N) substrate in one fused pass:
+`mean`/`norm_clip` through the `ncv_weighted_sum` kernel, the order-
+statistic pair through `kernels/robust.rank_band_mean` (Pallas rank-band
+kernel on TPU, sort-based jnp oracle elsewhere — the shared
+`default_interpret` convention).
+
+Robust aggregators are deliberately *unweighted* over the valid rows:
+per-client sample counts are client-reported, so weighting by them would
+hand Byzantine clients a free amplification knob.  The Eq. 10-12 weights
+enter only as a validity mask (w_u > 0; dropped/padded rows carry exactly
+0) — consequently `trimmed_mean`/`median` do not honor a nonzero method
+beta (`honors_beta=False`; `FLConfig` rejects the combination loudly:
+run fedncv with ncv_beta=0 to pair it with them).
+
+Sharded cohorts (DESIGN.md §6): a robust reduction is not a sum, so the
+local-partial + one-psum trick does not apply.  Aggregators declare an
+optional `sharded_reduce` hook that runs inside the shard_map body —
+`mean` keeps the fused partial/psum path, `norm_clip` all-gathers only
+the (cohort,) scalar norms before its weighted sum
+(`sharded.sharded_clipped_aggregate`) — and aggregators without the hook
+(the order-statistic pair needs every coordinate of every row) make the
+simulator fall back to returning the per-client uploads from the
+shard_map and reducing on the replicated stack, trading the psum for one
+cohort all-gather.  `fed/distributed.make_round` does the same explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing as tp
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed import methods as M
+from repro.kernels.rloo.rloo import ncv_coefficients
+from repro.utils.tree_math import ravel_stack, unravel
+
+
+def _wsum(g_flat, w, use_pallas):
+    if use_pallas is None:
+        from repro.kernels import default_interpret
+        use_pallas = not default_interpret()
+    if use_pallas:
+        from repro.kernels.rloo.rloo import ncv_weighted_sum
+        return ncv_weighted_sum(g_flat, w, interpret=False)
+    from repro.kernels.rloo.ref import ncv_weighted_sum_ref
+    return ncv_weighted_sum_ref(g_flat, w)
+
+
+def _rank_band(g_flat, alive, lo, hi, use_pallas):
+    if use_pallas is None:
+        from repro.kernels import default_interpret
+        use_pallas = not default_interpret()
+    if use_pallas:
+        from repro.kernels.robust.robust import rank_band_mean
+        return rank_band_mean(g_flat, alive, lo, hi, interpret=False)
+    from repro.kernels.robust.ref import rank_band_mean_ref
+    return rank_band_mean_ref(g_flat, alive, lo, hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """A server-side cohort reduction as one first-class strategy object.
+
+    reduce         : (opts, g_flat (C, N) f32, weights (C,), beta,
+                     use_pallas) -> (agg (N,) f32, ||agg||^2).  `weights`
+                     are the effective Eq. 10-12 counts (sampler- and
+                     fault-adjusted; exactly 0 marks an invalid row).
+                     Runs inside jit every round.
+    honors_beta    : the reduction applies the method's server-side CV
+                     coefficient; False makes FLConfig reject beta != 0.
+    fused_wire     : the reduction can consume the codec's compressed
+                     stacked wire directly (`methods._aggregate`'s fused
+                     dequantize-aggregate path) — only `mean`; everything
+                     else gets the wire decoded once to the dense stack.
+    sharded_reduce : optional shard_map-body hook
+                     (opts, stack_local, w_local, beta, axis_name, codec,
+                     use_pallas) -> (agg (N,), ||agg||^2) replicated.
+                     None -> the mesh path falls back to gathering the
+                     dense stack out of the shard_map and calling
+                     `reduce` on it (exact, one all-gather).
+    """
+    name: str
+    reduce: tp.Callable
+    honors_beta: bool = False
+    fused_wire: bool = False
+    sharded_reduce: tp.Callable | None = None
+    options: tuple = ()
+    defaults: dict = dataclasses.field(default_factory=dict)
+    validate: tp.Callable | None = None
+    description: str = ""
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors fed/api.py's method registry)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Aggregator] = {}
+
+
+def register_aggregator(agg: Aggregator, *,
+                        overwrite: bool = False) -> Aggregator:
+    """Register `agg` under `agg.name`; returns it for chaining."""
+    if not overwrite and agg.name in _REGISTRY:
+        raise ValueError(f"aggregator '{agg.name}' is already registered")
+    if set(agg.defaults) - set(agg.options):
+        raise ValueError(
+            f"aggregator '{agg.name}' has defaults for undeclared options: "
+            f"{sorted(set(agg.defaults) - set(agg.options))}")
+    _REGISTRY[agg.name] = agg
+    return agg
+
+
+def get_aggregator(name: str) -> Aggregator:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown aggregator '{name}'; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_aggregators() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_opts(agg: Aggregator, opts: dict | None) -> dict:
+    """Merge user options over the aggregator's defaults, rejecting
+    unknown names and bad values (the `FLConfig.make` contract)."""
+    opts = dict(opts or {})
+    bad = sorted(set(opts) - set(agg.options))
+    if bad:
+        raise TypeError(
+            f"option(s) {bad} are not used by aggregator '{agg.name}'; "
+            f"valid options: {sorted(agg.options)}")
+    resolved = {**agg.defaults, **opts}
+    if agg.validate is not None:
+        agg.validate(resolved)
+    return resolved
+
+
+def aggregate_stack(agg: Aggregator, opts: dict, grads, weights, beta,
+                    codec, spec, use_pallas: bool | None = None):
+    """The generic server-section entry point: stacked uploads (dense
+    pytree, or the codec's stacked wire when `codec` is given) -> the
+    aggregator's (aggregate pytree, ||agg||^2).
+
+    `mean` takes the historical fused path verbatim (`methods._aggregate`
+    — including the dequantize-aggregate kernels), so the default
+    aggregator is bit-identical to the pre-registry simulator; robust
+    aggregators decode the wire once to the flat (C, N) stack first.
+    """
+    if agg.fused_wire:
+        return M._aggregate(grads, weights, beta, codec, spec)
+    if codec is not None:
+        flat = jax.vmap(codec.decode)(grads)            # (C, N) f32
+    else:
+        flat, _ = ravel_stack(grads)
+    vec, norm = agg.reduce(opts, flat, weights, beta, use_pallas)
+    return unravel(vec, spec), norm
+
+
+# ---------------------------------------------------------------------------
+# mean — the bit-identical default (Eq. 10-12 fused weighted sum)
+# ---------------------------------------------------------------------------
+
+def _mean_reduce(opts, g_flat, weights, beta, use_pallas):
+    del opts
+    return _wsum(g_flat, ncv_coefficients(weights, beta), use_pallas)
+
+
+def _mean_sharded(opts, stack_local, w_local, beta, axis_name, codec,
+                  use_pallas):
+    del opts
+    from repro.fed import sharded
+    return sharded.sharded_aggregate(stack_local, w_local, beta,
+                                     axis_name=axis_name, codec=codec,
+                                     use_pallas=use_pallas)
+
+
+register_aggregator(Aggregator(
+    name="mean",
+    reduce=_mean_reduce,
+    honors_beta=True,
+    fused_wire=True,
+    sharded_reduce=_mean_sharded,
+    description="the honest fused Eq. 10-12 weighted sum (bit-identical "
+                "default; fused wire + sharded one-psum paths)",
+))
+
+
+# ---------------------------------------------------------------------------
+# trimmed_mean / median — coordinate-wise order-statistic bands
+# ---------------------------------------------------------------------------
+
+def _trimmed_reduce(opts, g_flat, weights, beta, use_pallas):
+    del beta                                   # honors_beta=False
+    alive = (jnp.asarray(weights) > 0).astype(jnp.float32)
+    m_v = jnp.sum(alive)
+    k = jnp.floor(opts["trim_frac"] * m_v)
+    # never trim past the middle: tiny surviving cohorts degrade toward
+    # the median instead of an empty band
+    k = jnp.clip(k, 0.0, jnp.floor((m_v - 1.0) / 2.0))
+    return _rank_band(g_flat, alive, k, m_v - 1.0 - k, use_pallas)
+
+
+def _trimmed_validate(opts):
+    if not 0.0 <= opts["trim_frac"] < 0.5:
+        raise ValueError(f"trim_frac must be in [0, 0.5), got "
+                         f"{opts['trim_frac']}")
+
+
+register_aggregator(Aggregator(
+    name="trimmed_mean",
+    reduce=_trimmed_reduce,
+    options=("trim_frac",),
+    defaults=dict(trim_frac=0.2),
+    validate=_trimmed_validate,
+    description="coordinate-wise trimmed mean over the reporting clients "
+                "(drops the floor(trim_frac*m) extremes per coordinate)",
+))
+
+
+def _median_reduce(opts, g_flat, weights, beta, use_pallas):
+    del opts, beta
+    alive = (jnp.asarray(weights) > 0).astype(jnp.float32)
+    m_v = jnp.sum(alive)
+    lo = jnp.maximum(jnp.floor((m_v - 1.0) / 2.0), 0.0)
+    return _rank_band(g_flat, alive, lo, m_v - 1.0 - lo, use_pallas)
+
+
+register_aggregator(Aggregator(
+    name="median",
+    reduce=_median_reduce,
+    description="coordinate-wise median over the reporting clients (the "
+                "maximally-trimmed band; breakdown point 1/2)",
+))
+
+
+# ---------------------------------------------------------------------------
+# norm_clip — Eq. 10-12 with contributions clipped to a robust norm scale
+# ---------------------------------------------------------------------------
+
+def _norm_clip_factors(g_flat, weights, clip_mult):
+    from repro.kernels.robust.ref import masked_median_1d
+    norms = jnp.sqrt(jnp.sum(g_flat.astype(jnp.float32) ** 2, axis=1))
+    tau = clip_mult * masked_median_1d(norms, jnp.asarray(weights) > 0)
+    return jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
+
+
+def _norm_clip_reduce(opts, g_flat, weights, beta, use_pallas):
+    clip = _norm_clip_factors(g_flat, weights, opts["clip_mult"])
+    w = ncv_coefficients(weights, beta) * clip
+    return _wsum(g_flat, w, use_pallas)
+
+
+def _norm_clip_sharded(opts, stack_local, w_local, beta, axis_name, codec,
+                       use_pallas):
+    from repro.fed import sharded
+    return sharded.sharded_clipped_aggregate(
+        stack_local, w_local, beta, opts["clip_mult"], axis_name=axis_name,
+        codec=codec, use_pallas=use_pallas)
+
+
+def _norm_clip_validate(opts):
+    if opts["clip_mult"] <= 0:
+        raise ValueError(f"clip_mult must be > 0, got {opts['clip_mult']}")
+
+
+register_aggregator(Aggregator(
+    name="norm_clip",
+    reduce=_norm_clip_reduce,
+    honors_beta=True,
+    sharded_reduce=_norm_clip_sharded,
+    options=("clip_mult",),
+    defaults=dict(clip_mult=2.0),
+    validate=_norm_clip_validate,
+    description="Eq. 10-12 weighted sum with each upload clipped to "
+                "clip_mult x the median reporting norm (keeps HT "
+                "weighting and beta; sharded via scalar all-gather)",
+))

@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import control_variates as cv
+from repro.fed import aggregators
+from repro.fed import faults
 from repro.fed import methods as M
 from repro.fed import sampling
 from repro.utils.tree_math import tree_axpy, tree_zeros_like
@@ -76,7 +78,12 @@ class RoundCtx(tp.NamedTuple):
     `invp` carries those raw 1/(M q_u) factors themselves, and is None
     whenever the sampler does not reweight (uniform/exchangeable
     selection) — dense-grad servers use it to Horvitz-Thompson-weight
-    per-client terms directly.
+    per-client terms directly.  Under a dropping fault model
+    (repro.fed.faults, DESIGN.md §9) `invp` additionally carries the
+    dropout factors alive_u / s_u, and `alive` is the (cohort,) 0/1
+    survival mask — None when the fault model cannot drop — which
+    dense-grad servers use to gate per-client writes (a client that
+    never reported must not have its table entry overwritten).
     """
     task: M.Task
     mc: M.MethodConfig
@@ -88,6 +95,7 @@ class RoundCtx(tp.NamedTuple):
     grads: tp.Any = None
     weights: tp.Any = None
     invp: tp.Any = None
+    alive: tp.Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,15 +233,23 @@ def gather_cohort_states(fields: tuple[StateField, ...], state, idx):
 
 
 def scatter_cohort_states(fields: tuple[StateField, ...], state, idx,
-                          cstates_new) -> dict:
+                          cstates_new, alive=None) -> dict:
     """Write client-returned per-client state rows back at the cohort
-    indices (fields with scatter=True)."""
+    indices (fields with scatter=True).
+
+    `alive` ((cohort,) 0/1, or None): under a dropping fault model
+    (repro.fed.faults) a dropped client never reported, so its row keeps
+    the *previous* state — whatever its aborted pass "returned" is
+    discarded, exactly as on a real fleet."""
     new = dict(state)
     for f in fields:
         if f.per_client and f.scatter and f.cstate_key is not None:
+            rows = cstates_new[f.cstate_key]
+            if alive is not None:
+                old = jax.tree.map(lambda a: a[idx], state[f.name])
+                rows = faults.where_rows(alive, rows, old)
             new[f.name] = jax.tree.map(lambda a, n: a.at[idx].set(n),
-                                       state[f.name],
-                                       cstates_new[f.cstate_key])
+                                       state[f.name], rows)
     return new
 
 
@@ -282,6 +298,10 @@ class FLConfig:
     staleness: int = 0                # 0 = sync; 1 = one-round-stale overlap
     sampler: str = "uniform"          # cohort selection (repro.fed.sampling)
     sampler_opts: dict = dataclasses.field(default_factory=dict)
+    aggregator: str = "mean"          # server reduction (fed.aggregators)
+    agg_opts: dict = dataclasses.field(default_factory=dict)
+    fault: str = "none"               # client fault injection (fed.faults)
+    fault_opts: dict = dataclasses.field(default_factory=dict)
     mc: M.MethodConfig = dataclasses.field(
         default_factory=lambda: M.MethodConfig(name="fedncv"))
 
@@ -303,10 +323,26 @@ class FLConfig:
                              f"variate (beta != 0): cohort must be >= 2")
         if method.validate is not None:
             method.validate(self.mc)
-        # sampler name + option validation mirrors the method's: unknown
-        # samplers and typo'd/foreign options raise at construction
+        # sampler/aggregator/fault name + option validation mirrors the
+        # method's: unknown names and typo'd/foreign options raise at
+        # construction, never at round time
         sampling.resolve_opts(sampling.get_sampler(self.sampler),
                               self.sampler_opts)
+        agg = aggregators.get_aggregator(self.aggregator)
+        aggregators.resolve_opts(agg, self.agg_opts)
+        faults.resolve_opts(faults.get_fault(self.fault), self.fault_opts)
+        if method.needs_dense_grads and self.aggregator != "mean":
+            raise ValueError(
+                f"method '{self.method}' consumes the dense per-client "
+                f"uploads itself (needs_dense_grads) — the "
+                f"'{self.aggregator}' aggregator would be silently ignored")
+        if method.beta(self.mc) != 0.0 and not agg.honors_beta:
+            raise ValueError(
+                f"aggregator '{self.aggregator}' ignores the server-side "
+                f"control-variate coefficient, but method '{self.method}' "
+                f"has beta = {method.beta(self.mc)} — set ncv_beta=0 (or "
+                f"pick a beta-honoring aggregator such as "
+                f"{[a for a in aggregators.registered_aggregators() if aggregators.get_aggregator(a).honors_beta]})")
 
     @classmethod
     def make(cls, method: str = "fedncv", *, n_clients: int = 100,
@@ -314,50 +350,73 @@ class FLConfig:
              server_lr: float = 1.0, codec: str = "identity",
              codec_opts: dict | None = None, staleness: int = 0,
              sampler: str = "uniform", sampler_opts: dict | None = None,
+             aggregator: str = "mean", agg_opts: dict | None = None,
+             fault: str = "none", fault_opts: dict | None = None,
              **opts) -> "FLConfig":
-        """Validated construction: `method` and `sampler` must be
-        registered, and every extra keyword must be an option one of them
-        actually reads — method options are COMMON_OPTIONS plus the
-        method's declared `FedMethod.options`, sampler options are the
-        `CohortSampler.options` of the chosen sampler (they may also be
-        passed via the explicit `sampler_opts` dict).  A typo, an option
-        the chosen method/sampler would silently ignore, and an
-        ambiguously-named option all raise instead of training a default
-        config."""
+        """Validated construction: `method`, `sampler`, `aggregator` and
+        `fault` must be registered, and every extra keyword must be an
+        option one of them actually reads — method options are
+        COMMON_OPTIONS plus the method's declared `FedMethod.options`;
+        sampler/aggregator/fault options are the chosen strategy's
+        declared `options` (each may also be passed via its explicit
+        `*_opts` dict).  A typo, an option the chosen strategies would
+        silently ignore, and an ambiguously-named option all raise
+        instead of training a default config."""
         m = get_method(method)
-        smp = sampling.get_sampler(sampler)
-        m_allowed = COMMON_OPTIONS | set(m.options)
-        s_allowed = set(smp.options)
+        # (kind, chosen name, allowed option names, explicit-dict kwarg)
+        subsystems = (
+            ("method", method, COMMON_OPTIONS | set(m.options), None),
+            ("sampler", sampler,
+             set(sampling.get_sampler(sampler).options), "sampler_opts"),
+            ("aggregator", aggregator,
+             set(aggregators.get_aggregator(aggregator).options),
+             "agg_opts"),
+            ("fault", fault,
+             set(faults.get_fault(fault).options), "fault_opts"),
+        )
         # only *passed* options can be ambiguous — a latent name collision
-        # between a method and a sampler the caller never exercises must
-        # not make the pair unusable (sampler_opts= remains the escape
-        # hatch, and it genuinely bypasses this routing)
-        ambiguous = sorted(m_allowed & s_allowed & set(opts))
-        if ambiguous:
-            raise TypeError(
-                f"option name(s) {ambiguous} are claimed by both method "
-                f"'{method}' and sampler '{sampler}' — pass them via "
-                f"sampler_opts= to disambiguate")
-        bad = sorted(set(opts) - m_allowed - s_allowed)
+        # between strategies the caller never exercises must not make the
+        # combination unusable (the explicit *_opts dicts remain the
+        # escape hatch, and they genuinely bypass this routing)
+        for name in sorted(opts):
+            claims = [s for s in subsystems if name in s[2]]
+            if len(claims) > 1:
+                (k1, n1, _, _), (k2, n2, _, d2) = claims[:2]
+                raise TypeError(
+                    f"option name(s) ['{name}'] are claimed by both {k1} "
+                    f"'{n1}' and {k2} '{n2}' — pass them via {d2}= to "
+                    f"disambiguate")
+        all_allowed = set().union(*(s[2] for s in subsystems))
+        bad = sorted(set(opts) - all_allowed)
         if bad:
-            raise TypeError(f"option(s) {bad} are not used by '{method}' "
-                            f"or sampler '{sampler}'; valid options: "
-                            f"{sorted(m_allowed | s_allowed)}")
-        s_opts = dict(sampler_opts or {})
-        s_kwargs = {k: v for k, v in opts.items() if k in s_allowed}
-        doubled = sorted(set(s_opts) & set(s_kwargs))
-        if doubled:
             raise TypeError(
-                f"sampler option(s) {doubled} passed both as keyword(s) "
-                f"and in sampler_opts= — remove one (nothing here is "
-                f"resolved silently)")
-        s_opts.update(s_kwargs)
-        method_opts = {k: v for k, v in opts.items() if k in m_allowed}
+                f"option(s) {bad} are not used by "
+                + " or ".join(f"{k} '{n}'" for k, n, _, _ in subsystems)
+                + f"; valid options: {sorted(all_allowed)}")
+
+        def routed(allowed, explicit, kind, dict_name):
+            ex = dict(explicit or {})
+            kw = {k: v for k, v in opts.items() if k in allowed}
+            doubled = sorted(set(ex) & set(kw))
+            if doubled:
+                raise TypeError(
+                    f"{kind} option(s) {doubled} passed both as keyword(s) "
+                    f"and in {dict_name}= — remove one (nothing here is "
+                    f"resolved silently)")
+            return {**ex, **kw}
+
+        s_opts = routed(subsystems[1][2], sampler_opts, "sampler",
+                        "sampler_opts")
+        a_opts = routed(subsystems[2][2], agg_opts, "aggregator", "agg_opts")
+        f_opts = routed(subsystems[3][2], fault_opts, "fault", "fault_opts")
+        method_opts = {k: v for k, v in opts.items() if k in subsystems[0][2]}
         return cls(method=method, n_clients=n_clients, cohort=cohort,
                    k_micro=k_micro, micro_batch=micro_batch,
                    server_lr=server_lr, codec=codec,
                    codec_opts=dict(codec_opts or {}), staleness=staleness,
                    sampler=sampler, sampler_opts=s_opts,
+                   aggregator=aggregator, agg_opts=a_opts,
+                   fault=fault, fault_opts=f_opts,
                    mc=M.MethodConfig(name=method, **method_opts))
 
 
@@ -435,6 +494,10 @@ def _fedncv_server(ctx: RoundCtx, params, agg, state):
             lambda a, k, s1, s2: cv.alpha_descent_update(
                 a, cv.ClientCVStats(None, k, s1, s2), mc.ncv_alpha_lr))(
             aux["alpha"], aux["k"], aux["mean_norm_sq"], aux["sum_norm_sq"])
+    if ctx.alive is not None:
+        # a dropped client's stats never arrived: keep its previous alpha
+        # (aux["alpha"] is the value the round started from)
+        alpha_new = jnp.where(ctx.alive > 0, alpha_new, aux["alpha"])
     state = dict(state, alphas=state["alphas"].at[ctx.idx].set(alpha_new))
     return params, state, diag
 
@@ -474,7 +537,7 @@ def _fedncv_plus_server(ctx: RoundCtx, params, agg, state):
     params, sstate, diag = M.fedncv_plus_server(
         ctx.mc, ctx.task, params, ctx.grads, ctx.sizes, ctx.idx,
         dict(h=state["h"], h_sum=state["h_sum"]), ctx.fl.server_lr,
-        ctx.fl.n_clients, invp=ctx.invp)
+        ctx.fl.n_clients, invp=ctx.invp, alive=ctx.alive)
     return params, dict(state, h=sstate["h"], h_sum=sstate["h_sum"]), diag
 
 

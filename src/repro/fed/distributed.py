@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.fed import api
+from repro.fed import aggregators, api
 from repro.fed.methods import MethodConfig, Task
 from repro.fed.sharded import shard_map_compat
 from repro.utils.tree_math import ravel, tree_norm_sq, unravel
@@ -59,7 +59,8 @@ def init_distributed_state(method: api.FedMethod, params, task: Task,
 
 
 def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
-               codec=None, seed: int = 0):
+               codec=None, seed: int = 0, aggregator: str = "mean",
+               agg_opts: dict | None = None):
     """Build round(params, state, batch, n_samples, r[, seeds]) for any
     registered method (name or FedMethod) with `distributed_ok`.
 
@@ -80,6 +81,17 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
     Returns (params, state, metrics): `agg_norm`, the pmean of every
     scalar client aux statistic as `mean_<name>`, and `bytes_up` (the
     cohort's uploaded gradient-wire bytes) under a codec.
+
+    `aggregator` selects a registered server reduction (DESIGN.md §9).
+    "mean" keeps the Eq. 10-12 one-psum collapse above, bit-identical to
+    the pre-registry round.  A robust aggregator (trimmed_mean / median /
+    norm_clip) needs order statistics over the full message stack, so the
+    raveled per-client messages are all-gathered over the client axes
+    (one parameter-sized collective — the same volume as the psum, just
+    materialising the (m, N) stack on every shard) and the registered
+    `reduce` runs replicated.  Aggregators with `honors_beta = False`
+    reject beta != 0 at build time — they discard the client-count
+    weighting that the NCV correction rides on.
     """
     if isinstance(method, str):
         method = api.get_method(method)
@@ -96,6 +108,13 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
     use_wire = codec is not None and codec.name != "identity"
     stateful = use_wire and codec.stateful
     beta = method.beta(mc)
+    agg = aggregators.get_aggregator(aggregator)
+    agg_opts = aggregators.resolve_opts(agg, agg_opts)
+    if beta != 0.0 and not agg.honors_beta:
+        raise ValueError(
+            f"aggregator '{agg.name}' discards the per-client count "
+            f"weighting and cannot apply the NCV correction "
+            f"(beta={beta}); use ncv_beta=0 or aggregator='mean'")
     ctx_c = api.MethodCtx(task, mc)
     scatter_keys = tuple(f.cstate_key for f in fields
                          if f.per_client and f.scatter
@@ -142,16 +161,27 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
             if stateful:
                 new_cstate = dict(new_cstate, ef=ef_new)
 
-        # ---- Eq. 10-12 collapse: one weighted all-reduce ----
-        n = jax.lax.psum(n_u_local, ca)
-        p_u = n_u_local / n
-        if beta == 0.0:           # plain weighted mean (FedAvg family)
-            w_u = p_u
+        if agg.fused_wire:
+            # ---- Eq. 10-12 collapse: one weighted all-reduce ----
+            n = jax.lax.psum(n_u_local, ca)
+            p_u = n_u_local / n
+            if beta == 0.0:       # plain weighted mean (FedAvg family)
+                w_u = p_u
+            else:
+                t = jax.lax.psum(n_u_local / (n - n_u_local), ca)
+                w_u = (1.0 - beta * t) * p_u \
+                    + beta * p_u * n_u_local / (n - n_u_local)
+            agg_out = jax.tree.map(lambda m: jax.lax.psum(w_u * m, ca),
+                                   msg)
         else:
-            t = jax.lax.psum(n_u_local / (n - n_u_local), ca)
-            w_u = (1.0 - beta * t) * p_u \
-                + beta * p_u * n_u_local / (n - n_u_local)
-        agg = jax.tree.map(lambda m: jax.lax.psum(w_u * m, ca), msg)
+            # ---- robust reduction: order statistics need the full
+            # stack, so all-gather the raveled messages (one
+            # parameter-sized collective) and reduce replicated ----
+            vec, vspec = ravel(msg)
+            g_all = jax.lax.all_gather(vec, ca)          # (m, N)
+            n_all = jax.lax.all_gather(n_u_local, ca)    # (m,)
+            avec, _ = agg.reduce(agg_opts, g_all, n_all, beta, None)
+            agg_out = unravel(avec, vspec)
 
         # restack the per-client outputs (full participation: the
         # write-back outside is a plain restack, no scatter conflicts)
@@ -159,7 +189,7 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
                   for k in scatter_keys}
         if stateful:
             cs_out["ef"] = new_cstate["ef"][None]
-        ret = dict(agg=agg, cstates=cs_out,
+        ret = dict(agg=agg_out, cstates=cs_out,
                    aux=jax.tree.map(lambda x: x[None], out.aux))
         return ret
 

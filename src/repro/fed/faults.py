@@ -1,0 +1,419 @@
+"""repro.fed.faults — per-round client fault injection (DESIGN.md §9).
+
+The simulator's historical threat model is "honest and always online":
+every sampled client finishes its pass, uploads what it computed, and the
+server trusts all of it.  This module makes that a pluggable knob — a
+`FaultModel` registered here (mirroring `fed/api.py`'s methods and
+`fed/sampling.py`'s cohort samplers) injects faults *inside the jitted
+round*:
+
+* **Dropout / availability** — a sampled client fails to report
+  (Bernoulli per round, or a per-client Markov on/off trace evolving
+  across rounds).  A dropped client is an inclusion-probability event,
+  not a correctness event: conditional on the cohort draw, client u
+  survives with probability s_u, so its effective inclusion probability
+  is pi_u * s_u and the Horvitz-Thompson machinery of DESIGN.md §8.2
+  extends verbatim — the plan's `invp` factor is alive_u / s_u
+  (E[alive_u / s_u] = 1), multiplied into the Eq. 10-12 weights and into
+  `RoundCtx.invp`.  With the factor the aggregate stays (self-normalized)
+  unbiased under *heterogeneous* dropout; without it (the
+  `drop_reweight=False` negative control) survivors of low-failure
+  clients are over-counted and the estimator is measurably biased
+  (tests/test_faults.py proves both directions).
+* **Stragglers** — each sampled client draws a latency; clients slower
+  than the simulated round deadline are dropped.  Same HT correction
+  with s_u = P(latency_u <= deadline), which is closed-form for the
+  exponential latency model used here.
+* **Byzantine corruption** — a fixed fraction of client *ids* is
+  adversarial and corrupts what it uploads: `scale` (gradient times a
+  large factor), `signflip` (gradient times -1), or `labelflip` (trains
+  on permuted labels).  Byzantine clients are NOT reweighted or excluded
+  — the server does not know who they are; defending is the job of the
+  robust server aggregators (repro.fed.aggregators).
+
+A fault model produces a per-cohort-slot **plan** each round:
+
+    plan = fm.plan(opts, state, key, idx, n_clients) -> dict(
+        alive  = (cohort,) f32 in {0, 1} — 0: the client never reported,
+        invp   = (cohort,) f32 — alive_u / s_u (the HT dropout factor;
+                 alive_u alone when the model does not reweight; ones
+                 when nothing drops),
+        gscale = (cohort,) f32 — multiplicative upload corruption
+                 (1 = honest),
+        flip   = (cohort,) f32 in {0, 1} — train on flipped labels)
+
+plus three static capability predicates (`drops`/`corrupts`/`flips`, each
+(opts) -> bool) the simulator branches on once at build time, so a model
+that only drops never pays the corruption wrapper and `fault="none"`
+(plan=None) keeps the round body — and every trajectory — bit-identical
+to the pre-fault simulator.  Models with per-client state across rounds
+(the Markov availability trace) declare `init_state`/`step`; the state
+lives under the ``"faults"`` key of the run state dict, rides the
+lax.scan carry, the async pending buffer and `checkpoint.save_sim`
+exactly like sampler tables.
+
+Dropped clients are excluded end to end, not just down-weighted: their
+per-client state (SCAFFOLD c_u, momenta, codec EF residuals, FedNCV
+alphas) is NOT scattered back — a client that never reported cannot have
+changed its state (`api.scatter_cohort_states(alive=...)`), and the dense
+server paths (fedncv+'s h-table) gate their per-client writes on
+`RoundCtx.alive` the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing as tp
+
+import jax
+import jax.numpy as jnp
+
+# Key under which the per-slot fault signals (gscale/flip) ride the
+# client-side cstate dict into the vmapped client pass; `wrap_client` pops
+# it before the method sees the cstate, so methods stay fault-oblivious.
+FAULT_KEY = "fault_plan"
+
+# PRNG salt separating the fault stream from the cohort-draw / client-pass
+# streams derived from the same round key.
+FAULT_SALT = 0xFA17
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """A per-round client fault process as one first-class object.
+
+    plan        : (opts, state, key, idx, n_clients) -> plan dict (module
+                  docstring).  Runs inside jit every round, after the
+                  cohort draw.  None marks the no-fault model: the
+                  simulator skips ALL fault machinery (bit-identical).
+    init_state  : (opts, n_clients) -> dict of arrays, or None when the
+                  model is memoryless.  Lives under the "faults" key of
+                  the run state dict — scanned, checkpointed, restored
+                  like sampler tables.
+    step        : (opts, state, key) -> state.  Evolves the availability
+                  state once per round for ALL clients (Markov
+                  transitions), before `plan` reads it.
+    drops       : (opts) -> bool — plan may zero `alive`; enables the
+                  reweighting, the all-dropped guard and scatter gating.
+    corrupts    : (opts) -> bool — plan's `gscale` is not identically 1;
+                  enables the client-side corruption wrapper.
+    flips       : (opts) -> bool — plan's `flip` may be 1; enables label
+                  flipping of the gathered batch.
+    options     : option names `FLConfig.make` accepts and validates;
+                  `defaults` supplies omitted values; `validate` raises
+                  on bad values.
+    """
+    name: str
+    plan: tp.Callable | None
+    init_state: tp.Callable | None = None
+    step: tp.Callable | None = None
+    drops: tp.Callable = staticmethod(lambda opts: False)
+    corrupts: tp.Callable = staticmethod(lambda opts: False)
+    flips: tp.Callable = staticmethod(lambda opts: False)
+    options: tuple = ()
+    defaults: dict = dataclasses.field(default_factory=dict)
+    validate: tp.Callable | None = None
+    description: str = ""
+
+    @property
+    def stateful(self) -> bool:
+        return self.init_state is not None
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors fed/sampling.py's sampler registry)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, FaultModel] = {}
+
+
+def register_fault(fm: FaultModel, *, overwrite: bool = False) -> FaultModel:
+    """Register `fm` under `fm.name`; returns it for chaining."""
+    if not overwrite and fm.name in _REGISTRY:
+        raise ValueError(f"fault model '{fm.name}' is already registered")
+    if set(fm.defaults) - set(fm.options):
+        raise ValueError(
+            f"fault model '{fm.name}' has defaults for undeclared options: "
+            f"{sorted(set(fm.defaults) - set(fm.options))}")
+    if fm.step is not None and fm.init_state is None:
+        raise ValueError(
+            f"fault model '{fm.name}' declares step() but no init_state(): "
+            f"a per-round state evolution needs state to evolve")
+    _REGISTRY[fm.name] = fm
+    return fm
+
+
+def get_fault(name: str) -> FaultModel:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown fault model '{name}'; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_faults() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_opts(fm: FaultModel, opts: dict | None) -> dict:
+    """Merge user options over the model's defaults, rejecting unknown
+    names and bad values — the `FLConfig.make` contract (a typo'd knob
+    raises instead of silently simulating the default threat model)."""
+    opts = dict(opts or {})
+    bad = sorted(set(opts) - set(fm.options))
+    if bad:
+        raise TypeError(
+            f"option(s) {bad} are not used by fault model '{fm.name}'; "
+            f"valid options: {sorted(fm.options)}")
+    resolved = {**fm.defaults, **opts}
+    if fm.validate is not None:
+        fm.validate(resolved)
+    return resolved
+
+
+# ---------------------------------------------------------------------------
+# client-side injection helpers (consumed by the simulator)
+# ---------------------------------------------------------------------------
+
+def wrap_client(client_fn, n_classes: int | None):
+    """Innermost client-pass wrapper: applies a slot's fault plan.
+
+    Pops the per-slot plan (`FAULT_KEY`, a dict of scalars under vmap)
+    from the cstate before the method sees it, flips the local batch's
+    labels when the plan says so (`n_classes` must be given iff the model
+    flips), and multiplies the uploaded gradient by `gscale`.  Applied
+    *before* the sampler-stats and codec wrappers, so an adversarial
+    upload is what the honest protocol measures, compresses and ships —
+    exactly what a real Byzantine client controls.
+    """
+    def fn(ctx, params, cstate, batches, key):
+        cs = dict(cstate)
+        plan = cs.pop(FAULT_KEY)
+        if n_classes is not None:
+            batches = dict(batches)
+            batches["labels"] = jnp.where(
+                plan["flip"] > 0, n_classes - 1 - batches["labels"],
+                batches["labels"])
+        out = client_fn(ctx, params, cs, batches, key)
+        grad = jax.tree.map(lambda g: g * plan["gscale"], out.grad)
+        return out._replace(grad=grad)
+    return fn
+
+
+def where_rows(alive, new, old):
+    """Per-row select over (cohort, ...) pytrees: `new` where alive > 0."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            alive.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o), new, old)
+
+
+def _ones_plan(c):
+    return dict(alive=jnp.ones((c,), jnp.float32),
+                invp=jnp.ones((c,), jnp.float32),
+                gscale=jnp.ones((c,), jnp.float32),
+                flip=jnp.zeros((c,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# none — the bit-identical default
+# ---------------------------------------------------------------------------
+
+register_fault(FaultModel(
+    name="none",
+    plan=None,
+    description="every client honest and always online (bit-identical "
+                "default: no fault machinery enters the round)",
+))
+
+
+# ---------------------------------------------------------------------------
+# dropout — Bernoulli mid-round failure, optionally heterogeneous
+# ---------------------------------------------------------------------------
+
+def _dropout_rates(opts, idx, m):
+    """Per-client drop probability: `drop_rate` spread linearly by client
+    id over [rate*(1-skew), rate*(1+skew)] (skew=0: homogeneous).  The
+    skew makes dropout *informative* — exactly the regime where the HT
+    correction is load-bearing (a uniform survival probability cancels in
+    the self-normalized weights)."""
+    span = 2.0 * idx.astype(jnp.float32) / jnp.maximum(m - 1, 1) - 1.0
+    rate = opts["drop_rate"] * (1.0 + opts["drop_skew"] * span)
+    return jnp.clip(rate, 0.0, 0.95)
+
+
+def _dropout_plan(opts, state, key, idx, m):
+    del state
+    rate = _dropout_rates(opts, idx, m)
+    alive = (jax.random.uniform(key, idx.shape) >= rate).astype(jnp.float32)
+    invp = alive / (1.0 - rate) if opts["drop_reweight"] else alive
+    return dict(_ones_plan(idx.shape[0]), alive=alive, invp=invp)
+
+
+def _dropout_validate(opts):
+    if not 0.0 <= opts["drop_rate"] < 1.0:
+        raise ValueError(f"drop_rate must be in [0, 1), got "
+                         f"{opts['drop_rate']}")
+    if not 0.0 <= opts["drop_skew"] <= 1.0:
+        raise ValueError(f"drop_skew must be in [0, 1], got "
+                         f"{opts['drop_skew']}")
+
+
+register_fault(FaultModel(
+    name="dropout",
+    plan=_dropout_plan,
+    drops=staticmethod(lambda opts: True),
+    options=("drop_rate", "drop_skew", "drop_reweight"),
+    defaults=dict(drop_rate=0.3, drop_skew=0.0, drop_reweight=True),
+    validate=_dropout_validate,
+    description="Bernoulli mid-round failure with 1/(1-rate) HT "
+                "reweighting (drop_reweight=False: biased negative "
+                "control)",
+))
+
+
+# ---------------------------------------------------------------------------
+# markov — per-client on/off availability trace across rounds
+# ---------------------------------------------------------------------------
+
+def _markov_pi(opts):
+    """Stationary on-probability of the 2-state chain."""
+    return opts["mk_recover"] / (opts["mk_fail"] + opts["mk_recover"])
+
+
+def _markov_init(opts, m):
+    # start AT stationarity (fixed key, like sampling.sketch_projection):
+    # the marginal P(on) is then exactly pi at every round, so the
+    # stationary-probability reweighting below is exact, not asymptotic
+    u = jax.random.uniform(jax.random.PRNGKey(0x0A11), (m,))
+    return dict(on=(u < _markov_pi(opts)).astype(jnp.float32))
+
+
+def _markov_step(opts, state, key):
+    on = state["on"]
+    u = jax.random.uniform(key, on.shape)
+    on = jnp.where(on > 0, (u >= opts["mk_fail"]), (u < opts["mk_recover"]))
+    return dict(state, on=on.astype(jnp.float32))
+
+
+def _markov_plan(opts, state, key, idx, m):
+    del key, m
+    alive = state["on"][idx]
+    invp = alive / _markov_pi(opts) if opts["mk_reweight"] else alive
+    return dict(_ones_plan(idx.shape[0]), alive=alive, invp=invp)
+
+
+def _markov_validate(opts):
+    for nm in ("mk_fail", "mk_recover"):
+        if not 0.0 < opts[nm] <= 1.0:
+            raise ValueError(f"{nm} must be in (0, 1], got {opts[nm]}")
+
+
+register_fault(FaultModel(
+    name="markov",
+    plan=_markov_plan,
+    init_state=_markov_init,
+    step=_markov_step,
+    drops=staticmethod(lambda opts: True),
+    options=("mk_fail", "mk_recover", "mk_reweight"),
+    defaults=dict(mk_fail=0.1, mk_recover=0.3, mk_reweight=True),
+    validate=_markov_validate,
+    description="per-client on/off Markov availability trace (stationary "
+                "start; reweighted by the stationary on-probability)",
+))
+
+
+# ---------------------------------------------------------------------------
+# straggler — clients dropped after a simulated round deadline
+# ---------------------------------------------------------------------------
+
+def _straggler_means(opts, idx, m):
+    span = 2.0 * idx.astype(jnp.float32) / jnp.maximum(m - 1, 1) - 1.0
+    return opts["str_mean"] * (1.0 + opts["str_skew"] * span)
+
+
+def _straggler_plan(opts, state, key, idx, m):
+    del state
+    mean = _straggler_means(opts, idx, m)
+    lat = mean * jax.random.exponential(key, idx.shape)
+    alive = (lat <= opts["str_deadline"]).astype(jnp.float32)
+    # exponential latency: P(survive) = 1 - exp(-deadline / mean), closed
+    # form, so the HT factor is exact per client even under str_skew
+    s = 1.0 - jnp.exp(-opts["str_deadline"] / mean)
+    return dict(_ones_plan(idx.shape[0]), alive=alive, invp=alive / s)
+
+
+def _straggler_validate(opts):
+    if opts["str_mean"] <= 0 or opts["str_deadline"] <= 0:
+        raise ValueError("str_mean and str_deadline must be > 0")
+    if not 0.0 <= opts["str_skew"] < 1.0:
+        raise ValueError(f"str_skew must be in [0, 1), got "
+                         f"{opts['str_skew']}")
+
+
+register_fault(FaultModel(
+    name="straggler",
+    plan=_straggler_plan,
+    drops=staticmethod(lambda opts: True),
+    options=("str_mean", "str_deadline", "str_skew"),
+    defaults=dict(str_mean=1.0, str_deadline=2.0, str_skew=0.0),
+    validate=_straggler_validate,
+    description="exponential per-client latency vs. a simulated round "
+                "deadline; late clients dropped with exact HT correction",
+))
+
+
+# ---------------------------------------------------------------------------
+# byzantine — a fixed fraction of client ids is adversarial
+# ---------------------------------------------------------------------------
+
+BYZ_ATTACKS = ("scale", "signflip", "labelflip")
+
+
+def n_byzantine(opts, m: int) -> int:
+    """Number of adversarial clients: the first ceil(byz_frac * m) ids.
+
+    A *fixed id set* (not a per-round coin flip) is the standard threat
+    model: the attacker controls specific devices for the whole run."""
+    import math
+    return min(m, math.ceil(opts["byz_frac"] * m))
+
+
+def _byzantine_plan(opts, state, key, idx, m):
+    del state, key
+    byz = (idx < n_byzantine(opts, m)).astype(jnp.float32)
+    attack = opts["byz_attack"]
+    if attack == "scale":
+        gscale = 1.0 + byz * (opts["byz_scale"] - 1.0)
+    elif attack == "signflip":
+        gscale = 1.0 - 2.0 * byz
+    else:                                   # labelflip: honest-looking grads
+        gscale = jnp.ones_like(byz)
+    flip = byz if attack == "labelflip" else jnp.zeros_like(byz)
+    # alive/invp stay ones: the server cannot exclude or reweight
+    # adversaries it cannot identify — defense belongs to the aggregator
+    return dict(_ones_plan(idx.shape[0]), gscale=gscale, flip=flip)
+
+
+def _byzantine_validate(opts):
+    if not 0.0 <= opts["byz_frac"] <= 1.0:
+        raise ValueError(f"byz_frac must be in [0, 1], got "
+                         f"{opts['byz_frac']}")
+    if opts["byz_attack"] not in BYZ_ATTACKS:
+        raise ValueError(f"byz_attack must be one of {BYZ_ATTACKS}, got "
+                         f"{opts['byz_attack']!r}")
+    if opts["byz_scale"] == 0.0:
+        raise ValueError("byz_scale must be nonzero (0 is a dropout, not "
+                         "an attack)")
+
+
+register_fault(FaultModel(
+    name="byzantine",
+    plan=_byzantine_plan,
+    corrupts=staticmethod(
+        lambda opts: opts["byz_attack"] in ("scale", "signflip")),
+    flips=staticmethod(lambda opts: opts["byz_attack"] == "labelflip"),
+    options=("byz_frac", "byz_attack", "byz_scale"),
+    defaults=dict(byz_frac=0.2, byz_attack="scale", byz_scale=10.0),
+    validate=_byzantine_validate,
+    description="fixed fraction of adversarial client ids: scaled / "
+                "sign-flipped uploads or label-flipped training",
+))

@@ -216,7 +216,7 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
 # ---------------------------------------------------------------------------
 
 def fedncv_plus_server(mc, task, params, grads_stacked, n_samples, idx,
-                       sstate, lr, m_total, invp=None):
+                       sstate, lr, m_total, invp=None, alive=None):
     """mean_all(h) comes from the running sum `h_sum` kept in `sstate` and
     updated incrementally at the cohort indices, so the per-round cost is
     O(cohort * N) instead of re-reducing all M_total stale gradients.
@@ -228,7 +228,14 @@ def fedncv_plus_server(mc, task, params, grads_stacked, n_samples, idx,
     corr = (1/C) sum_u invp_u (g_u - h_u).  None (or all-ones, i.e.
     uniform/exchangeable selection) is the plain cohort mean.  The h-table
     bookkeeping (h_all scatter, h_sum increment) always uses the raw
-    deltas — it tracks the table exactly, not an expectation."""
+    deltas — it tracks the table exactly, not an expectation.
+
+    `alive` ((cohort,) 0/1 or None): under a dropping fault model
+    (repro.fed.faults, DESIGN.md §9) a dropped client uploaded nothing,
+    so its h-table row must keep the previous value and contribute no
+    delta — the correction term's dropout compensation rides `invp`
+    (whose dead rows are exactly 0), while the table bookkeeping is
+    masked directly."""
     h_all, h_sum = sstate["h"], sstate["h_sum"]   # (M_total, ...), (...)
     h_mean = tree_scale(h_sum, 1.0 / m_total)
     h_cohort = jax.tree.map(lambda h: h[idx], h_all)
@@ -242,6 +249,11 @@ def fedncv_plus_server(mc, task, params, grads_stacked, n_samples, idx,
             delta)
     agg = jax.tree.map(jnp.add, h_mean, corr)
     params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, agg)
+    if alive is not None:
+        am = lambda x: alive.reshape((-1,) + (1,) * (x.ndim - 1))
+        grads_stacked = jax.tree.map(
+            lambda g, h: jnp.where(am(g) > 0, g, h), grads_stacked, h_cohort)
+        delta = jax.tree.map(lambda d: d * am(d), delta)
     h_all = jax.tree.map(lambda h, g: h.at[idx].set(g), h_all, grads_stacked)
     h_sum = jax.tree.map(lambda s, d: s + jnp.sum(d, axis=0), h_sum, delta)
     return params, dict(sstate, h=h_all, h_sum=h_sum), \

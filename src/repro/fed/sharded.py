@@ -115,3 +115,52 @@ def sharded_aggregate(stack_local, n_local, beta=1.0, *, axis_name: str,
                                         use_pallas=use_pallas)
     agg = jax.lax.psum(partial, axis_name)
     return agg, jnp.sum(agg * agg)
+
+
+def sharded_clipped_aggregate(stack_local, n_local, beta, clip_mult, *,
+                              axis_name: str, codec=None,
+                              use_pallas: bool | None = None):
+    """The `norm_clip` robust aggregator over a cohort-sharded stack.
+
+    Norm clipping is the one robust reduction that keeps the
+    local-partial + one-psum shape: the clip threshold depends only on
+    the (cohort,) *scalar* upload norms, so those are all-gathered
+    together with the sample counts (DESIGN.md §9) — still negligible
+    next to the N-sized payload — every device computes the identical
+    global threshold tau = clip_mult * median(valid norms) and clip
+    factors, folds its local factor block into the exact global Eq. 10-12
+    coefficients, and the partial sums meet in the same single psum as
+    `sharded_aggregate`.  Padded slots (n_u = 0) are excluded from the
+    median and keep w_u = 0 exactly.
+
+    Non-identity codecs are decoded locally first: clipping needs true
+    f32 norms, and the clipped weighted sum no longer matches the fused
+    dequantize-aggregate contraction.
+    """
+    if use_pallas is None:
+        from repro.kernels import default_interpret
+        use_pallas = not default_interpret()
+    if codec is not None and codec.name != "identity":
+        g_local = jax.vmap(codec.decode)(stack_local)     # (C_loc, N) f32
+    else:
+        g_local = stack_local if not isinstance(stack_local, dict) else \
+            stack_local["v"]
+    g_local = g_local.astype(jnp.float32)
+    norms_local = jnp.sqrt(jnp.sum(g_local * g_local, axis=1))
+    norms = jax.lax.all_gather(norms_local, axis_name, tiled=True)  # (C_p,)
+    n_all = jax.lax.all_gather(n_local, axis_name, tiled=True)      # (C_p,)
+    from repro.kernels.robust.ref import masked_median_1d
+    tau = clip_mult * masked_median_1d(norms, n_all > 0)
+    clip = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
+    w_all = ncv_coefficients(n_all, beta) * clip
+    i = jax.lax.axis_index(axis_name)
+    c_loc = n_local.shape[0]
+    w_local = jax.lax.dynamic_slice_in_dim(w_all, i * c_loc, c_loc)
+    if use_pallas:
+        from repro.kernels.rloo.rloo import ncv_weighted_sum
+        partial, _ = ncv_weighted_sum(g_local, w_local, interpret=False)
+    else:
+        from repro.kernels.rloo.ref import ncv_weighted_sum_ref
+        partial, _ = ncv_weighted_sum_ref(g_local, w_local)
+    agg = jax.lax.psum(partial, axis_name)
+    return agg, jnp.sum(agg * agg)

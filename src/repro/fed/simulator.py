@@ -55,7 +55,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import comm
+from repro.fed import aggregators
 from repro.fed import api
+from repro.fed import faults
 from repro.fed import methods as M
 from repro.fed import sampling
 from repro.fed import sharded
@@ -115,6 +117,26 @@ class Simulator:
         self._sketch_proj = sampling.sketch_projection(
             self._grad_spec.n, d_sketch) if d_sketch else None
 
+        # server-side aggregation strategy (fed.aggregators, DESIGN.md §9):
+        # "mean" keeps every historical fused Eq. 10-12 path bit-identical;
+        # robust aggregators reduce the decoded flat stack instead
+        self.agg = aggregators.get_aggregator(fl.aggregator)
+        self._agg_opts = aggregators.resolve_opts(self.agg, fl.agg_opts)
+
+        # client fault injection (fed.faults, DESIGN.md §9): the plan is
+        # drawn inside jit each round; the capability flags below are
+        # static per-configuration facts the build branches on once —
+        # fault="none" takes the exact pre-fault round body
+        self.fm = faults.get_fault(fl.fault)
+        self._fm_opts = faults.resolve_opts(self.fm, fl.fault_opts)
+        self._fault_on = self.fm.plan is not None
+        self._fm_drops = self._fault_on and self.fm.drops(self._fm_opts)
+        self._fm_corrupts = self._fault_on and \
+            self.fm.corrupts(self._fm_opts)
+        self._fm_flips = self._fault_on and self.fm.flips(self._fm_opts)
+        self._n_classes = int(np.max(np.asarray(data["labels"]))) + 1 \
+            if self._fm_flips else None
+
         # method + codec state, built from the declarative state_spec():
         # per-client fields live in (M, ...) buffers gathered/scattered at
         # the cohort indices, global fields are plain pytrees.  The codec's
@@ -137,6 +159,14 @@ class Simulator:
                     "method state field 'sampler' collides with the cohort "
                     "sampler's state key; rename the StateField")
             self._state["sampler"] = self.smp.init_state(self._smp_opts, m)
+        # stateful fault models (the Markov availability trace) carry
+        # their per-client state the same way, under the "faults" key
+        if self._fault_on and self.fm.stateful:
+            if any(f.name == "faults" for f in self._fields):
+                raise ValueError(
+                    "method state field 'faults' collides with the fault "
+                    "model's state key; rename the StateField")
+            self._state["faults"] = self.fm.init_state(self._fm_opts, m)
 
         # async pipeline buffers (round in flight; None until first round)
         self._pending = None
@@ -241,6 +271,12 @@ class Simulator:
 
     def _client_fn(self):
         client_fn = self.method.client_update
+        # fault corruption wraps innermost: the adversary controls the raw
+        # upload (and its training labels), and the honest protocol —
+        # sampler stats, codec compression — then applies to the corrupted
+        # gradient exactly as it would on a real fleet (fed.faults §9)
+        if self._fm_corrupts or self._fm_flips:
+            client_fn = faults.wrap_client(client_fn, self._n_classes)
         # sampler statistics (upload norm / sketch) are computed on the raw
         # f32 upload, so the stats wrapper goes on before the codec
         if self.smp.needs_norms or self._sketch_proj is not None:
@@ -252,6 +288,45 @@ class Simulator:
         if self.codec.name != "identity":
             client_fn = api.with_codec(client_fn, self.codec)
         return client_fn
+
+    def _fault_plan(self, state, key, idx, weights, invp):
+        """Draw the round's fault plan and fold honest-dropout inclusion
+        factors into the Eq. 10-12 weights (DESIGN.md §9).
+
+        Returns (plan, evolved fault state, weights, invp, live) — all
+        None/unchanged when fault="none" (the bit-identical path).  `live`
+        is the all-dropped guard: when every sampled client drops, the
+        weights are replaced by ones (so `ncv_coefficients` stays finite)
+        and the server section zeroes the aggregate with this flag — a
+        no-op round instead of NaN params.
+        """
+        if not self._fault_on:
+            return None, None, weights, invp, None
+        fstate = state.get("faults")
+        kf = jax.random.fold_in(key, faults.FAULT_SALT)
+        if self.fm.step is not None:
+            fstate = self.fm.step(self._fm_opts, fstate,
+                                  jax.random.fold_in(kf, 1))
+        plan = self.fm.plan(self._fm_opts, fstate, jax.random.fold_in(kf, 2),
+                            idx, self.fl.n_clients)
+        live = None
+        if self._fm_drops:
+            weights = weights * plan["invp"]
+            invp = plan["invp"] if invp is None else invp * plan["invp"]
+            live = (jnp.sum(weights) > 0).astype(jnp.float32)
+            weights = jnp.where(live > 0, weights, jnp.ones_like(weights))
+        return plan, fstate, weights, invp, live
+
+    def _fault_pending(self, pending, plan, fstate, live):
+        """Attach the fault plan's server-side pieces to the pending dict.
+        Key presence is a static per-configuration fact, so the async
+        pending carry stays type-stable across rounds."""
+        if self._fm_drops:
+            pending["alive"] = plan["alive"]
+            pending["live"] = live
+        if self._fault_on and self.fm.stateful:
+            pending["fault_state"] = fstate
+        return pending
 
     def _client_section(self, params, state, key):
         """Cohort draw + client passes (+ wire encode [+ sharded reduce]).
@@ -273,8 +348,13 @@ class Simulator:
         ctx = api.MethodCtx(self.task, fl.mc)
         kd, kk = jax.random.split(key)
         idx, sel, sizes, weights, invp = self._draw_cohort_sel(state, kd)
+        plan, fstate, weights, invp, live = self._fault_plan(
+            state, key, idx, weights, invp)
         batches = self._gather_batch(self.data, sel)
         cstates = self._cohort_cstates(state, idx)
+        if self._fm_corrupts or self._fm_flips:
+            cstates[faults.FAULT_KEY] = dict(gscale=plan["gscale"],
+                                             flip=plan["flip"])
         keys = self._slot_keys(kk, fl.cohort)
         outs = jax.vmap(
             lambda cs, b, k: client_fn(ctx, params, cs, b, k)
@@ -286,7 +366,7 @@ class Simulator:
         # per-configuration fact, so scan/async carries stay type-stable
         if invp is not None:
             pending["invp"] = invp
-        return pending
+        return self._fault_pending(pending, plan, fstate, live)
 
     def _client_section_sharded(self, params, state, key):
         """Mesh mode: the cohort work runs in a shard_map over the cohort
@@ -299,12 +379,19 @@ class Simulator:
         axis, dcount = self.caxis, self.n_devices
         use_wire = codec.name != "identity"
         # dense-grad methods (FedNCV+'s per-client h_u) need the per-client
-        # uploads at the server, not just the aggregate
-        agg_path = not self.method.needs_dense_grads
+        # uploads at the server, not just the aggregate; aggregators
+        # without a sharded_reduce hook (the order-statistic pair — a
+        # robust reduction is not a psum of partials) take the same dense
+        # fallback: the stack leaves the shard_map and the reduction runs
+        # on the replicated copy in the server section (DESIGN.md §9)
+        agg_path = not self.method.needs_dense_grads and \
+            self.agg.sharded_reduce is not None
         beta = self.method.beta(mc)
 
         kd, kk = jax.random.split(key)
         idx, sel, sizes, weights, invp = self._draw_cohort_sel(state, kd)
+        plan, fstate, weights, invp, live = self._fault_plan(
+            state, key, idx, weights, invp)
         cp = sharded.padded_cohort_size(fl.cohort, dcount)
         pad = cp - fl.cohort
         # zero-weight padding slots (n_u = 0 -> w_u = 0 exactly, §6): the
@@ -315,6 +402,11 @@ class Simulator:
         # sharded Eq. 10-12 coefficients — zero-padded like everything else
         weights_p = jnp.pad(weights, (0, pad))
         cstates_p = self._cohort_cstates(state, idx_p)
+        if self._fm_corrupts or self._fm_flips:
+            # padded slots get gscale=1/flip=0: their weight is already 0
+            cstates_p[faults.FAULT_KEY] = dict(
+                gscale=jnp.pad(plan["gscale"], (0, pad), constant_values=1.0),
+                flip=jnp.pad(plan["flip"], (0, pad)))
         keys_p = self._slot_keys(kk, cp)
 
         def body(params, data, cstates_l, sel_l, weights_l, keys_l):
@@ -327,10 +419,9 @@ class Simulator:
                 stack_l = outs.grad
                 if not use_wire:
                     stack_l, _ = ravel_stack(stack_l)
-                ret["agg_vec"], ret["agg_norm"] = sharded.sharded_aggregate(
-                    stack_l, weights_l, beta, axis_name=axis,
-                    codec=codec if use_wire else None,
-                    use_pallas=self._use_pallas)
+                ret["agg_vec"], ret["agg_norm"] = self.agg.sharded_reduce(
+                    self._agg_opts, stack_l, weights_l, beta, axis,
+                    codec if use_wire else None, self._use_pallas)
             else:
                 ret["grads"] = outs.grad
             return ret
@@ -362,7 +453,7 @@ class Simulator:
             pending["agg_norm"] = out["agg_norm"]
         else:
             pending["grads"] = unpad(out["grads"])
-        return pending
+        return self._fault_pending(pending, plan, fstate, live)
 
     def _server_section(self, params, state, pending, r):
         """Generic server half of a round, driven entirely by the method's
@@ -375,12 +466,24 @@ class Simulator:
         use_wire = codec.name != "identity"
         idx, sizes = pending["idx"], pending["sizes"]
         weights = pending["weights"]
+        # fault-injection plan pieces (absent under fault="none"): the 0/1
+        # survival mask, the all-dropped guard flag, and the evolved fault
+        # state (fed.faults, DESIGN.md §9)
+        alive = pending.get("alive")
+        live = pending.get("live")
         grads, aux = pending.get("grads"), pending["aux"]
         new_cstates = pending["cstates"]
 
         new_state = dict(state)
+        if "fault_state" in pending:
+            new_state["faults"] = pending["fault_state"]
         if codec.stateful:
-            new_state["ef"] = state["ef"].at[idx].set(new_cstates["ef"])
+            ef_rows = new_cstates["ef"]
+            if alive is not None:
+                # a dropped client's EF residual never made it back either
+                ef_rows = faults.where_rows(alive, ef_rows,
+                                            state["ef"][idx])
+            new_state["ef"] = state["ef"].at[idx].set(ef_rows)
             if self.mesh is not None and \
                     state["ef"].shape[0] % self.n_devices == 0:
                 new_state["ef"] = jax.lax.with_sharding_constraint(
@@ -401,28 +504,36 @@ class Simulator:
                 if use_wire else grads
         ctx = api.RoundCtx(task=self.task, mc=mc, fl=fl, r=r, idx=idx,
                            sizes=sizes, aux=aux, grads=dense,
-                           weights=weights, invp=pending.get("invp"))
+                           weights=weights, invp=pending.get("invp"),
+                           alive=alive)
 
         # per-client state write-back at the cohort indices (spec-driven);
         # the method may transform the cohort slice first (pFedSim's
-        # similarity mixing of the uploaded heads)
+        # similarity mixing of the uploaded heads); dropped clients keep
+        # their previous rows (they never reported — fed.faults §9)
         if method.cohort_state_update is not None:
             new_cstates = method.cohort_state_update(ctx, new_cstates)
         new_state = api.scatter_cohort_states(self._fields, new_state, idx,
-                                              new_cstates)
+                                              new_cstates, alive=alive)
 
-        # the fused flat-buffer/codec aggregation (Eq. 10-12 with the
-        # method's beta and the sampler's effective counts — §8.2 keeps the
-        # estimator unbiased under non-uniform selection); the sharded path
-        # already reduced inside shard_map with the same weights
+        # the configured aggregation strategy (fed.aggregators §9) over the
+        # Eq. 10-12 effective counts — sampler- and dropout-adjusted, §8.2
+        # keeps the estimator unbiased under non-uniform selection/honest
+        # dropout; the sharded path already reduced inside shard_map with
+        # the same weights ("mean" is the historical fused path verbatim)
         if method.needs_dense_grads:
             agg = None
-        elif "agg_vec" in pending:        # sharded path precomputed Eq.10-12
+        elif "agg_vec" in pending:        # sharded path already reduced
             agg = (unravel(pending["agg_vec"], self._grad_spec),
                    pending["agg_norm"])
         else:
-            agg = M._aggregate(grads, weights, method.beta(mc),
-                               codec if use_wire else None, self._grad_spec)
+            agg = aggregators.aggregate_stack(
+                self.agg, self._agg_opts, grads, weights, method.beta(mc),
+                codec if use_wire else None, self._grad_spec,
+                use_pallas=self._use_pallas)
+        if agg is not None and live is not None:
+            # all-dropped guard: nobody reported -> zero update, not NaN
+            agg = (jax.tree.map(lambda g: g * live, agg[0]), agg[1] * live)
 
         params, new_state, diag = method.server_update(ctx, params, agg,
                                                        new_state)
@@ -431,8 +542,15 @@ class Simulator:
         # total uploaded bytes this round: gradient wire + auxiliary uploads
         # (FedNCV's 4 scalars, SCAFFOLD's delta_c, pFedSim's head vectors —
         # aux leaves already carry the cohort dim, so tree_bytes covers all)
-        diag["bytes_up"] = jnp.float32(
-            fl.cohort * codec.bytes_per_client() + tree_bytes(aux))
+        if alive is None:
+            diag["bytes_up"] = jnp.float32(
+                fl.cohort * codec.bytes_per_client() + tree_bytes(aux))
+        else:
+            # dropped clients uploaded nothing — report honest wire bytes
+            diag["bytes_up"] = jnp.sum(alive) \
+                * jnp.float32(codec.bytes_per_client()) \
+                + jnp.float32(tree_bytes(aux))
+            diag["live"] = jnp.sum(alive)
         return params, new_state, diag
 
     def _round_core(self, params, state, key, r):

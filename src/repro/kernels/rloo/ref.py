@@ -27,7 +27,10 @@ def ncv_aggregate_ref(g_flat, n_samples, beta=1.0):
     n = jnp.sum(n_samples)
     p = n_samples / n
     gbar_w = jnp.sum(p[:, None] * g, axis=0, keepdims=True)
-    c = (n * gbar_w - n_samples[:, None] * g) / (n - n_samples)[:, None]
+    d = (n - n_samples)[:, None]
+    # Lone-reporter guard (see ncv_coefficients): d = 0 has no LOO network;
+    # drop the correction there instead of producing 0 * inf = NaN.
+    c = jnp.where(d > 0, (n * gbar_w - n_samples[:, None] * g) / d, 0.0)
     gprime = g - beta * c
     agg = jnp.sum(p[:, None] * gprime, axis=0)
     return agg, jnp.sum(agg * agg)

@@ -140,13 +140,22 @@ def ncv_coefficients(n_samples, beta):
     appended to make the cohort divisible by the device count contribute
     nothing to the estimator and nothing to the global stats n and
     sum_v n_v/(n - n_v).
+
+    Degenerate lone-reporter rule (DESIGN.md §9): a client carrying *all*
+    the mass (n_u = n, every peer at zero — only reachable under fault
+    injection) has no leave-one-out network, so its correction terms are
+    dropped (the 1/(n - n_u) ratios are where-guarded to 0) and the
+    estimator degrades to the plain weighted mean instead of 0 * inf = NaN.
+    The guard selects the identical expression whenever every denominator
+    is positive, so all honest paths are bit-unchanged.
     """
     n_samples = jnp.asarray(n_samples, jnp.float32)
     n = jnp.sum(n_samples)
     p = n_samples / n
     beta = jnp.asarray(beta, jnp.float32)
-    a0 = 1.0 - beta * jnp.sum(p * n / (n - n_samples))
-    return a0 * p + beta * p * n_samples / (n - n_samples)
+    d = n - n_samples
+    a0 = 1.0 - beta * jnp.sum(p * jnp.where(d > 0, n / d, 0.0))
+    return a0 * p + beta * p * jnp.where(d > 0, n_samples / d, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the robust-aggregation kernels.
+
+Like `kernels/rloo/ref.py`, these double as the production CPU fallbacks:
+`repro.fed.aggregators` dispatches here when the backend is not a TPU.
+
+The sort- and the rank-based formulations compute the same thing: with a
+stable total order on the valid rows of a coordinate (ties broken by row
+index), "the sum of the values whose rank lies in [lo, hi]" equals "the
+sum of sorted positions lo..hi" — ranks are a permutation of 0..m_v-1, so
+the multiset of values inside the band is identical either way.  The
+oracle sorts (cheap and available under XLA); the Pallas kernel counts
+ranks pairwise (Mosaic has no sort primitive) — tests/test_faults.py
+pins them to each other and to a numpy sort.
+"""
+import jax.numpy as jnp
+
+
+def rank_band_mean_ref(g_flat, alive, lo, hi):
+    """Mean of the order-statistic band [lo, hi] per coordinate, over the
+    valid rows only.
+
+    g_flat: (M, N) f32 cohort stack; alive: (M,) validity mask (> 0 keeps
+    the row: dead cohort slots, padding rows); lo, hi: scalar f32 ranks
+    into the *valid* rows' ascending order, inclusive.  Returns
+    (band_mean (N,), ||band_mean||^2).
+
+    Invalid rows are pushed past every finite value before the sort, so
+    positions >= m_valid never land inside a band with hi <= m_valid - 1.
+    hi < lo (possible only for m_valid = 0) yields zeros, not NaN.
+    """
+    g = g_flat.astype(jnp.float32)
+    keep = jnp.asarray(alive) > 0
+    gs = jnp.sort(jnp.where(keep[:, None], g, jnp.inf), axis=0)
+    pos = jnp.arange(g.shape[0], dtype=jnp.float32)[:, None]
+    inc = (pos >= lo) & (pos <= hi)
+    cnt = jnp.maximum(hi - lo + 1.0, 1.0)
+    band = jnp.sum(jnp.where(inc, gs, 0.0), axis=0) / cnt
+    return band, jnp.sum(band * band)
+
+
+def masked_median_1d(x, mask):
+    """Median of x[mask] for a 1-D x — 0.0 when the mask is empty.
+
+    Used for the norm-clipping aggregator's threshold: the median upload
+    norm over the reporting clients is a robust scale estimate (a minority
+    of inflated norms cannot drag it)."""
+    x = jnp.asarray(x, jnp.float32)
+    keep = jnp.asarray(mask) > 0
+    m_v = jnp.sum(keep.astype(jnp.float32))
+    xs = jnp.sort(jnp.where(keep, x, jnp.inf))
+    safe = jnp.maximum(m_v, 1.0)
+    lo = jnp.floor((safe - 1.0) / 2.0).astype(jnp.int32)
+    hi = jnp.floor(safe / 2.0).astype(jnp.int32)
+    med = 0.5 * (xs[lo] + xs[hi])
+    return jnp.where(m_v > 0, med, 0.0)

@@ -1,0 +1,700 @@
+"""Fault injection + robust server aggregation (fed/faults.py,
+fed/aggregators.py, DESIGN.md §9): registries and FLConfig validation, the
+rank-band kernel vs. its oracle vs. numpy, Horvitz-Thompson unbiasedness
+under honest dropout (with the unweighted negative control), bit-identity
+of the no-fault/mean path, end-to-end exclusion of dropped clients (state
+scatter gating, all-dropped no-op rounds, async pending carry), Byzantine
+resistance of the robust aggregators, and mesh/checkpoint composition.
+
+The standing contracts:
+
+* `fault="none"` + `aggregator="mean"` keeps every trajectory bit-identical
+  to the pre-registry simulator (no fault machinery enters the round); a
+  dropout model with rate 0 is numerically the same round.
+* Honest dropout is an inclusion-probability event: the plan's
+  `invp = alive/s` factor keeps the self-normalized estimator unbiased
+  under *heterogeneous* rates, and removing it (`drop_reweight=False`)
+  is measurably biased.
+* A dropped client is excluded end to end — weights, per-client state
+  scatter, uploaded-bytes accounting — and an all-dropped round is a
+  finite no-op, not a NaN.
+* Byzantine uploads are never reweighted (the server cannot identify
+  them); `trimmed_mean`/`median`/`norm_clip` bound their influence where
+  `mean` is owned by a single scaled upload.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import federated_splits
+from repro.fed import (FLConfig, Simulator, Task, aggregators, faults,
+                       get_aggregator, get_fault, get_sampler,
+                       registered_aggregators, registered_faults)
+from repro.fed.faults import FaultModel
+from repro.kernels.robust.ref import masked_median_1d, rank_band_mean_ref
+from repro.kernels.robust.robust import rank_band_mean
+from repro.kernels.rloo.rloo import ncv_coefficients
+from repro.models import lenet
+
+
+def _maxdiff(a, b):
+    return max((float(jnp.max(jnp.abs(x - y)))
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))),
+               default=0.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    spec, train, test = federated_splits("mnist", n_clients=6, alpha=0.5,
+                                         seed=0, scale=0.1)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    return task, params, train, test
+
+
+def _sim(tiny_setup, fault="none", fault_opts=None, aggregator="mean",
+         agg_opts=None, method="fedncv", codec="identity", sampler="uniform",
+         staleness=0, mesh=None, seed=0, cohort=3, **opts):
+    task, params, train, _ = tiny_setup
+    params = jax.tree.map(jnp.copy, params)   # run_rounds donates buffers
+    kw = dict(ncv_beta=0.0) if method == "fedncv" else {}
+    kw.update(opts)
+    fl = FLConfig.make(method=method, n_clients=6, cohort=cohort, k_micro=3,
+                       micro_batch=4, server_lr=0.5, codec=codec,
+                       staleness=staleness, sampler=sampler, local_epochs=1,
+                       fault=fault, fault_opts=dict(fault_opts or {}),
+                       aggregator=aggregator, agg_opts=dict(agg_opts or {}),
+                       **kw)
+    return Simulator(task, params, train, fl, seed=seed, mesh=mesh)
+
+
+# deterministic fault models for exclusion tests: client id 0 never
+# reports / nobody ever reports
+faults.register_fault(FaultModel(
+    name="_killzero",
+    plan=lambda opts, state, key, idx, m: dict(
+        faults._ones_plan(idx.shape[0]),
+        alive=(idx != 0).astype(jnp.float32),
+        invp=(idx != 0).astype(jnp.float32)),
+    drops=staticmethod(lambda opts: True),
+    description="test model: client id 0 never reports"), overwrite=True)
+
+faults.register_fault(FaultModel(
+    name="_killall",
+    plan=lambda opts, state, key, idx, m: dict(
+        faults._ones_plan(idx.shape[0]),
+        alive=jnp.zeros(idx.shape, jnp.float32),
+        invp=jnp.zeros(idx.shape, jnp.float32)),
+    drops=staticmethod(lambda opts: True),
+    description="test model: nobody ever reports"), overwrite=True)
+
+
+# ----------------------------- registry / config ------------------------------
+
+def test_registries_have_all_strategies():
+    assert {"none", "dropout", "markov", "straggler",
+            "byzantine"} <= set(registered_faults())
+    assert {"mean", "trimmed_mean", "median",
+            "norm_clip"} <= set(registered_aggregators())
+
+
+def test_unknown_names_list_registry():
+    with pytest.raises(KeyError, match="dropout"):
+        get_fault("dorpout")
+    with pytest.raises(KeyError, match="trimmed_mean"):
+        get_aggregator("trimmed")
+
+
+def test_register_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        faults.register_fault(get_fault("dropout"))
+    with pytest.raises(ValueError, match="already registered"):
+        aggregators.register_aggregator(get_aggregator("mean"))
+
+
+def test_resolve_opts_rejects_foreign_options():
+    with pytest.raises(TypeError, match="not used by"):
+        faults.resolve_opts(get_fault("dropout"), dict(byz_frac=0.2))
+    with pytest.raises(TypeError, match="not used by"):
+        aggregators.resolve_opts(get_aggregator("median"),
+                                 dict(trim_frac=0.1))
+
+
+def test_option_validation():
+    with pytest.raises(ValueError, match="drop_rate"):
+        faults.resolve_opts(get_fault("dropout"), dict(drop_rate=1.5))
+    with pytest.raises(ValueError, match="byz_attack"):
+        faults.resolve_opts(get_fault("byzantine"), dict(byz_attack="nuke"))
+    with pytest.raises(ValueError, match="trim_frac"):
+        aggregators.resolve_opts(get_aggregator("trimmed_mean"),
+                                 dict(trim_frac=0.5))
+    with pytest.raises(ValueError, match="clip_mult"):
+        aggregators.resolve_opts(get_aggregator("norm_clip"),
+                                 dict(clip_mult=0.0))
+
+
+def test_make_routes_fault_and_aggregator_options():
+    fl = FLConfig.make(method="fedavg", n_clients=6, cohort=3,
+                       fault="dropout", drop_rate=0.5,
+                       aggregator="trimmed_mean", trim_frac=0.1)
+    assert fl.fault_opts["drop_rate"] == 0.5
+    assert fl.agg_opts["trim_frac"] == 0.1
+    with pytest.raises(TypeError, match="not used by"):
+        FLConfig.make(method="fedavg", fault="dropout", drop_rte=0.5)
+    with pytest.raises(TypeError, match="passed both"):
+        FLConfig.make(method="fedavg", fault="dropout", drop_rate=0.5,
+                      fault_opts=dict(drop_rate=0.5))
+
+
+def test_flconfig_rejects_beta_with_unweighted_aggregator():
+    with pytest.raises(ValueError, match="ncv_beta=0"):
+        FLConfig.make(method="fedncv", n_clients=6, cohort=3, ncv_beta=0.5,
+                      aggregator="trimmed_mean")
+    # beta = 0 composes fine; norm_clip honors beta
+    FLConfig.make(method="fedncv", n_clients=6, cohort=3, ncv_beta=0.0,
+                  aggregator="trimmed_mean")
+    FLConfig.make(method="fedncv", n_clients=6, cohort=3, ncv_beta=0.5,
+                  aggregator="norm_clip")
+
+
+def test_flconfig_rejects_dense_grad_method_with_robust_aggregator():
+    with pytest.raises(ValueError, match="needs_dense_grads"):
+        FLConfig.make(method="fedncv+", n_clients=6, cohort=3,
+                      aggregator="median")
+
+
+# --------------------- rank-band kernel vs oracle vs numpy --------------------
+
+def _np_rank_band(g, alive, lo, hi):
+    g, alive = np.asarray(g), np.asarray(alive)
+    out = np.zeros(g.shape[1], np.float32)
+    for j in range(g.shape[1]):
+        vals = np.sort(g[alive > 0, j])
+        out[j] = vals[int(lo):int(hi) + 1].mean()
+    return out
+
+
+@pytest.mark.parametrize("m,n", [(7, 33), (8, 600)])
+def test_rank_band_kernel_matches_oracle_and_numpy(m, n):
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, (m, n), jnp.float32)
+    alive = (jax.random.uniform(jax.random.fold_in(key, 1), (m,)) > 0.3) \
+        .astype(jnp.float32)
+    alive = alive.at[0].set(1.0)               # at least one valid row
+    m_v = int(alive.sum())
+    for lo, hi in [(0, m_v - 1), (1, max(m_v - 2, 1)),
+                   ((m_v - 1) // 2, m_v - 1 - (m_v - 1) // 2)]:
+        ker, knrm = rank_band_mean(g, alive, float(lo), float(hi),
+                                   interpret=True)
+        ref, rnrm = rank_band_mean_ref(g, alive, float(lo), float(hi))
+        npb = _np_rank_band(g, alive, lo, hi)
+        assert np.allclose(ker, ref, atol=1e-5), (lo, hi)
+        assert np.allclose(ker, npb, atol=1e-5), (lo, hi)
+        assert np.allclose(float(knrm), float(np.sum(npb ** 2)), rtol=1e-4)
+
+
+def test_rank_band_handles_ties():
+    """Repeated values: stable ranks differ between the pairwise-count
+    kernel and the sort oracle, but band *sums* are tie-invariant."""
+    g = jnp.asarray(np.round(np.random.default_rng(0)
+                             .normal(size=(9, 40)) * 2) / 2, jnp.float32)
+    alive = jnp.ones((9,), jnp.float32)
+    ker, _ = rank_band_mean(g, alive, 2.0, 6.0, interpret=True)
+    ref, _ = rank_band_mean_ref(g, alive, 2.0, 6.0)
+    assert np.allclose(ker, ref, atol=1e-5)
+    assert np.allclose(ker, _np_rank_band(g, alive, 2, 6), atol=1e-5)
+
+
+def test_masked_median():
+    x = jnp.asarray([5.0, 1.0, 9.0, 3.0, 7.0])
+    mask = jnp.asarray([1, 1, 0, 1, 1], bool)
+    assert float(masked_median_1d(x, mask)) == \
+        pytest.approx(np.median([5.0, 1.0, 3.0, 7.0]))
+    assert float(masked_median_1d(x, jnp.ones(5, bool))) == \
+        pytest.approx(5.0)
+    assert float(masked_median_1d(x, jnp.zeros(5, bool))) == 0.0
+
+
+# ----------------------- aggregator reductions (units) ------------------------
+
+def _outlier_stack(m=8, n=32, scale=100.0):
+    g = jax.random.normal(jax.random.PRNGKey(0), (m, n), jnp.float32)
+    honest = g[1:].mean(0)
+    g = g.at[0].multiply(scale)                # one Byzantine row
+    return g, honest
+
+
+@pytest.mark.parametrize("agg_name", ["trimmed_mean", "median", "norm_clip"])
+def test_robust_aggregators_resist_outlier_row(agg_name):
+    g, honest = _outlier_stack()
+    w = jnp.ones((g.shape[0],), jnp.float32)
+    agg = get_aggregator(agg_name)
+    opts = aggregators.resolve_opts(agg, {})
+    vec, _ = agg.reduce(opts, g, w, 0.0, None)
+    mean_vec, _ = get_aggregator("mean").reduce({}, g, w, 0.0, None)
+    err_rob = float(jnp.linalg.norm(vec - honest))
+    err_mean = float(jnp.linalg.norm(mean_vec - honest))
+    # the scaled row owns the mean; the robust reductions stay close
+    assert err_mean > 10.0 * err_rob, (agg_name, err_rob, err_mean)
+
+
+def test_mean_reduce_is_ncv_weighted_sum():
+    g = jax.random.normal(jax.random.PRNGKey(1), (5, 17), jnp.float32)
+    w = jnp.asarray([3.0, 1.0, 4.0, 1.0, 5.0])
+    vec, nrm = get_aggregator("mean").reduce({}, g, w, 0.7, None)
+    coef = ncv_coefficients(w, 0.7)
+    ref = (coef[:, None] * g).sum(0)
+    assert np.allclose(vec, ref, atol=1e-6)
+    assert float(nrm) == pytest.approx(float(jnp.sum(ref ** 2)), rel=1e-5)
+
+
+def test_trimmed_mean_ignores_dead_rows():
+    g, _ = _outlier_stack()
+    w = jnp.ones((g.shape[0],), jnp.float32).at[0].set(0.0)  # outlier dead
+    agg = get_aggregator("trimmed_mean")
+    vec, _ = agg.reduce(aggregators.resolve_opts(agg, {}), g, w, 0.0, None)
+    ref = _np_rank_band(g[1:], np.ones(7), 1, 5)   # k = floor(.2*7) = 1
+    assert np.allclose(vec, ref, atol=1e-5)
+
+
+# -------------------- HT unbiasedness under honest dropout --------------------
+# fault-level statistical checks on fixed synthetic gradients, mirroring
+# test_sampling's estimator tests: the self-normalized HT estimator with
+# the plan's alive/s factor must reproduce the full-participation weighted
+# mean over (selection x dropout) randomness; the unweighted survivors
+# (`drop_reweight=False`) under heterogeneous rates must NOT.
+
+M_STAT, C_STAT, T_STAT = 24, 8, 4000
+
+
+def _stat_problem():
+    g = jax.random.normal(jax.random.PRNGKey(42), (M_STAT, 5)) \
+        + jnp.arange(M_STAT)[:, None] / 8.0
+    n = jnp.asarray(np.random.default_rng(0).integers(5, 40, M_STAT),
+                    jnp.float32)
+    full = (n[:, None] * g).sum(0) / n.sum()
+    return g, n, full
+
+
+def _fault_estimate(fault, fopts):
+    g, n, full = _stat_problem()
+    fm = get_fault(fault)
+    opts = faults.resolve_opts(fm, fopts)
+    smp = get_sampler("uniform")
+    state0 = fm.init_state(opts, M_STAT) if fm.init_state else None
+
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        idx, _ = smp.draw({}, None, k1, M_STAT, C_STAT)
+        state = fm.step(opts, state0, k3) if fm.step else state0
+        plan = fm.plan(opts, state, k2, idx, M_STAT)
+        w_eff = n[idx] * plan["invp"]
+        live = (jnp.sum(w_eff) > 0).astype(jnp.float32)
+        w = ncv_coefficients(jnp.where(live > 0, w_eff,
+                                       jnp.ones_like(w_eff)), 0.0)
+        return live * (w[:, None] * g[idx]).sum(0), live
+
+    ests, lives = jax.vmap(one)(
+        jax.random.split(jax.random.PRNGKey(7), T_STAT))
+    est = ests.sum(0) / jnp.maximum(lives.sum(), 1.0)
+    return float(jnp.linalg.norm(est - full) / jnp.linalg.norm(full))
+
+
+def test_dropout_reweighting_unbiased_with_negative_control():
+    """Heterogeneous dropout (rates spread over [0.07, 0.63] by client id
+    — informative missingness): the alive/(1-rate) factor recovers the
+    full-participation mean up to the O(1/cohort) self-normalization
+    ratio bias (~0.05 here, T-independent); dropping the factor leaves
+    the estimator 3x as biased, toward the low-dropout clients."""
+    err = _fault_estimate("dropout",
+                          dict(drop_rate=0.35, drop_skew=0.8))
+    assert err < 0.07, err
+    err_raw = _fault_estimate("dropout",
+                              dict(drop_rate=0.35, drop_skew=0.8,
+                                   drop_reweight=False))
+    assert err_raw > 0.12, err_raw
+
+
+def test_straggler_reweighting_unbiased():
+    """Skewed exponential latencies: the closed-form survival probability
+    makes the HT factor exact per client."""
+    err = _fault_estimate("straggler",
+                          dict(str_mean=1.5, str_deadline=1.5,
+                               str_skew=0.8))
+    assert err < 0.07, err
+
+
+def test_markov_stationary_reweighting_unbiased():
+    """The chain starts at stationarity, so P(on) = pi exactly at every
+    round and the 1/pi reweighting is exact, not asymptotic."""
+    err = _fault_estimate("markov", dict(mk_fail=0.2, mk_recover=0.6))
+    assert err < 0.05, err
+
+
+# ------------------------------ byzantine plans -------------------------------
+
+def test_byzantine_plan_marks_fixed_prefix():
+    fm = get_fault("byzantine")
+    opts = faults.resolve_opts(fm, dict(byz_frac=0.25, byz_scale=10.0))
+    assert faults.n_byzantine(opts, 12) == 3
+    idx = jnp.asarray([0, 5, 2, 11])
+    plan = fm.plan(opts, None, jax.random.PRNGKey(0), idx, 12)
+    assert np.allclose(plan["gscale"], [10.0, 1.0, 10.0, 1.0])
+    assert np.allclose(plan["alive"], 1.0)     # never dropped/reweighted
+    assert np.allclose(plan["invp"], 1.0)
+    sf = faults.resolve_opts(fm, dict(byz_attack="signflip"))
+    assert np.allclose(fm.plan(sf, None, jax.random.PRNGKey(0), idx,
+                               12)["gscale"], [-1.0, 1.0, -1.0, 1.0])
+    lf = faults.resolve_opts(fm, dict(byz_attack="labelflip"))
+    plan = fm.plan(lf, None, jax.random.PRNGKey(0), idx, 12)
+    assert np.allclose(plan["gscale"], 1.0)
+    assert np.allclose(plan["flip"], [1.0, 0.0, 1.0, 0.0])
+    assert fm.flips(lf) and not fm.corrupts(lf)
+    assert fm.corrupts(sf) and not fm.flips(sf)
+
+
+# --------------------------- simulator integration ----------------------------
+
+def test_zero_rate_dropout_matches_no_fault_exactly(tiny_setup):
+    """drop_rate = 0: every fault wrapper is active but every factor is
+    exactly 1 — the trajectory must equal fault='none' bitwise."""
+    sa = _sim(tiny_setup)
+    sb = _sim(tiny_setup, fault="dropout", fault_opts=dict(drop_rate=0.0))
+    da = sa.run_rounds(3)
+    db = sb.run_rounds(3)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+    assert np.array_equal(np.asarray(da["agg_norm"]),
+                          np.asarray(db["agg_norm"]))
+    assert np.array_equal(np.asarray(da["bytes_up"]),
+                          np.asarray(db["bytes_up"]))
+
+
+def test_dropped_client_state_never_scattered(tiny_setup):
+    """Client id 0 never reports: its FedNCV alpha must stay at the init
+    value while sampled survivors' alphas move (end-to-end exclusion, not
+    just down-weighting)."""
+    sa = _sim(tiny_setup, fault="_killzero", ncv_alpha_lr=0.5, ncv_beta=0.0)
+    sb = _sim(tiny_setup, ncv_alpha_lr=0.5, ncv_beta=0.0)
+    sa.run_rounds(4)
+    sb.run_rounds(4)
+    a_killed = np.asarray(sa._get_state()["alphas"])
+    a_honest = np.asarray(sb._get_state()["alphas"])
+    # with this seed client 0 was sampled (its honest alpha moved) ...
+    assert a_honest[0] != a_killed[0], (a_honest, a_killed)
+    # ... but its killed-run alpha never left the init value
+    assert a_killed[0] == np.asarray(sb.fl.mc.ncv_alpha0, np.float32)
+    # survivors actually trained
+    assert np.any(a_killed[1:] != np.asarray(sb.fl.mc.ncv_alpha0))
+
+
+def test_all_dropped_round_is_finite_noop(tiny_setup):
+    task, params0, train, _ = tiny_setup
+    sim = _sim(tiny_setup, method="fedavg", fault="_killall")
+    diags = sim.run_rounds(2)
+    assert np.asarray(diags["agg_norm"]).tolist() == [0.0, 0.0]
+    assert np.asarray(diags["live"]).tolist() == [0.0, 0.0]
+    assert _maxdiff(sim.params, params0) == 0.0
+
+
+def test_dropout_composes_with_importance_sampler(tiny_setup):
+    """Two stacked HT corrections (selection 1/(Mq) x survival 1/s) ride
+    the same invp product; the round stays finite and the sampler state
+    updates only from surviving clients."""
+    sim = _sim(tiny_setup, sampler="importance", fault="dropout",
+               fault_opts=dict(drop_rate=0.4))
+    diags = sim.run_rounds(3)
+    assert np.isfinite(np.asarray(diags["agg_norm"])).all()
+    assert "sampler" in sim._get_state()
+
+
+def test_byzantine_scale_owns_mean_not_trimmed(tiny_setup):
+    """Full participation with 2 of 6 clients uploading 50x gradients:
+    the mean aggregate's norm explodes, the (2-each-end) trimmed mean's
+    stays at the honest scale."""
+    fopts = dict(byz_frac=0.2, byz_scale=50.0)      # ceil(.2*6) = 2 ids
+
+    def first_norm(**kw):
+        return float(np.asarray(_sim(tiny_setup, method="fedavg", cohort=6,
+                                     **kw).run_rounds(2)["agg_norm"])[0])
+
+    topts = dict(aggregator="trimmed_mean", agg_opts=dict(trim_frac=0.34))
+    n_mean = first_norm(fault="byzantine", fault_opts=fopts)
+    n_mean_h = first_norm()
+    n_trim = first_norm(fault="byzantine", fault_opts=fopts, **topts)
+    n_trim_h = first_norm(**topts)
+    # each aggregator against its own honest run (agg_norm is ||agg||^2):
+    # the attack owns the mean outright; the trimmed band moves only
+    # where a 50x coordinate still lands inside the honest range
+    assert n_mean > 10.0 * n_mean_h, (n_mean, n_mean_h)
+    assert n_trim < 4.0 * n_trim_h, (n_trim, n_trim_h)
+    assert n_mean / n_mean_h > 10.0 * (n_trim / n_trim_h)
+
+
+def test_labelflip_composes_with_codec(tiny_setup):
+    """Label flipping happens before the client pass, so it composes with
+    every wire format; the round stays finite."""
+    sim = _sim(tiny_setup, method="fedavg", fault="byzantine",
+               fault_opts=dict(byz_attack="labelflip"), codec="int8")
+    diags = sim.run_rounds(2)
+    assert np.isfinite(np.asarray(diags["agg_norm"])).all()
+
+
+# ------------------------------- async / mesh ---------------------------------
+
+def test_async_dropped_client_does_not_poison_pending(tiny_setup):
+    """staleness=1 with a permanently-dead client: the dropped slot rides
+    the pending carry as an excluded row — params stay finite and the dead
+    client's alpha stays at init across the pipelined trajectory."""
+    sim = _sim(tiny_setup, fault="_killzero", staleness=1, ncv_alpha_lr=0.5)
+    diags = sim.run_rounds(5)
+    assert np.isfinite(np.asarray(diags["agg_norm"])).all()
+    a = np.asarray(sim._get_state()["alphas"])
+    assert a[0] == np.asarray(sim.fl.mc.ncv_alpha0, np.float32)
+    for x in jax.tree.leaves(sim.params):
+        assert np.isfinite(np.asarray(x)).all()
+
+
+def test_async_all_dropped_rounds_are_noops(tiny_setup):
+    task, params0, train, _ = tiny_setup
+    sim = _sim(tiny_setup, method="fedavg", fault="_killall", staleness=1)
+    sim.run_rounds(3)
+    assert _maxdiff(sim.params, params0) == 0.0
+
+
+def test_async_dropout_chunked_parity(tiny_setup):
+    """Chunked async driving under random dropout follows the one
+    pipelined trajectory (the fault stream is keyed by round index, and
+    the plan rides the pending carry)."""
+    sa = _sim(tiny_setup, fault="dropout", staleness=1)
+    sb = _sim(tiny_setup, fault="dropout", staleness=1)
+    sa.run_rounds(4)
+    sb.run_rounds(2)
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) < 5e-7
+
+
+@pytest.mark.parametrize("agg_name,fault,fopts", [
+    # the full {mean, trimmed_mean} x {none, dropout, byzantine} sweep
+    # (the CI multidevice job's named grid) plus one row each for the
+    # remaining registered aggregators
+    ("mean", "none", {}),
+    ("mean", "dropout", {}),
+    ("mean", "byzantine", dict(byz_scale=25.0)),
+    ("trimmed_mean", "none", {}),
+    ("trimmed_mean", "dropout", {}),
+    ("trimmed_mean", "byzantine", dict(byz_scale=25.0)),
+    ("median", "dropout", dict(drop_rate=0.4)),
+    ("norm_clip", "byzantine", {}),
+])
+def test_mesh_matches_single_device(agg_name, fault, fopts, tiny_setup):
+    """Mesh rounds track single-device rounds across the aggregator x
+    fault grid: the plan is drawn outside the shard_map, robust
+    aggregators without a sharded hook fall back to the gathered dense
+    stack, and mean/norm_clip keep their one-psum paths."""
+    from repro.sharding import cohort_mesh
+    sa = _sim(tiny_setup, method="fedavg", aggregator=agg_name,
+              fault=fault, fault_opts=fopts)
+    sb = _sim(tiny_setup, method="fedavg", aggregator=agg_name,
+              fault=fault, fault_opts=fopts, mesh=cohort_mesh())
+    sa.run_rounds(2)
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) < 1e-5
+
+
+# --------------------------- checkpoint composition ---------------------------
+
+def test_checkpoint_roundtrip_markov_state(tiny_setup, tmp_path):
+    """The Markov availability trace is run state: a restored run
+    continues the exact availability trajectory."""
+    from repro.checkpoint import read_meta, restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(tiny_setup, fault="markov")
+    sa.run_rounds(2)
+    save_sim(ckdir, sa)
+    sa.run_rounds(2)
+    sb = _sim(tiny_setup, fault="markov")
+    meta = read_meta(ckdir)
+    assert meta["fault"] == "markov" and meta["aggregator"] == "mean"
+    meta = restore_sim(ckdir, sb)
+    assert "faults" in meta["state_keys"]
+    sb.run_rounds(2)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+    assert _maxdiff(sa._get_state()["faults"]["on"],
+                    sb._get_state()["faults"]["on"]) == 0.0
+
+
+def test_checkpoint_rejects_fault_and_aggregator_mismatch(tiny_setup,
+                                                          tmp_path):
+    from repro.checkpoint import restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(tiny_setup, fault="dropout", aggregator="median",
+              method="fedavg")
+    sa.run_rounds(1)
+    save_sim(ckdir, sa)
+    with pytest.raises(ValueError, match="dropout"):
+        restore_sim(ckdir, _sim(tiny_setup, aggregator="median",
+                                method="fedavg"))
+    with pytest.raises(ValueError, match="median"):
+        restore_sim(ckdir, _sim(tiny_setup, fault="dropout",
+                                method="fedavg"))
+
+
+def test_checkpoint_rejects_unregistered_strategy_names(tiny_setup,
+                                                        tmp_path):
+    """A checkpoint naming a strategy this build does not register must
+    fail with the roster, not a downstream missing-key error."""
+    from repro import checkpoint as ck
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(tiny_setup, method="fedavg")
+    sa.run_rounds(1)
+    state = sa._get_state()
+    ck.save_step(ckdir, sa.round_idx, dict(params=sa.params, state=state),
+                 dict(round_idx=sa.round_idx, method="fedavg",
+                      codec="identity", sampler="uniform",
+                      aggregator="krum", fault="none",
+                      state_keys=sorted(state)))
+    with pytest.raises(ValueError, match="registered aggregators"):
+        ck.restore_sim(ckdir, _sim(tiny_setup, method="fedavg"))
+
+
+def test_pre_fault_checkpoint_means_no_faults(tiny_setup, tmp_path):
+    """A checkpoint with no fault/aggregator meta (pre-PR-6 layout) is
+    definitionally an honest mean-aggregated run: restoring it into a
+    faulted or robust simulator must fail with the configuration error;
+    restoring into the default simulator works."""
+    from repro import checkpoint as ck
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(tiny_setup, method="fedavg")
+    sa.run_rounds(1)
+    state = sa._get_state()
+    ck.save_step(ckdir, sa.round_idx, dict(params=sa.params, state=state),
+                 dict(round_idx=sa.round_idx, method="fedavg",
+                      codec="identity", sampler="uniform",
+                      state_keys=sorted(state)))
+    with pytest.raises(ValueError, match="fault"):
+        ck.restore_sim(ckdir, _sim(tiny_setup, method="fedavg",
+                                   fault="dropout"))
+    with pytest.raises(ValueError, match="aggregator"):
+        ck.restore_sim(ckdir, _sim(tiny_setup, method="fedavg",
+                                   aggregator="median"))
+    sc = _sim(tiny_setup, method="fedavg")
+    ck.restore_sim(ckdir, sc)
+    assert _maxdiff(sa.params, sc.params) == 0.0
+
+
+# --------------------------- distributed make_round ---------------------------
+
+def test_make_round_rejects_beta_with_unweighted_aggregator():
+    from repro.fed.distributed import make_round
+    from repro.fed.methods import MethodConfig
+    from repro.sharding import cohort_mesh
+    cfg = lenet.LeNetConfig(n_classes=4, image_size=16, channels=1)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b))
+    mc = MethodConfig(name="fedncv", ncv_beta=0.5)
+    with pytest.raises(ValueError, match="ncv_beta=0"):
+        make_round("fedncv", task, cohort_mesh(), mc, server_lr=0.5,
+                   aggregator="trimmed_mean")
+
+
+DIST_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.fed import api
+from repro.fed.distributed import init_distributed_state, make_round
+from repro.fed.methods import MethodConfig, Task
+from repro.models import lenet
+
+mesh = jax.make_mesh((4,), ("data",))
+cfg = lenet.LeNetConfig(n_classes=4, image_size=16, channels=1)
+task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b))
+params = lenet.init(cfg, jax.random.PRNGKey(0))
+
+M, K, B = 4, 3, 8
+key = jax.random.PRNGKey(1)
+batch = dict(images=jax.random.normal(key, (M, K, B, 16, 16, 1)),
+             labels=jax.random.randint(key, (M, K, B), 0, 4))
+n_u = jnp.full((M,), 20.0)          # equal counts
+
+mc = MethodConfig(name="fedavg")
+state = init_distributed_state(api.get_method("fedavg"), params, task, mc, M)
+r_mean = make_round("fedavg", task, mesh, mc, 0.5)
+r_trim = make_round("fedavg", task, mesh, mc, 0.5,
+                    aggregator="trimmed_mean")
+r_med = make_round("fedavg", task, mesh, mc, 0.5, aggregator="median")
+p_mean, _, m1 = r_mean(params, dict(state), batch, n_u, 0)
+p_trim, _, m2 = r_trim(params, dict(state), batch, n_u, 0)
+p_med, _, m3 = r_med(params, dict(state), batch, n_u, 0)
+
+# equal counts, m=4, trim_frac=.2 -> k=0: the trimmed band IS the
+# unweighted mean == the weighted mean -> identical params (f32 order)
+err = max(float(jnp.max(jnp.abs(a - b)))
+          for a, b in zip(jax.tree.leaves(p_mean), jax.tree.leaves(p_trim)))
+print("TRIM_VS_MEAN_ERR", err)
+assert err < 1e-5, err
+# the median differs from the mean but is finite and close on honest data
+assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p_med))
+assert np.isfinite(m3["agg_norm"])
+print("DIST_ROBUST_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_robust_round():
+    SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", DIST_CODE],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert "DIST_ROBUST_OK" in out.stdout, (out.stdout[-1000:],
+                                            out.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# the benchmark perf gate (benchmarks/run.py --compare)
+# ---------------------------------------------------------------------------
+
+def test_bench_compare_perf_gate(tmp_path, monkeypatch):
+    """The --compare gate that guards BENCH_faults.json (and the rest):
+    identical artifacts exit 0, an inflated bytes_up or wall-clock exits
+    1, and a FAST-mode mismatch is skipped rather than false-positived."""
+    import json
+    monkeypatch.syspath_prepend(os.path.join(os.path.dirname(__file__),
+                                             ".."))
+    from benchmarks import run as bench_run
+
+    old = {"bench": "x", "ok": True, "wall_time_s": 10.0, "fast": True,
+           "rows": [{"name": "r",
+                     "fields": ["ident", "bytes_up=100", "note"]}]}
+    olddir = tmp_path / "old"
+    olddir.mkdir()
+    (olddir / "BENCH_x.json").write_text(json.dumps(old))
+    newdir = tmp_path / "new"
+    newdir.mkdir()
+    monkeypatch.chdir(newdir)
+
+    def gate(payload):
+        (newdir / "BENCH_x.json").write_text(json.dumps(payload))
+        with pytest.raises(SystemExit) as e:
+            bench_run.compare(str(olddir))
+        return e.value.code
+
+    assert gate(old) == 0                                  # self-compare
+    assert gate({**old, "rows": [{"name": "r",                # bytes up
+                 "fields": ["ident", "bytes_up=150", "note"]}]}) == 1
+    assert gate({**old, "wall_time_s": 30.0}) == 1         # wall-clock
+    assert gate({**old, "wall_time_s": 30.0,
+                 "fast": False}) == 0                      # protocol skip
+    assert gate({**old, "rows": [{"name": "r",             # renamed row:
+                 "fields": ["other", "bytes_up=900"]}]}) == 0  # noted only
