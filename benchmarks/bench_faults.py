@@ -180,9 +180,49 @@ def dropout_sweep():
                   f"sec={time.time() - t0:.1f}", flush=True)
 
 
+def tracker_overhead_rows(seed=0):
+    """Streaming-telemetry cost on the faulted path (DESIGN.md §10): the
+    tracked build additionally computes the corrupted-cohort fraction and
+    streams the `live` count per round, so this row bounds the tracker
+    cost where its metric surface is widest.  Same protocol as
+    bench_fl.tracker_overhead_rows: warmup chunk, then per-chunk minimum."""
+    import tempfile
+    cfg, task, train, _ = make_setup(seed)
+    chunk, n_chunks = 10, 3
+    spr = {}
+    for tracker in ("none", "jsonl"):
+        t_opts = {"path": os.path.join(tempfile.mkdtemp(), "bench.jsonl")} \
+            if tracker == "jsonl" else {}
+        params = lenet.init(cfg, jax.random.PRNGKey(seed))
+        fl = FLConfig.make(
+            method="fedncv", n_clients=N_CLIENTS, cohort=COHORT,
+            k_micro=4, micro_batch=16, server_lr=0.5, local_lr=0.05,
+            local_epochs=2, fault="dropout",
+            fault_opts=dict(drop_rate=0.2), aggregator="trimmed_mean",
+            tracker=tracker, tracker_opts=t_opts,
+            **METHOD_MC["fedncv"])
+        sim = Simulator(task, params, train, fl, seed=seed)
+        sim.run_rounds(chunk)                      # warmup: compile
+        times = []
+        for _ in range(n_chunks):
+            t0 = time.time()
+            sim.run_rounds(chunk)
+            times.append((time.time() - t0) / chunk)
+        spr[tracker] = min(times)
+        print(f"track_overhead,faulted,fedncv,{tracker},"
+              f"sec_per_round={spr[tracker]:.4f},rounds={chunk * n_chunks}",
+              flush=True)
+    pct = 100.0 * (spr["jsonl"] - spr["none"]) / spr["none"]
+    print(f"track_overhead,faulted,fedncv,jsonl_vs_none,"
+          f"overhead_pct={pct:.2f}", flush=True)
+
+
 def main():
     print(f"# fault-tolerance sweep (DESIGN.md §9; FAST={FAST}): "
           f"M={N_CLIENTS}, Dirichlet alpha=0.1")
+    print("# streaming-telemetry overhead on the faulted path "
+          "(repro.track, DESIGN.md §10)")
+    tracker_overhead_rows()
     print("# (1) per-fault-model training burst at default options")
     fault_model_rows()
     print(f"# (2) accuracy under {BYZ_FRAC:.0%} scaled-gradient clients, "

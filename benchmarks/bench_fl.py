@@ -85,8 +85,49 @@ def run_dataset(name: str, seed=0):
     return rows, curves
 
 
+def tracker_overhead_rows(name="cifar10", seed=0):
+    """Streaming-telemetry cost (DESIGN.md §10): sec_per_round of the same
+    scanned fedncv run with tracker="none" (bit-identical baseline, no
+    callback op) vs tracker="jsonl" (one ordered io_callback + an fsync'd
+    file append per round).  Per-chunk minimum over several timed chunks —
+    the standard noise-robust wall-clock estimator — after a warmup chunk
+    that absorbs compilation.  The committed artifact records overhead_pct;
+    benchmarks/run.py --smoke enforces the < 3% acceptance bar."""
+    import tempfile
+    spec, train, _ = federated_splits(name, n_clients=N_CLIENTS, alpha=0.1,
+                                      seed=seed, scale=0.15)
+    cfg, task = make_task(spec)
+    chunk, n_chunks = 10, 3
+    spr = {}
+    for tracker in ("none", "jsonl"):
+        t_opts = {"path": os.path.join(tempfile.mkdtemp(), "bench.jsonl")} \
+            if tracker == "jsonl" else {}
+        params = lenet.init(cfg, jax.random.PRNGKey(seed))
+        fl = FLConfig.make(method="fedncv", n_clients=N_CLIENTS,
+                           cohort=COHORT, k_micro=4, micro_batch=16,
+                           server_lr=0.5, local_lr=0.05, local_epochs=2,
+                           tracker=tracker, tracker_opts=t_opts,
+                           **METHOD_MC["fedncv"])
+        sim = Simulator(task, params, train, fl, seed=seed)
+        sim.run_rounds(chunk)                      # warmup: compile
+        times = []
+        for _ in range(n_chunks):
+            t0 = time.time()
+            sim.run_rounds(chunk)
+            times.append((time.time() - t0) / chunk)
+        spr[tracker] = min(times)
+        print(f"track_overhead,{name},fedncv,{tracker},"
+              f"sec_per_round={spr[tracker]:.4f},rounds={chunk * n_chunks}",
+              flush=True)
+    pct = 100.0 * (spr["jsonl"] - spr["none"]) / spr["none"]
+    print(f"track_overhead,{name},fedncv,jsonl_vs_none,"
+          f"overhead_pct={pct:.2f}", flush=True)
+
+
 def main():
     print(f"# Table 1 analogue (synthetic data; FAST={FAST})")
+    print("# streaming-telemetry overhead (repro.track, DESIGN.md §10)")
+    tracker_overhead_rows()
     all_curves = {}
     for ds in DATASETS:
         rows, curves = run_dataset(ds)

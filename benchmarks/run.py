@@ -105,6 +105,25 @@ def _check_fl_registry_rows(payload) -> None:
     assert not missing, f"registered methods missing from table1: {missing}"
 
 
+def _check_track_overhead(payload, bar_pct=None) -> None:
+    """The bench must carry the streaming-telemetry overhead comparison
+    (track_overhead rows: tracker="none" vs tracker="jsonl"
+    sec_per_round), and — where a bar is given — the committed
+    overhead_pct must sit under it (the repro.track acceptance criterion:
+    the per-round io_callback + fsync'd append costs < 3% wall-clock)."""
+    pcts = []
+    for r in payload["rows"]:
+        if r["name"] != "track_overhead":
+            continue
+        for f in r["fields"]:
+            if f.startswith("overhead_pct="):
+                pcts.append(float(f.partition("=")[2]))
+    assert pcts, "track_overhead rows missing (none vs jsonl sec_per_round)"
+    if bar_pct is not None:
+        assert all(p < bar_pct for p in pcts), \
+            f"tracker overhead {pcts}% exceeds the {bar_pct}% bar"
+
+
 def _check_sampling_rows(payload) -> None:
     """BENCH_sampling.json must carry rows for every registered cohort
     sampler (the sweep is registry-driven, like the FL table: a sampler
@@ -244,10 +263,12 @@ def smoke() -> None:
             assert isinstance(payload["rows"], list)
             if payload["bench"] == "fl_table1_fig1":
                 _check_fl_registry_rows(payload)
+                _check_track_overhead(payload, bar_pct=3.0)
             if payload["bench"] == "sampling":
                 _check_sampling_rows(payload)
             if payload["bench"] == "faults":
                 _check_faults_rows(payload)
+                _check_track_overhead(payload)
             print(f"smoke:{os.path.basename(path)},ok,"
                   f"{len(payload['rows'])} rows", flush=True)
         except Exception as e:

@@ -9,7 +9,11 @@ the lax.scan driver from the flat-buffer hot path), and the per-round
 `bytes_up` diagnostic shows what each client->server wire format costs:
 the compressed codecs (repro.comm) cut uploaded bytes 2-5x at matching
 accuracy.  `--sampler` swaps the cohort-selection strategy
-(repro.fed.sampling: uniform | importance | similarity).
+(repro.fed.sampling: uniform | importance | similarity).  `--tracker`
+streams each round's diagnostics live while the scan runs (repro.track,
+DESIGN.md §10): `--tracker stdout` prints a line per round from inside
+the dispatch, `--tracker jsonl` appends to `--track-out` (tail it with
+tools/flwatch.py from another terminal).
 
 Expected output (CPU, ~2 minutes; exact numbers vary by jax version but
 pre-test accuracies land around 0.65-0.75, post-personalization around
@@ -26,6 +30,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import track
 from repro.data import federated_splits
 from repro.fed import FLConfig, Simulator, Task, registered_samplers
 from repro.models import lenet
@@ -39,6 +44,11 @@ def main():
                     choices=sorted(registered_samplers()),
                     help="cohort-selection strategy (repro.fed.sampling)")
     ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--tracker", default="none",
+                    choices=sorted(track.registered_trackers()),
+                    help="stream per-round diagnostics (repro.track)")
+    ap.add_argument("--track-out", default="quickstart.jsonl",
+                    help="output path for the jsonl/csv trackers")
     args = ap.parse_args()
 
     spec, train, test = federated_splits("cifar10", n_clients=12, alpha=0.1,
@@ -59,10 +69,16 @@ def main():
         # their registries and validates the typed options of each
         ncv_kw = dict(ncv_alpha0=0.3, ncv_alpha_lr=1e-5, ncv_beta=0.0) \
             if method == "fedncv" else {}
+        # one file per (method, codec) run: each keeps its own monotone
+        # round index, so flwatch --check stays meaningful
+        t_opts = {"path": f"{method}.{codec}.{args.track_out}"} \
+            if args.tracker in ("jsonl", "csv") else {}
         fl = FLConfig.make(method=method, n_clients=12, cohort=6, k_micro=4,
                            micro_batch=16, server_lr=0.5, codec=codec,
                            codec_opts=opts, sampler=args.sampler,
-                           local_lr=0.05, local_epochs=2, **ncv_kw)
+                           local_lr=0.05, local_epochs=2,
+                           tracker=args.tracker, tracker_opts=t_opts,
+                           **ncv_kw)
         sim = Simulator(task, params, train, fl, seed=0)
         diags = sim.run_rounds(args.rounds)   # one dispatch for all rounds
         pre = sim.evaluate(test)

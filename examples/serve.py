@@ -1,35 +1,57 @@
 """Minimal federated-learning *server loop* over the simulator.
 
     PYTHONPATH=src python examples/serve.py [--rounds N] [--fault NAME]
-                                            [--aggregator NAME] [--smoke]
+                                            [--aggregator NAME]
+                                            [--tracker NAME] [--smoke]
 
 This is the quickstart's training loop turned inside out: instead of one
 `run_rounds(N)` scan, the server loop below drives `sim.run_round()` one
-round at a time — the shape a real coordinator has, where each round's
-cohort draw, client pass and robust aggregation happen inside the jitted
-round and the host only sees the per-round scalar tracker line it prints
-(round index, aggregate norm, uploaded bytes, live-client count).  Between
-rounds the host is free to do server-side things a scan cannot: here it
-evaluates every --eval-every rounds and reacts to faulted rounds
+round at a time — the shape a real coordinator has.  Each round's cohort
+draw, client pass and robust aggregation happen inside the jitted round,
+and the per-round diagnostics stream out of it through `repro.track`
+(DESIGN.md §10): the round body itself emits into the configured sink via
+io_callback, so the terminal line you see is written by the stdout
+tracker, not by a hand-rolled print in this loop.  `--tracker jsonl`
+fans out to stdout + an append-per-round jsonl file (`--track-out`) —
+tail it live from a second terminal with `tools/flwatch.py`.
+
+Between rounds the host is free to do server-side things a scan cannot:
+here it evaluates every --eval-every rounds and reacts to faulted rounds
 (DESIGN.md §9 — `--fault dropout` drops clients, `--fault byzantine`
 corrupts them; pair the latter with `--aggregator trimmed_mean` or
-`median` to watch the robust reduction hold the trajectory).
+`median` to watch the robust reduction hold the trajectory; the streamed
+`live` / `corrupt_frac` columns show the fault layer acting per round).
 
 `--smoke` runs a 2-round loop on a tiny split and prints SERVE_SMOKE_OK —
-wired into tests/test_serve.py so this example stops bit-rotting.
+wired into tests/test_serve.py so this example stops bit-rotting, and
+into the CI telemetry job (`--smoke --tracker jsonl`), which asserts the
+jsonl is well-formed.
 """
 import argparse
 
 import jax
 
+from repro import track
 from repro.data import federated_splits
 from repro.fed import (FLConfig, Simulator, Task, registered_aggregators,
                        registered_faults)
 from repro.models import lenet
 
 
+def build_tracker(name: str, path: str):
+    """The serve-loop sink: always a stdout line per round; a file sink
+    (`jsonl` / `csv`) composes WITH stdout so the terminal stays live
+    while the record is written."""
+    stdout = track.make_tracker("stdout")
+    if name == "stdout":
+        return stdout
+    if name in ("jsonl", "csv"):
+        return track.composite(stdout, track.make_tracker(name, path=path))
+    return track.make_tracker(name)
+
+
 def build_sim(n_clients, cohort, fault, fault_opts, aggregator, scale,
-              seed=0):
+              tracker=None, seed=0):
     spec, train, test = federated_splits("cifar10", n_clients=n_clients,
                                          alpha=0.1, seed=seed, scale=scale,
                                          noise=1.2, class_sep=0.8)
@@ -45,25 +67,23 @@ def build_sim(n_clients, cohort, fault, fault_opts, aggregator, scale,
                        local_epochs=1, ncv_beta=0.0,
                        fault=fault, fault_opts=fault_opts,
                        aggregator=aggregator)
-    return Simulator(task, params, train, fl, seed=seed), test
+    return Simulator(task, params, train, fl, seed=seed,
+                     tracker=tracker), test
 
 
 def serve(sim, test, rounds, eval_every):
-    """The server loop: round -> tracker line -> periodic eval."""
+    """The server loop: the jitted round streams its own tracker row; the
+    host only schedules rounds and runs the periodic eval."""
     for _ in range(rounds):
-        diag = sim.run_round()
-        line = (f"round {sim.round_idx:3d}  "
-                f"agg_norm={diag['agg_norm']:9.4f}")
-        if "bytes_up" in diag:
-            line += f"  up={diag['bytes_up'] / 1024:8.1f} KiB"
-        if "live" in diag:
-            line += f"  live={diag['live']:.0f}"
-        print(line, flush=True)
+        sim.run_round()
         if eval_every and sim.round_idx % eval_every == 0:
             acc = sim.evaluate(test)
             print(f"round {sim.round_idx:3d}  eval accuracy {acc:.3f}",
                   flush=True)
-    return sim
+    acc = sim.evaluate(test)
+    sim.tracker.finish(dict(rounds=sim.round_idx,
+                            final_accuracy=round(float(acc), 4)))
+    return acc
 
 
 def main():
@@ -78,14 +98,21 @@ def main():
                     help="dropout rate when --fault dropout")
     ap.add_argument("--aggregator", default="mean",
                     choices=sorted(registered_aggregators()))
+    ap.add_argument("--tracker", default="stdout",
+                    choices=sorted(track.registered_trackers()),
+                    help="streaming sink; jsonl/csv compose with stdout")
+    ap.add_argument("--track-out", default="serve.jsonl",
+                    help="output path for the jsonl/csv sink")
     ap.add_argument("--smoke", action="store_true",
                     help="2 tiny rounds, print SERVE_SMOKE_OK and exit")
     args = ap.parse_args()
 
+    tracker = build_tracker(args.tracker, args.track_out)
     if args.smoke:
         sim, test = build_sim(n_clients=6, cohort=3, fault="dropout",
                               fault_opts=dict(drop_rate=0.3),
-                              aggregator="trimmed_mean", scale=0.05)
+                              aggregator="trimmed_mean", scale=0.05,
+                              tracker=tracker)
         serve(sim, test, rounds=2, eval_every=2)
         print("SERVE_SMOKE_OK", flush=True)
         return
@@ -93,9 +120,9 @@ def main():
     fault_opts = dict(drop_rate=args.drop_rate) \
         if args.fault == "dropout" else {}
     sim, test = build_sim(args.clients, args.cohort, args.fault, fault_opts,
-                          args.aggregator, scale=0.15)
-    serve(sim, test, args.rounds, args.eval_every)
-    print(f"final eval accuracy {sim.evaluate(test):.3f}")
+                          args.aggregator, scale=0.15, tracker=tracker)
+    acc = serve(sim, test, args.rounds, args.eval_every)
+    print(f"final eval accuracy {acc:.3f}")
 
 
 if __name__ == "__main__":

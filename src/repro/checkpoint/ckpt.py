@@ -196,4 +196,9 @@ def restore_sim(directory: str, sim, step: int | None = None):
     sim._set_state(tree["state"])
     sim.round_idx = int(meta.get("round_idx", sim.round_idx))
     sim._pending, sim._valid = None, jnp.float32(0.0)
+    # re-arm the streaming tracker at the restored round: sinks discard
+    # rows the checkpoint never saw (a crash mid-chunk streams ahead of
+    # the last save) and cumulative counters pick up from the last
+    # surviving row, so the jsonl continues with a monotone round index
+    sim._track_resume(sim.round_idx)
     return meta

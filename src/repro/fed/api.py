@@ -48,6 +48,7 @@ import typing as tp
 import jax
 import jax.numpy as jnp
 
+from repro import track
 from repro.core import control_variates as cv
 from repro.fed import aggregators
 from repro.fed import faults
@@ -268,9 +269,10 @@ def with_codec(client_fn, codec):
     def fn(ctx, params, cstate, batches, key):
         k_local, k_enc = jax.random.split(key)
         out = client_fn(ctx, params, cstate, batches, k_local)
-        vec, _ = ravel(out.grad)
-        state = cstate.get("ef") if codec.stateful else None
-        wire, new_state = codec.encode(vec, state, k_enc)
+        with track.scope(track.ENCODE):
+            vec, _ = ravel(out.grad)
+            state = cstate.get("ef") if codec.stateful else None
+            wire, new_state = codec.encode(vec, state, k_enc)
         new_cstate = out.cstate
         if codec.stateful:
             new_cstate = dict(new_cstate, ef=new_state)
@@ -302,6 +304,10 @@ class FLConfig:
     agg_opts: dict = dataclasses.field(default_factory=dict)
     fault: str = "none"               # client fault injection (fed.faults)
     fault_opts: dict = dataclasses.field(default_factory=dict)
+    tracker: str = "none"             # streaming telemetry sink (repro.track)
+    tracker_opts: dict = dataclasses.field(default_factory=dict)
+    track_variance: bool = False      # stream the cohort Var[g] proxy
+    # (one extra reduction + 4 uploaded bytes per client — DESIGN.md §10.3)
     mc: M.MethodConfig = dataclasses.field(
         default_factory=lambda: M.MethodConfig(name="fedncv"))
 
@@ -331,6 +337,8 @@ class FLConfig:
         agg = aggregators.get_aggregator(self.aggregator)
         aggregators.resolve_opts(agg, self.agg_opts)
         faults.resolve_opts(faults.get_fault(self.fault), self.fault_opts)
+        track.resolve_opts(track.get_tracker(self.tracker),
+                           self.tracker_opts)
         if method.needs_dense_grads and self.aggregator != "mean":
             raise ValueError(
                 f"method '{self.method}' consumes the dense per-client "
@@ -352,6 +360,8 @@ class FLConfig:
              sampler: str = "uniform", sampler_opts: dict | None = None,
              aggregator: str = "mean", agg_opts: dict | None = None,
              fault: str = "none", fault_opts: dict | None = None,
+             tracker: str = "none", tracker_opts: dict | None = None,
+             track_variance: bool = False,
              **opts) -> "FLConfig":
         """Validated construction: `method`, `sampler`, `aggregator` and
         `fault` must be registered, and every extra keyword must be an
@@ -373,6 +383,8 @@ class FLConfig:
              "agg_opts"),
             ("fault", fault,
              set(faults.get_fault(fault).options), "fault_opts"),
+            ("tracker", tracker,
+             set(track.get_tracker(tracker).options), "tracker_opts"),
         )
         # only *passed* options can be ambiguous — a latent name collision
         # between strategies the caller never exercises must not make the
@@ -409,6 +421,8 @@ class FLConfig:
                         "sampler_opts")
         a_opts = routed(subsystems[2][2], agg_opts, "aggregator", "agg_opts")
         f_opts = routed(subsystems[3][2], fault_opts, "fault", "fault_opts")
+        t_opts = routed(subsystems[4][2], tracker_opts, "tracker",
+                        "tracker_opts")
         method_opts = {k: v for k, v in opts.items() if k in subsystems[0][2]}
         return cls(method=method, n_clients=n_clients, cohort=cohort,
                    k_micro=k_micro, micro_batch=micro_batch,
@@ -417,6 +431,8 @@ class FLConfig:
                    sampler=sampler, sampler_opts=s_opts,
                    aggregator=aggregator, agg_opts=a_opts,
                    fault=fault, fault_opts=f_opts,
+                   tracker=tracker, tracker_opts=t_opts,
+                   track_variance=track_variance,
                    mc=M.MethodConfig(name=method, **method_opts))
 
 

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import track
 from repro.fed import aggregators, api
 from repro.fed.methods import MethodConfig, Task
 from repro.fed.sharded import shard_map_compat
@@ -60,7 +61,8 @@ def init_distributed_state(method: api.FedMethod, params, task: Task,
 
 def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
                codec=None, seed: int = 0, aggregator: str = "mean",
-               agg_opts: dict | None = None):
+               agg_opts: dict | None = None, tracker=None,
+               tracker_opts: dict | None = None):
     """Build round(params, state, batch, n_samples, r[, seeds]) for any
     registered method (name or FedMethod) with `distributed_ok`.
 
@@ -81,6 +83,18 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
     Returns (params, state, metrics): `agg_norm`, the pmean of every
     scalar client aux statistic as `mean_<name>`, and `bytes_up` (the
     cohort's uploaded gradient-wire bytes) under a codec.
+
+    `tracker` streams the round metrics (repro.track, DESIGN.md §10): a
+    registered sink name or a `Tracker` instance (pass an instance to keep
+    a handle for `finish()`).  The emitting io_callback sits in `round_fn`
+    *outside* the shard_map region, where the metrics are already
+    replicated scalars — callbacks inside shard_map would fire once per
+    shard.  `tracker=None` (default) stages no callback: the round HLO is
+    bit-identical to an untracked build.  One dispatch is one round here
+    (no scan), and the callback result is `track.tether`ed into the
+    returned (params, state), so the row has reached the sink by the time
+    the round's outputs are ready; `jax.effects_barrier()` still fences
+    the last row for callers that never touch the outputs.
 
     `aggregator` selects a registered server reduction (DESIGN.md §9).
     "mean" keeps the Eq. 10-12 one-psum collapse above, bit-identical to
@@ -115,6 +129,14 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
             f"aggregator '{agg.name}' discards the per-client count "
             f"weighting and cannot apply the NCV correction "
             f"(beta={beta}); use ncv_beta=0 or aggregator='mean'")
+    if isinstance(tracker, str):
+        tracker = track.make_tracker(tracker, **(tracker_opts or {}))
+    emit = None
+    if tracker is not None and not isinstance(tracker, track.NullTracker):
+        # unordered: the jit holds shard_map collectives (ordered-token
+        # XLA bug, track.emitter docstring); the callback is pinned to
+        # one device and one dispatch is one round anyway
+        emit = track.emitter(tracker, ordered=False)
     ctx_c = api.MethodCtx(task, mc)
     scatter_keys = tuple(f.cstate_key for f in fields
                          if f.per_client and f.scatter
@@ -147,41 +169,45 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
             ai = ai * mesh.shape[a] + jax.lax.axis_index(a)
         key_c = jax.random.fold_in(jax.random.fold_in(
             jax.random.PRNGKey(seed), r), ai)
-        out = method.client_update(ctx_c, params, cstate, local_batch,
-                                   key_c)
+        with track.scope(track.CLIENT_PASS):
+            out = method.client_update(ctx_c, params, cstate, local_batch,
+                                       key_c)
         msg, new_cstate = out.grad, out.cstate
 
         # ---- wire encode (DESIGN.md §5): before any collective ----
         if use_wire:
-            key_u = jax.random.PRNGKey(extra[0][0])
-            ef_u = new_cstate.get("ef") if stateful else None
-            vec, vspec = ravel(msg)
-            wire, ef_new = codec.encode(vec, ef_u, key_u)
-            msg = unravel(codec.decode(wire), vspec)
+            with track.scope(track.ENCODE):
+                key_u = jax.random.PRNGKey(extra[0][0])
+                ef_u = new_cstate.get("ef") if stateful else None
+                vec, vspec = ravel(msg)
+                wire, ef_new = codec.encode(vec, ef_u, key_u)
+                msg = unravel(codec.decode(wire), vspec)
             if stateful:
                 new_cstate = dict(new_cstate, ef=ef_new)
 
         if agg.fused_wire:
             # ---- Eq. 10-12 collapse: one weighted all-reduce ----
-            n = jax.lax.psum(n_u_local, ca)
-            p_u = n_u_local / n
-            if beta == 0.0:       # plain weighted mean (FedAvg family)
-                w_u = p_u
-            else:
-                t = jax.lax.psum(n_u_local / (n - n_u_local), ca)
-                w_u = (1.0 - beta * t) * p_u \
-                    + beta * p_u * n_u_local / (n - n_u_local)
-            agg_out = jax.tree.map(lambda m: jax.lax.psum(w_u * m, ca),
-                                   msg)
+            with track.scope(track.AGGREGATE):
+                n = jax.lax.psum(n_u_local, ca)
+                p_u = n_u_local / n
+                if beta == 0.0:   # plain weighted mean (FedAvg family)
+                    w_u = p_u
+                else:
+                    t = jax.lax.psum(n_u_local / (n - n_u_local), ca)
+                    w_u = (1.0 - beta * t) * p_u \
+                        + beta * p_u * n_u_local / (n - n_u_local)
+                agg_out = jax.tree.map(
+                    lambda m: jax.lax.psum(w_u * m, ca), msg)
         else:
             # ---- robust reduction: order statistics need the full
             # stack, so all-gather the raveled messages (one
             # parameter-sized collective) and reduce replicated ----
-            vec, vspec = ravel(msg)
-            g_all = jax.lax.all_gather(vec, ca)          # (m, N)
-            n_all = jax.lax.all_gather(n_u_local, ca)    # (m,)
-            avec, _ = agg.reduce(agg_opts, g_all, n_all, beta, None)
-            agg_out = unravel(avec, vspec)
+            with track.scope(track.AGGREGATE):
+                vec, vspec = ravel(msg)
+                g_all = jax.lax.all_gather(vec, ca)          # (m, N)
+                n_all = jax.lax.all_gather(n_u_local, ca)    # (m,)
+                avec, _ = agg.reduce(agg_opts, g_all, n_all, beta, None)
+                agg_out = unravel(avec, vspec)
 
         # restack the per-client outputs (full participation: the
         # write-back outside is a plain restack, no scatter conflicts)
@@ -233,8 +259,9 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
             cstates = method.cohort_state_update(ctx, cstates)
         new_state = api.scatter_cohort_states(fields, new_state, idx,
                                               cstates)
-        params, new_state, diag = method.server_update(
-            ctx, params, (agg, tree_norm_sq(agg)), new_state)
+        with track.scope(track.SERVER_UPDATE):
+            params, new_state, diag = method.server_update(
+                ctx, params, (agg, tree_norm_sq(agg)), new_state)
 
         metrics = {k: v for k, v in diag.items()
                    if getattr(v, "ndim", None) == 0}
@@ -244,6 +271,12 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
         if use_wire:
             metrics["bytes_up"] = jnp.float32(
                 m_total * codec.bytes_per_client())
+        if emit is not None:
+            # outside shard_map: metrics are replicated scalars, so the
+            # callback fires exactly once per round, not once per shard;
+            # tether the callback result into the returned params so the
+            # dispatch cannot retire before the row lands (track.emitter)
+            params = track.tether(params, emit(jnp.int32(r), metrics))
         return params, new_state, metrics
 
     return jax.jit(round_fn)

@@ -55,6 +55,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import comm
+from repro import track
 from repro.fed import aggregators
 from repro.fed import api
 from repro.fed import faults
@@ -63,7 +64,7 @@ from repro.fed import sampling
 from repro.fed import sharded
 from repro.fed.api import FLConfig  # noqa: F401  (re-export: public API)
 from repro.utils.tree_math import (
-    flat_spec, ravel_stack, tree_bytes, unravel,
+    flat_spec, ravel_stack, tree_bytes, tree_norm_sq, unravel,
 )
 
 
@@ -74,12 +75,16 @@ def _tree_where(flag, new, old):
 
 class Simulator:
     def __init__(self, task: M.Task, params, data, fl: FLConfig, seed=0,
-                 mesh=None):
+                 mesh=None, tracker=None):
         """data: dict(images (N,...), labels (N,), client_idx (M, n_max) int32
         padded with -1, client_sizes (M,)).
 
         mesh: optional 1-d device mesh (`sharding.cohort_mesh()`): the
         cohort dimension of the round is shard_map'd over it (DESIGN.md §6).
+
+        tracker: optional `repro.track.Tracker` *instance* overriding
+        `fl.tracker`/`fl.tracker_opts` — for programmatic sinks (a composite
+        built by a server loop, a memory sink a test inspects).
         """
         assert fl.staleness in (0, 1), fl.staleness
         self.task, self.fl = task, fl
@@ -136,6 +141,23 @@ class Simulator:
         self._fm_flips = self._fault_on and self.fm.flips(self._fm_opts)
         self._n_classes = int(np.max(np.asarray(data["labels"]))) + 1 \
             if self._fm_flips else None
+
+        # streaming telemetry (repro.track, DESIGN.md §10): the sink is a
+        # host-side object the jitted round emits into through one ordered
+        # io_callback appended AFTER the server section — always outside
+        # the shard_map region, on already-replicated scalars.  The
+        # default "none" sink wires nothing: no callback op enters the
+        # graph, so an untracked run's trajectory and HLO are unchanged.
+        self.tracker = tracker if tracker is not None \
+            else track.make_tracker(fl.tracker, **fl.tracker_opts)
+        self._track_on = not isinstance(self.tracker, track.NullTracker)
+        # ordered token-threaded emission off-mesh; on a mesh the jit also
+        # holds shard_map collectives, where jax 0.4.x mishandles the
+        # ordered-effect token (track.emitter docstring) — the unordered
+        # callback is pinned to one device and rows carry the round index
+        self._emit = track.emitter(self.tracker, ordered=mesh is None) \
+            if self._track_on else None
+        self._track_var = bool(fl.track_variance)
 
         # method + codec state, built from the declarative state_spec():
         # per-client fields live in (M, ...) buffers gathered/scattered at
@@ -283,6 +305,10 @@ class Simulator:
             client_fn = sampling.with_stats(client_fn,
                                             norm=self.smp.needs_norms,
                                             proj=self._sketch_proj)
+        # telemetry upload (track_variance): ||raw upload||^2 rides aux
+        # like the sampler stats — computed pre-codec, counted in bytes_up
+        if self._track_var:
+            client_fn = track.with_grad_stats(client_fn)
         # non-identity codecs compress the upload at the end of the client fn
         # and the servers aggregate straight off the wire (DESIGN.md §5)
         if self.codec.name != "identity":
@@ -324,6 +350,11 @@ class Simulator:
         if self._fm_drops:
             pending["alive"] = plan["alive"]
             pending["live"] = live
+        # corrupted-cohort fraction for the telemetry stream — only built
+        # when a sink is wired (tracker="none" keeps the graph unchanged)
+        if self._track_on and (self._fm_corrupts or self._fm_flips):
+            bad = (plan["gscale"] != 1.0) | (plan["flip"] > 0)
+            pending["corrupt_frac"] = jnp.mean(bad.astype(jnp.float32))
         if self._fault_on and self.fm.stateful:
             pending["fault_state"] = fstate
         return pending
@@ -356,9 +387,10 @@ class Simulator:
             cstates[faults.FAULT_KEY] = dict(gscale=plan["gscale"],
                                              flip=plan["flip"])
         keys = self._slot_keys(kk, fl.cohort)
-        outs = jax.vmap(
-            lambda cs, b, k: client_fn(ctx, params, cs, b, k)
-        )(cstates, batches, keys)
+        with track.scope(track.CLIENT_PASS):
+            outs = jax.vmap(
+                lambda cs, b, k: client_fn(ctx, params, cs, b, k)
+            )(cstates, batches, keys)
         pending = dict(idx=idx, sizes=sizes, weights=weights,
                        grads=outs.grad, cstates=outs.cstate, aux=outs.aux)
         # reweighting samplers carry the raw 1/(M q_u) factors for the
@@ -411,17 +443,20 @@ class Simulator:
 
         def body(params, data, cstates_l, sel_l, weights_l, keys_l):
             batch = self._gather_batch(data, sel_l)
-            outs = jax.vmap(
-                lambda cs, b, k: client_fn(ctx, params, cs, b, k)
-            )(cstates_l, batch, keys_l)
+            with track.scope(track.CLIENT_PASS):
+                outs = jax.vmap(
+                    lambda cs, b, k: client_fn(ctx, params, cs, b, k)
+                )(cstates_l, batch, keys_l)
             ret = dict(cstates=outs.cstate, aux=outs.aux)
             if agg_path:
                 stack_l = outs.grad
                 if not use_wire:
                     stack_l, _ = ravel_stack(stack_l)
-                ret["agg_vec"], ret["agg_norm"] = self.agg.sharded_reduce(
-                    self._agg_opts, stack_l, weights_l, beta, axis,
-                    codec if use_wire else None, self._use_pallas)
+                with track.scope(track.AGGREGATE):
+                    ret["agg_vec"], ret["agg_norm"] = \
+                        self.agg.sharded_reduce(
+                            self._agg_opts, stack_l, weights_l, beta, axis,
+                            codec if use_wire else None, self._use_pallas)
             else:
                 ret["grads"] = outs.grad
             return ret
@@ -527,16 +562,18 @@ class Simulator:
             agg = (unravel(pending["agg_vec"], self._grad_spec),
                    pending["agg_norm"])
         else:
-            agg = aggregators.aggregate_stack(
-                self.agg, self._agg_opts, grads, weights, method.beta(mc),
-                codec if use_wire else None, self._grad_spec,
-                use_pallas=self._use_pallas)
+            with track.scope(track.AGGREGATE):
+                agg = aggregators.aggregate_stack(
+                    self.agg, self._agg_opts, grads, weights,
+                    method.beta(mc), codec if use_wire else None,
+                    self._grad_spec, use_pallas=self._use_pallas)
         if agg is not None and live is not None:
             # all-dropped guard: nobody reported -> zero update, not NaN
             agg = (jax.tree.map(lambda g: g * live, agg[0]), agg[1] * live)
 
-        params, new_state, diag = method.server_update(ctx, params, agg,
-                                                       new_state)
+        with track.scope(track.SERVER_UPDATE):
+            params, new_state, diag = method.server_update(ctx, params, agg,
+                                                           new_state)
         diag = {k: v for k, v in diag.items()
                 if getattr(v, "ndim", None) == 0}
         # total uploaded bytes this round: gradient wire + auxiliary uploads
@@ -551,20 +588,60 @@ class Simulator:
                 * jnp.float32(codec.bytes_per_client()) \
                 + jnp.float32(tree_bytes(aux))
             diag["live"] = jnp.sum(alive)
+        # tracker-only diagnostics: the fault layer's corrupted fraction
+        # (already computed inside the client section when a tracker is on)
+        # and the cohort gradient-variance proxy Var[g] ~ E_w||g_u||^2 -
+        # ||E_w g_u||^2, the estimator bench_sampling.py plots, promoted
+        # into the round stream behind fl.track_variance (one extra
+        # reduction; the per-client ||g_u||^2 scalar rides aux pre-codec)
+        if "corrupt_frac" in pending:
+            diag["corrupt_frac"] = pending["corrupt_frac"]
+        if self._track_var and track.GNORM_KEY in aux:
+            gns = aux[track.GNORM_KEY]
+            p_w = weights / jnp.maximum(jnp.sum(weights), 1e-30)
+            e2 = jnp.sum(p_w * gns)
+            if agg is not None:
+                # agg_norm is ||sum_u w_u g_u||^2 over normalized weights
+                diag["gvar_proxy"] = jnp.maximum(e2 - agg[1], 0.0)
+            elif dense is not None:
+                gbar = jax.tree.map(
+                    lambda g: jnp.tensordot(p_w, g, axes=1), dense)
+                diag["gvar_proxy"] = jnp.maximum(
+                    e2 - tree_norm_sq(gbar), 0.0)
         return params, new_state, diag
 
     def _round_core(self, params, state, key, r):
         """params, method state, PRNG key, 1-based round number -> updated
-        (params, state, scalar diagnostics).  Pure; jit/scan-able."""
+        (params, state, scalar diagnostics).  Pure; jit/scan-able (the
+        tracker emission is an *ordered* io_callback, so it is legal and
+        stays in-order inside `lax.scan`; with tracker="none" no callback
+        op is staged and the HLO is bit-identical to an untracked build).
+
+        The emitted token is tethered into the carry: without the
+        `track.tether` below, the CPU runtime schedules every callback
+        after the whole scan's compute and the rows burst out at dispatch
+        end instead of streaming one-per-round (see track.emitter)."""
         pending = self._client_section(params, state, key)
-        return self._server_section(params, state, pending, r)
+        params, state, diag = self._server_section(params, state, pending, r)
+        if self._emit is not None:
+            params = track.tether(params, self._emit(r, diag))
+        return params, state, diag
 
     def _round_async_core(self, params, state, pending, valid, key, r):
         """One async pipeline step: issue round r's client passes against
         the current (stale) params while round r-1's server update and
         state refresh complete.  The two halves have no data dependency, so
-        XLA overlaps them; `valid` gates the warmup bubble (round 1 applies
-        no update and reports a zero diagnostics row)."""
+        XLA overlaps them; `valid` gates the warmup bubble.
+
+        Bubble invariant: the pipeline's first step (round 1 of a fresh
+        run, `valid == 0`) has no completed cohort to apply, so the server
+        half runs on all-zero pending buffers.  Its outputs are garbage and
+        must never escape: params/state are `_tree_where`-gated back to
+        their inputs, and **every** diag key is `jnp.where`-zeroed — not
+        dropped — so the diagnostics pytree keeps a static structure across
+        scan iterations and the tracker streams round 1 as an all-zero row
+        with the correct round index (round numbering stays aligned with
+        the sync path; see tests/test_track.py's bubble regression)."""
         new_pending = self._client_section(params, state, key)
         params2, state2, diag = self._server_section(params, state, pending,
                                                      r)
@@ -572,6 +649,8 @@ class Simulator:
         state = _tree_where(valid, state2, state)
         diag = {k: jnp.where(valid > 0, v, jnp.zeros_like(v))
                 for k, v in diag.items()}
+        if self._emit is not None:
+            params = track.tether(params, self._emit(r, diag))
         return params, state, new_pending, jnp.float32(1.0), diag
 
     def _scan_rounds(self, params, state, keys, rs):
@@ -609,10 +688,25 @@ class Simulator:
                                 self._get_state(), self.base_key)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
+    def _track_resume(self, round_idx):
+        """Re-arm the tracker after a checkpoint restore: sinks discard
+        rows past `round_idx` (a crash mid-chunk may have streamed rounds
+        the checkpoint never saw) and the emitter's cumulative counters
+        are restored from the last surviving row, so a resumed run
+        continues the jsonl at the right round index with a continuous
+        `bytes_up_cum`.  Called by `checkpoint.restore_sim`."""
+        if not self._track_on:
+            return
+        last = self.tracker.resume(int(round_idx))
+        if self._emit is not None:
+            self._emit.resume(last)
+
     # ------------------------------------------------------------------
     def run_round(self, key=None):
         if key is None:
             key = jax.random.fold_in(self.base_key, self.round_idx)
+        if self._emit is not None:
+            self._emit.reset()
         self.round_idx += 1
         if self.fl.staleness:
             if self._pending is None:
@@ -627,6 +721,8 @@ class Simulator:
                 jnp.int32(self.round_idx))
         self.params = params
         self._set_state(state)
+        if self._emit is not None:
+            jax.effects_barrier()
         return {k: float(v) for k, v in diag.items()}
 
     def run_rounds(self, n, key=None):
@@ -640,6 +736,8 @@ class Simulator:
         """
         if n <= 0:
             return {}
+        if self._emit is not None:
+            self._emit.reset()
         start = self.round_idx
         if key is None:
             keys = jax.vmap(lambda i: jax.random.fold_in(self.base_key, i))(
@@ -660,6 +758,10 @@ class Simulator:
         self.round_idx += n
         self.params = params
         self._set_state(state)
+        if self._emit is not None:
+            # every per-round callback has run before we hand back control
+            # (io_callback is ordered but asynchronous w.r.t. the host)
+            jax.effects_barrier()
         return {k: np.asarray(v) for k, v in diags.items()}
 
     # ------------------------------------------------------------------

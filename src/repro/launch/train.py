@@ -25,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import track
 from repro.configs.base import ArchConfig
 from repro.models import api
 from repro.sharding import (batch_shardings, cache_shardings,
@@ -90,8 +91,9 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
             return (gsum, s2, loss_sum + loss), None
 
         gsum0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
-        (gsum, s2, loss_sum), _ = jax.lax.scan(
-            body, (gsum0, jnp.float32(0.0), jnp.float32(0.0)), micro)
+        with track.scope(track.CLIENT_PASS):
+            (gsum, s2, loss_sum), _ = jax.lax.scan(
+                body, (gsum0, jnp.float32(0.0), jnp.float32(0.0)), micro)
         return jax.tree.map(lambda g: g / k_micro, gsum), s2, \
             loss_sum / k_micro
 
@@ -108,8 +110,9 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
         else:
             scale = lr
             alpha_new = alpha
-        params = jax.tree.map(
-            lambda p, g: (p - scale * g).astype(p.dtype), params, gbar)
+        with track.scope(track.SERVER_UPDATE):
+            params = jax.tree.map(
+                lambda p, g: (p - scale * g).astype(p.dtype), params, gbar)
         metrics = dict(loss=loss, s1=s1, s2=s2,
                        rloo_var=(s2 - k * s1) / jnp.maximum(k - 1.0, 1.0),
                        alpha=alpha_new)
@@ -127,9 +130,10 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
     if mesh is None:
         def train_step(params, alpha, batch, seed):
             gbar, s2, loss = accum(params, batch)
-            vec, spec = ravel(gbar)
-            wire, _ = codec.encode(vec, None, jax.random.PRNGKey(seed))
-            gbar = unravel(codec.decode(wire), spec)
+            with track.scope(track.ENCODE):
+                vec, spec = ravel(gbar)
+                wire, _ = codec.encode(vec, None, jax.random.PRNGKey(seed))
+                gbar = unravel(codec.decode(wire), spec)
             return ncv_update(params, alpha, gbar, s2, loss)
 
         return train_step
@@ -150,10 +154,12 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
         for a in ca:
             ai = ai * mesh.shape[a] + jax.lax.axis_index(a)
         key = jax.random.fold_in(jax.random.PRNGKey(seed), ai)
-        vec, spec = ravel(gbar)
-        wire, _ = codec.encode(vec, None, key)
-        dec = codec.decode(wire)                      # wire leaves the shard
-        gbar = unravel(jax.lax.psum(dec, ca) / n_shards, spec)
+        with track.scope(track.ENCODE):
+            vec, spec = ravel(gbar)
+            wire, _ = codec.encode(vec, None, key)
+            dec = codec.decode(wire)                  # wire leaves the shard
+        with track.scope(track.AGGREGATE):
+            gbar = unravel(jax.lax.psum(dec, ca) / n_shards, spec)
         return gbar, jax.lax.pmean(s2, ca), jax.lax.pmean(loss, ca)
 
     shard_fn = shard_map_compat(
@@ -211,6 +217,11 @@ def main():
     ap.add_argument("--method", default=None,
                     help="registry method name (fedncv | fedavg)")
     ap.add_argument("--no-ncv", action="store_true")
+    ap.add_argument("--tracker", default="none",
+                    help="streaming sink: " +
+                         " | ".join(track.registered_trackers()))
+    ap.add_argument("--track-out", default="train.jsonl",
+                    help="output path for the jsonl/csv trackers")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -222,6 +233,9 @@ def main():
     step_fn = jax.jit(make_train_step(cfg, k_micro=args.k_micro, lr=args.lr,
                                       ncv=not args.no_ncv,
                                       method=args.method))
+    t_opts = {"path": args.track_out} \
+        if args.tracker in ("jsonl", "csv") else {}
+    tracker = track.make_tracker(args.tracker, **t_opts)
     alpha = jnp.float32(0.25)
     key = jax.random.PRNGKey(1)
     t0 = time.time()
@@ -229,12 +243,16 @@ def main():
         key, sub = jax.random.split(key)
         batch = api.make_batch(cfg, sub, args.batch, args.seq)
         params, alpha, m = step_fn(params, alpha, batch)
+        tracker.log(step, {k: float(v) for k, v in m.items()})
         if step % 10 == 0 or step == args.steps - 1:
             print(f"step {step:4d} loss={float(m['loss']):.4f} "
                   f"alpha={float(m['alpha']):.3f} "
                   f"rloo_var={float(m['rloo_var']):.3e} "
                   f"({(time.time() - t0) / max(step, 1):.2f}s/step)",
                   flush=True)
+    tracker.finish(dict(steps=args.steps,
+                        sec_total=time.time() - t0,
+                        final_loss=float(m["loss"])))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,11 @@
 """examples/serve.py --smoke: the minimal FL-server loop (round -> tracker
 line -> eval) over a fault-injected, robustly-aggregated simulator must run
 end to end in a subprocess and print its sentinel — the example is a user
-entry point, so it gets a bit-rot guard like the library code."""
+entry point, so it gets a bit-rot guard like the library code.  The jsonl
+variant mirrors the CI telemetry job: the streamed record must be
+well-formed (one parseable row per round, strictly monotone index,
+terminal summary), gated by tools/flwatch.py --check."""
+import json
 import os
 import subprocess
 import sys
@@ -12,16 +16,40 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 SRC = os.path.join(ROOT, "src")
 
 
-@pytest.mark.slow
-def test_serve_smoke():
+def _run_smoke(*extra):
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run(
         [sys.executable, os.path.join(ROOT, "examples", "serve.py"),
-         "--smoke"],
+         "--smoke", *extra],
         capture_output=True, text=True, env=env, timeout=420)
     assert out.returncode == 0, (out.stdout[-1000:], out.stderr[-2000:])
     assert "SERVE_SMOKE_OK" in out.stdout, (out.stdout[-1000:],
                                             out.stderr[-2000:])
+    return out
+
+
+@pytest.mark.slow
+def test_serve_smoke():
+    out = _run_smoke()
     # the tracker printed at least one round line with the live-count
     # column (the smoke config injects dropout)
     assert "agg_norm=" in out.stdout and "live=" in out.stdout, out.stdout
+
+
+@pytest.mark.slow
+def test_serve_smoke_jsonl(tmp_path):
+    path = os.path.join(str(tmp_path), "serve.jsonl")
+    out = _run_smoke("--tracker", "jsonl", "--track-out", path)
+    # stdout stays live (jsonl composes WITH the stdout sink)
+    assert "agg_norm=" in out.stdout and "live=" in out.stdout, out.stdout
+    rows = [json.loads(l) for l in open(path)]
+    data, summary = rows[:-1], rows[-1]
+    assert [r["round"] for r in data] == [1, 2]
+    assert all("agg_norm" in r and "live" in r for r in data), data
+    assert summary["summary"]["rounds"] == 2
+    # the CI gate accepts the file
+    gate = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "flwatch.py"),
+         path, "--check", "--expect-rounds", "2"],
+        capture_output=True, text=True, timeout=60)
+    assert gate.returncode == 0, (gate.stdout, gate.stderr)

@@ -1,0 +1,183 @@
+"""Live watcher for repro.track jsonl streams.
+
+    python tools/flwatch.py run.jsonl                 # summary table once
+    python tools/flwatch.py run.jsonl --follow        # re-render as rows land
+    python tools/flwatch.py run.jsonl --check --expect-rounds 20   # CI gate
+
+A `Tracker` jsonl file (repro.track, DESIGN.md §10) holds one JSON object
+per completed round — `{"round": r, "agg_norm": ..., ...}` — flushed the
+moment the jitted round's server update produced it, plus at most one
+terminal `{"summary": ...}` row.  This tool makes a long `run_rounds`
+scan observable from a second terminal: for every metric it renders the
+last value, an EMA, min/max, and a unicode sparkline of the recent
+history.
+
+`--check` is the CI well-formedness gate: every line parses as JSON, every
+data row carries a "round" key with a strictly monotonically increasing
+index, and (with `--expect-rounds N`) exactly N data rows are present.
+Exit code 0 on pass, 1 with a diagnostic on the first violation.
+
+Pure stdlib, no repo imports: runs before any pip install in CI, and
+tails files written by a different process.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+SPARK = "▁▂▃▄▅▆▇█"
+SPARK_WIDTH = 32
+EMA_BETA = 0.9
+
+
+def read_rows(path: str):
+    """(data_rows, summary, bad_lines): tolerant reader for a live file —
+    a partially written last line (no trailing newline yet) is skipped,
+    not an error."""
+    rows, summary, bad = [], None, []
+    with open(path, encoding="utf-8") as f:
+        raw = f.read()
+    lines = raw.split("\n")
+    # a writer mid-append leaves a partial last line; only complete lines
+    # (terminated by \n) are judged
+    complete, tail = lines[:-1], lines[-1]
+    for i, line in enumerate(complete, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError:
+            bad.append((i, line[:80]))
+            continue
+        if "summary" in row:
+            summary = row["summary"]
+        elif "round" in row:
+            rows.append(row)
+        else:
+            bad.append((i, line[:80]))
+    return rows, summary, bad, tail.strip()
+
+
+def sparkline(values, width=SPARK_WIDTH):
+    vals = [v for v in values[-width:] if isinstance(v, (int, float))
+            and math.isfinite(v)]
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    if hi <= lo:
+        return SPARK[0] * len(vals)
+    return "".join(SPARK[min(int((v - lo) / (hi - lo) * (len(SPARK) - 1)),
+                             len(SPARK) - 1)] for v in vals)
+
+
+def ema(values, beta=EMA_BETA):
+    acc = None
+    for v in values:
+        acc = v if acc is None else beta * acc + (1.0 - beta) * v
+    return acc
+
+
+def fmt(v) -> str:
+    if v is None:
+        return "-"
+    a = abs(v)
+    if a != 0.0 and (a >= 1e5 or a < 1e-3):
+        return f"{v:.3e}"
+    return f"{v:.4g}"
+
+
+def render(path: str, rows, summary) -> str:
+    out = [f"{path}  —  {len(rows)} rounds"
+           + (f"  (last: round {rows[-1]['round']})" if rows else "")]
+    if not rows:
+        return "\n".join(out + ["  (no rows yet)"])
+    keys = sorted(k for k in rows[-1] if k != "round"
+                  and isinstance(rows[-1][k], (int, float)))
+    w = max((len(k) for k in keys), default=4)
+    out.append(f"  {'metric':<{w}}  {'last':>10}  {'ema':>10}  "
+               f"{'min':>10}  {'max':>10}  trend")
+    for k in keys:
+        hist = [r[k] for r in rows if isinstance(r.get(k), (int, float))]
+        out.append(f"  {k:<{w}}  {fmt(hist[-1]):>10}  {fmt(ema(hist)):>10}  "
+                   f"{fmt(min(hist)):>10}  {fmt(max(hist)):>10}  "
+                   f"{sparkline(hist)}")
+    if summary is not None:
+        out.append("  summary: " + json.dumps(summary, sort_keys=True))
+    return "\n".join(out)
+
+
+def check(path: str, rows, summary, bad, tail, expect_rounds=None) -> int:
+    """CI gate: 0 = well-formed, 1 = first violation printed to stderr."""
+    def fail(msg):
+        print(f"flwatch: {path}: {msg}", file=sys.stderr)
+        return 1
+
+    if bad:
+        i, snippet = bad[0]
+        return fail(f"line {i} is not a data or summary row: {snippet!r}")
+    if tail:
+        return fail(f"unterminated trailing line: {tail[:80]!r}")
+    prev = 0
+    for r in rows:
+        if not isinstance(r["round"], int):
+            return fail(f"non-integer round index {r['round']!r}")
+        if r["round"] <= prev:
+            return fail(f"round index not strictly increasing: "
+                        f"{prev} -> {r['round']}")
+        prev = r["round"]
+    if expect_rounds is not None and len(rows) != expect_rounds:
+        return fail(f"expected {expect_rounds} data rows, found {len(rows)}")
+    print(f"flwatch: {path}: OK — {len(rows)} rounds, monotone index"
+          + (", summary present" if summary is not None else ""))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="tracker jsonl file to watch")
+    ap.add_argument("--follow", "-f", action="store_true",
+                    help="keep re-rendering as new rounds land (^C to stop)")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="--follow poll seconds")
+    ap.add_argument("--check", action="store_true",
+                    help="well-formedness gate: parse + monotone round index")
+    ap.add_argument("--expect-rounds", type=int, default=None,
+                    help="with --check: require exactly N data rows")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.path):
+        print(f"flwatch: {args.path}: no such file", file=sys.stderr)
+        return 1
+
+    if args.check:
+        rows, summary, bad, tail = read_rows(args.path)
+        return check(args.path, rows, summary, bad, tail,
+                     expect_rounds=args.expect_rounds)
+
+    last = None
+    while True:
+        rows, summary, bad, _ = read_rows(args.path)
+        if bad:
+            for i, snippet in bad:
+                print(f"flwatch: skipping malformed line {i}: {snippet!r}",
+                      file=sys.stderr)
+        if not args.follow:
+            print(render(args.path, rows, summary))
+            return 0
+        state = (len(rows), summary is not None)
+        if state != last:
+            print("\x1b[2J\x1b[H" + render(args.path, rows, summary),
+                  flush=True)
+            last = state
+        if summary is not None:
+            return 0          # terminal row: the run called finish()
+        time.sleep(args.interval)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
