@@ -1,12 +1,24 @@
-"""Roofline report: reads the dry-run JSON artifacts (results/) and prints
-the §Roofline table — three terms, dominant bottleneck, MODEL_FLOPS ratio,
-and a one-line recommendation per (arch x shape) on the single-pod mesh.
+"""Roofline report, two sections:
+
+1. §Roofline dry-run table — reads the dry-run JSON artifacts (results/)
+   and prints three terms, dominant bottleneck, MODEL_FLOPS ratio, and a
+   one-line recommendation per (arch x shape) on the single-pod mesh.
+   Header-only when no dry-run artifacts are committed.
+2. Host-store staging roofline (always measured, DESIGN.md §11.3) — the
+   host<->device transfer term the state store introduces: measured
+   `jax.device_put` bandwidth on THIS machine, and the modeled per-round
+   cohort-slice staging seconds it implies across the Figure-2 M-sweep
+   shapes, against the roofline bound `bytes / bw`.  This is the term the
+   prefetch pipeline must hide for the host store to match device
+   rounds/s; `prefetch_overlap_frac` in the fig2_store rows reports how
+   much of it actually was hidden.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
 
 RESULTS = os.environ.get("DRYRUN_RESULTS", "results")
 
@@ -45,7 +57,47 @@ def load(mesh="16x16"):
     return rows
 
 
+def measure_device_put_bw(mb: int = 64, reps: int = 5) -> float:
+    """Measured host->device staging bandwidth (bytes/s): `device_put` of
+    a contiguous pinned-path numpy buffer, best-of-reps.  On the CPU
+    backend this is the memcpy floor; on accelerators the DMA rate."""
+    import jax
+    import numpy as np
+    buf = np.random.default_rng(0).standard_normal(
+        mb * (1 << 20) // 4).astype(np.float32)
+    jax.block_until_ready(jax.device_put(buf))          # warm the path
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.device_put(buf))
+        best = min(best, time.perf_counter() - t0)
+    return buf.nbytes / best
+
+
+def host_store_roofline():
+    """The measured host<->device term for the Figure-2 M-sweep config:
+    per-round staged bytes = the (cohort, N) state window down + up, plus
+    the microbatch rows; modeled seconds = bytes / measured bandwidth."""
+    bw = measure_device_put_bw()
+    cohort, k, b, feat = 32, 2, 4, 2
+    print("# host-store staging roofline (measured device_put bandwidth "
+          f"{bw / 1e9:.2f} GB/s)")
+    print("# staged bytes/round: state window down+up + microbatch rows; "
+          "hidden iff prefetch_overlap_frac -> 1 (fig2_store rows)")
+    for log2n in (16, 20):
+        n = 1 << log2n
+        window = cohort * n * 4
+        batch = cohort * k * b * (feat * 4 + 4)
+        staged = 2 * window + batch
+        sec = staged / bw
+        print(f"roofline_hostdev,n=2^{log2n},cohort={cohort},"
+              f"device_put_gbps={bw / 1e9:.3f},staged_mb={staged / 1e6:.2f},"
+              f"transfer_s={sec:.5f},rounds_per_s_bound={1.0 / sec:.1f}",
+              flush=True)
+
+
 def main():
+    host_store_roofline()
     rows = load("16x16")
     ok = [r for r in rows if r.get("ok")]
     fail = [r for r in rows if not r.get("ok")]

@@ -37,6 +37,9 @@ METHODS = ["fedncv", "fedrep", "fedper", "pfedsim"]
 ROUNDS = 15 if FAST else 50
 DEVICE_SWEEP = [1, 2, 4, 8]
 SWEEP_ROUNDS = 10 if FAST else 30
+# the host-store M-sweep (to 1e5 in FAST mode, 1e6 in the full protocol)
+STORE_SCALES = [1_000, 10_000, 100_000] if FAST else \
+    [1_000, 10_000, 100_000, 1_000_000]
 
 _SCALING_CODE = """
 import os
@@ -86,6 +89,118 @@ for _ in range(2):                                # best-of-2 (noise floor)
     dt = min(dt, time.time() - t0)
 print(f"SCALING {d} {{dt / {rounds}:.6f}} {{{rounds} / dt:.4f}}")
 """
+
+
+_STORE_CODE = """
+import os
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+import resource, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.fed import store as store_lib
+
+# fedncv+ is the paper's networked-control-variate method with the
+# M x N stale-gradient table h_u — the exact state this sweep scales:
+# every client's control variate is params-shaped, so the device store
+# must materialize an (M, N) f32 table while the host store keeps it in
+# (lazily paged, optionally memmapped) host memory and stages only the
+# (cohort, N) slice per round.
+M, N = {m}, 1 << {log2n}
+COHORT, K, B = 32, 2, 4
+n_max = K * B
+rng = np.random.default_rng(0)
+# per-client shards kept minimal (the swept table is h_u, not the data);
+# client_idx rows address a shared sample pool so the data tier stays
+# O(pool), letting M reach 1e6 inside the CI budget
+pool = 4096
+data = dict(
+    images=rng.standard_normal((pool, 2)).astype(np.float32),
+    labels=np.zeros((pool,), np.int32),
+    client_idx=(np.arange(M * n_max, dtype=np.int32) % pool).reshape(
+        M, n_max),
+    client_sizes=np.full((M,), n_max, np.int32),
+)
+params = dict(w=jnp.zeros((N,), jnp.float32))
+task = Task(loss=lambda p, b: 0.5 * jnp.sum(
+    (p["w"] - jnp.mean(b["images"])) ** 2))
+fl = FLConfig.make(method="fedncv+", n_clients=M, cohort=COHORT,
+                   k_micro=K, micro_batch=B, server_lr=0.1,
+                   local_epochs=1, store="{store}")
+sim = Simulator(task, params, data, fl, seed=0)
+sim.run_rounds(2)                                 # compile + warm
+jax.block_until_ready(sim.params)
+dt = float("inf")
+for _ in range(2):                                # best-of-2 (noise floor)
+    t0 = time.time()
+    sim.run_rounds({rounds})
+    jax.block_until_ready(sim.params)
+    dt = min(dt, time.time() - t0)
+ov = 0.0
+pf = getattr(sim, "_prefetcher", None)
+if pf is not None:
+    ov = pf.overlap_frac()
+print(f"STORE {{dt / {rounds}:.6f}} {{{rounds} / dt:.4f}} "
+      f"{{sim.device_state_bytes()}} {{sim.host_state_bytes()}} "
+      f"{{store_lib.host_mem_peak()}} {{ov:.4f}}")
+"""
+
+
+def modeled_device_bytes(m: int, log2n: int) -> int:
+    """Device-store HBM footprint model for the M-sweep config: the
+    (M, N) f32 h_u table + params/server momentum + the index table."""
+    n = 1 << log2n
+    return m * n * 4 + 3 * n * 4 + m * 8 * 4
+
+
+def run_store_sweep():
+    """Figure-2 M-sweep: rounds/s + memory footprints for the device vs
+    host state store as the client population grows to 1e5 (1e6 full).
+
+    Device rows whose modeled HBM footprint exceeds the budget
+    (BENCH_HBM_GB, default 16 — one accelerator's worth) are emitted as
+    `oom_modeled` without running: on a real accelerator the (M, N)
+    control-variate table simply does not fit, which is the point of the
+    host store.  Host rows always run; `host_mem_peak` is the subprocess
+    peak RSS, so each row is measured in a fresh process."""
+    log2n = 16
+    hbm_gb = float(os.environ.get("BENCH_HBM_GB", "16"))
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    print(f"# store sweep: cohort=32, N=2^{log2n} per-client control "
+          f"variates, rounds={SWEEP_ROUNDS}, modeled HBM budget "
+          f"{hbm_gb:g} GB")
+    base = {}
+    for m in STORE_SCALES:
+        for store in ("device", "host"):
+            dev_bytes = modeled_device_bytes(m, log2n)
+            if store == "device" and dev_bytes > hbm_gb * 1e9:
+                print(f"fig2_store,store=device,clients={m},oom_modeled,"
+                      f"device_state_gb={dev_bytes / 1e9:.2f},"
+                      f"hbm_budget_gb={hbm_gb:g}", flush=True)
+                continue
+            code = _STORE_CODE.format(m=m, log2n=log2n, store=store,
+                                      rounds=SWEEP_ROUNDS)
+            out = subprocess.run([sys.executable, "-c", code],
+                                 capture_output=True, text=True, env=env,
+                                 timeout=2400)
+            line = [ln for ln in out.stdout.splitlines()
+                    if ln.startswith("STORE")]
+            if not line:
+                print(f"fig2_store,store={store},clients={m},FAILED")
+                print(out.stderr[-2000:], file=sys.stderr)
+                continue
+            _, spr, rps, devb, hostb, rss, ov = line[0].split()
+            spr, rps = float(spr), float(rps)
+            if store == "device":
+                base[m] = rps
+            rel = f"{rps / base[m]:.3f}" if base.get(m) else "n/a"
+            print(f"fig2_store,store={store},clients={m},"
+                  f"sec_per_round={spr:.5f},rounds_per_s={rps:.3f},"
+                  f"vs_device={rel},device_state_mb={int(devb) / 1e6:.1f},"
+                  f"host_state_mb={int(hostb) / 1e6:.1f},"
+                  f"host_mem_peak_mb={int(rss) / 1e6:.1f},"
+                  f"prefetch_overlap_frac={float(ov):.3f}", flush=True)
 
 
 def run_device_sweep():
@@ -154,6 +269,7 @@ def main():
         print(f"fig2_drop,{method},pre_drop={drop_pre:+.4f},"
               f"post_drop={drop_post:+.4f}")
     run_device_sweep()
+    run_store_sweep()
     return results
 
 

@@ -13,7 +13,12 @@ accuracy.  `--sampler` swaps the cohort-selection strategy
 streams each round's diagnostics live while the scan runs (repro.track,
 DESIGN.md §10): `--tracker stdout` prints a line per round from inside
 the dispatch, `--tracker jsonl` appends to `--track-out` (tail it with
-tools/flwatch.py from another terminal).
+tools/flwatch.py from another terminal).  `--store host` swaps the
+per-client state store (repro.fed.store, DESIGN.md §11): the (M, ...)
+state tables and the dataset stay in host memory and only each round's
+cohort slice is staged on device, prefetch-overlapped — same trajectory
+(bit-identical per-round driving), different memory home; at M=12 it
+demonstrates the API, at M=10^6 it is the only store that fits.
 
 Expected output (CPU, ~2 minutes; exact numbers vary by jax version but
 pre-test accuracies land around 0.65-0.75, post-personalization around
@@ -32,7 +37,8 @@ import numpy as np
 
 from repro import track
 from repro.data import federated_splits
-from repro.fed import FLConfig, Simulator, Task, registered_samplers
+from repro.fed import (FLConfig, Simulator, Task, registered_samplers,
+                       registered_stores)
 from repro.models import lenet
 
 ROUNDS = 15
@@ -49,6 +55,11 @@ def main():
                     help="stream per-round diagnostics (repro.track)")
     ap.add_argument("--track-out", default="quickstart.jsonl",
                     help="output path for the jsonl/csv trackers")
+    ap.add_argument("--store", default="device",
+                    choices=sorted(registered_stores()),
+                    help="per-client state store (repro.fed.store): device "
+                         "= resident tables, host = host-side tables with "
+                         "prefetched cohort slices")
     args = ap.parse_args()
 
     spec, train, test = federated_splits("cifar10", n_clients=12, alpha=0.1,
@@ -78,7 +89,7 @@ def main():
                            codec_opts=opts, sampler=args.sampler,
                            local_lr=0.05, local_epochs=2,
                            tracker=args.tracker, tracker_opts=t_opts,
-                           **ncv_kw)
+                           store=args.store, **ncv_kw)
         sim = Simulator(task, params, train, fl, seed=0)
         diags = sim.run_rounds(args.rounds)   # one dispatch for all rounds
         pre = sim.evaluate(test)

@@ -121,7 +121,13 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
     is per-method, per-sampler or per-fault-model: anything registered
     through `fed.api`/`fed.sampling`/`fed.faults` checkpoints correctly
     by construction.  The meta records the method/codec/sampler/
-    aggregator/fault names and state keys for restore-time validation.
+    aggregator/fault/store names and state keys for restore-time
+    validation.
+
+    The state store (fed/store.py §11) is transparent here: under
+    `store="host"` the per-client tables are checkpointed from their host
+    (numpy) views with the same flat keys as the device store's arrays,
+    so the on-disk format is store-independent.
     """
     state = sim._get_state()
     tree = dict(params=sim.params, state=state)
@@ -130,6 +136,7 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
                    method=sim.fl.method, codec=sim.fl.codec,
                    sampler=sim.fl.sampler,
                    aggregator=sim.fl.aggregator, fault=sim.fl.fault,
+                   store=sim.fl.store,
                    state_keys=sorted(state)), keep=keep)
 
 
@@ -177,7 +184,11 @@ def restore_sim(directory: str, sim, step: int | None = None):
                               ("codec", sim.fl.codec, sim.fl.codec),
                               ("sampler", sim.fl.sampler, "uniform"),
                               ("aggregator", sim.fl.aggregator, "mean"),
-                              ("fault", sim.fl.fault, "none")):
+                              ("fault", sim.fl.fault, "none"),
+                              # absent store key: checkpoint predates the
+                              # state-store registry, i.e. it was written by
+                              # (and restores as) the device store
+                              ("store", sim.fl.store, "device")):
         have = saved.get(key, absent)
         if have != want:
             raise ValueError(
@@ -196,6 +207,8 @@ def restore_sim(directory: str, sim, step: int | None = None):
     sim._set_state(tree["state"])
     sim.round_idx = int(meta.get("round_idx", sim.round_idx))
     sim._pending, sim._valid = None, jnp.float32(0.0)
+    if getattr(sim, "_host_mode", False):
+        sim._host_async = None      # host pipeline carry is per-run scratch
     # re-arm the streaming tracker at the restored round: sinks discard
     # rows the checkpoint never saw (a crash mid-chunk streams ahead of
     # the last save) and cumulative counters pick up from the last

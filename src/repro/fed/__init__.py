@@ -13,3 +13,6 @@ from repro.fed.sampling import (  # noqa: F401
     CohortSampler, get_sampler, register_sampler, registered_samplers,
 )
 from repro.fed.simulator import Simulator  # noqa: F401
+from repro.fed.store import (  # noqa: F401
+    StateStore, get_store, register_store, registered_stores,
+)

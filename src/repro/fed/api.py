@@ -54,6 +54,7 @@ from repro.fed import aggregators
 from repro.fed import faults
 from repro.fed import methods as M
 from repro.fed import sampling
+from repro.fed import store as store_lib
 from repro.utils.tree_math import tree_axpy, tree_zeros_like
 
 
@@ -306,6 +307,8 @@ class FLConfig:
     fault_opts: dict = dataclasses.field(default_factory=dict)
     tracker: str = "none"             # streaming telemetry sink (repro.track)
     tracker_opts: dict = dataclasses.field(default_factory=dict)
+    store: str = "device"             # per-client state store (fed.store §11)
+    store_opts: dict = dataclasses.field(default_factory=dict)
     track_variance: bool = False      # stream the cohort Var[g] proxy
     # (one extra reduction + 4 uploaded bytes per client — DESIGN.md §10.3)
     mc: M.MethodConfig = dataclasses.field(
@@ -339,6 +342,8 @@ class FLConfig:
         faults.resolve_opts(faults.get_fault(self.fault), self.fault_opts)
         track.resolve_opts(track.get_tracker(self.tracker),
                            self.tracker_opts)
+        store_lib.resolve_opts(store_lib.get_store(self.store),
+                               self.store_opts)
         if method.needs_dense_grads and self.aggregator != "mean":
             raise ValueError(
                 f"method '{self.method}' consumes the dense per-client "
@@ -361,6 +366,7 @@ class FLConfig:
              aggregator: str = "mean", agg_opts: dict | None = None,
              fault: str = "none", fault_opts: dict | None = None,
              tracker: str = "none", tracker_opts: dict | None = None,
+             store: str = "device", store_opts: dict | None = None,
              track_variance: bool = False,
              **opts) -> "FLConfig":
         """Validated construction: `method`, `sampler`, `aggregator` and
@@ -385,6 +391,8 @@ class FLConfig:
              set(faults.get_fault(fault).options), "fault_opts"),
             ("tracker", tracker,
              set(track.get_tracker(tracker).options), "tracker_opts"),
+            ("store", store,
+             set(store_lib.get_store(store).options), "store_opts"),
         )
         # only *passed* options can be ambiguous — a latent name collision
         # between strategies the caller never exercises must not make the
@@ -423,6 +431,7 @@ class FLConfig:
         f_opts = routed(subsystems[3][2], fault_opts, "fault", "fault_opts")
         t_opts = routed(subsystems[4][2], tracker_opts, "tracker",
                         "tracker_opts")
+        st_opts = routed(subsystems[5][2], store_opts, "store", "store_opts")
         method_opts = {k: v for k, v in opts.items() if k in subsystems[0][2]}
         return cls(method=method, n_clients=n_clients, cohort=cohort,
                    k_micro=k_micro, micro_batch=micro_batch,
@@ -432,6 +441,7 @@ class FLConfig:
                    aggregator=aggregator, agg_opts=a_opts,
                    fault=fault, fault_opts=f_opts,
                    tracker=tracker, tracker_opts=t_opts,
+                   store=store, store_opts=st_opts,
                    track_variance=track_variance,
                    mc=M.MethodConfig(name=method, **method_opts))
 

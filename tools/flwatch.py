@@ -33,6 +33,10 @@ SPARK = "▁▂▃▄▅▆▇█"
 SPARK_WIDTH = 32
 EMA_BETA = 0.9
 
+# byte-valued metrics rendered in GiB (label, scale): the host store's
+# peak-RSS telemetry (fed/store.py §11) is unreadable in raw bytes
+DISPLAY_GIB = {"host_mem_peak": "host_mem_peak_gib"}
+
 
 def read_rows(path: str):
     """(data_rows, summary, bad_lines): tolerant reader for a live file —
@@ -98,12 +102,16 @@ def render(path: str, rows, summary) -> str:
         return "\n".join(out + ["  (no rows yet)"])
     keys = sorted(k for k in rows[-1] if k != "round"
                   and isinstance(rows[-1][k], (int, float)))
-    w = max((len(k) for k in keys), default=4)
+    labels = [DISPLAY_GIB.get(k, k) for k in keys]
+    w = max((len(k) for k in labels), default=4)
     out.append(f"  {'metric':<{w}}  {'last':>10}  {'ema':>10}  "
                f"{'min':>10}  {'max':>10}  trend")
-    for k in keys:
+    for k, label in zip(keys, labels):
         hist = [r[k] for r in rows if isinstance(r.get(k), (int, float))]
-        out.append(f"  {k:<{w}}  {fmt(hist[-1]):>10}  {fmt(ema(hist)):>10}  "
+        if k in DISPLAY_GIB:
+            hist = [v / 2**30 for v in hist]
+        out.append(f"  {label:<{w}}  {fmt(hist[-1]):>10}  "
+                   f"{fmt(ema(hist)):>10}  "
                    f"{fmt(min(hist)):>10}  {fmt(max(hist)):>10}  "
                    f"{sparkline(hist)}")
     if summary is not None:
@@ -111,8 +119,15 @@ def render(path: str, rows, summary) -> str:
     return "\n".join(out)
 
 
-def check(path: str, rows, summary, bad, tail, expect_rounds=None) -> int:
-    """CI gate: 0 = well-formed, 1 = first violation printed to stderr."""
+def check(path: str, rows, summary, bad, tail, expect_rounds=None,
+          max_host_mem_gb=None, min_overlap=None) -> int:
+    """CI gate: 0 = well-formed, 1 = first violation printed to stderr.
+
+    `--max-host-mem-gb` bounds every row's host_mem_peak (the host-store
+    memory ceiling must not creep); `--min-overlap` requires the run's
+    best prefetch_overlap_frac to reach the bound (the staging pipeline
+    must actually hide host work — early rounds report 0 while the
+    pipeline fills, so the max over rows is judged, not each row)."""
     def fail(msg):
         print(f"flwatch: {path}: {msg}", file=sys.stderr)
         return 1
@@ -132,6 +147,26 @@ def check(path: str, rows, summary, bad, tail, expect_rounds=None) -> int:
         prev = r["round"]
     if expect_rounds is not None and len(rows) != expect_rounds:
         return fail(f"expected {expect_rounds} data rows, found {len(rows)}")
+    if max_host_mem_gb is not None:
+        peaks = [r["host_mem_peak"] for r in rows
+                 if isinstance(r.get("host_mem_peak"), (int, float))]
+        if not peaks:
+            return fail("--max-host-mem-gb given but no row carries "
+                        "host_mem_peak (not a host-store run?)")
+        worst = max(peaks)
+        if worst > max_host_mem_gb * 2**30:
+            return fail(f"host_mem_peak {worst / 2**30:.2f} GiB exceeds "
+                        f"the {max_host_mem_gb:g} GiB bound")
+    if min_overlap is not None:
+        fracs = [r["prefetch_overlap_frac"] for r in rows
+                 if isinstance(r.get("prefetch_overlap_frac"),
+                               (int, float))]
+        if not fracs:
+            return fail("--min-overlap given but no row carries "
+                        "prefetch_overlap_frac (not a host-store run?)")
+        if max(fracs) < min_overlap:
+            return fail(f"prefetch_overlap_frac peaked at {max(fracs):.3f},"
+                        f" below the {min_overlap:g} bound")
     print(f"flwatch: {path}: OK — {len(rows)} rounds, monotone index"
           + (", summary present" if summary is not None else ""))
     return 0
@@ -148,6 +183,12 @@ def main(argv=None) -> int:
                     help="well-formedness gate: parse + monotone round index")
     ap.add_argument("--expect-rounds", type=int, default=None,
                     help="with --check: require exactly N data rows")
+    ap.add_argument("--max-host-mem-gb", type=float, default=None,
+                    help="with --check: fail if any row's host_mem_peak "
+                         "exceeds this many GiB")
+    ap.add_argument("--min-overlap", type=float, default=None,
+                    help="with --check: fail if prefetch_overlap_frac "
+                         "never reaches this bound")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.path):
@@ -157,7 +198,9 @@ def main(argv=None) -> int:
     if args.check:
         rows, summary, bad, tail = read_rows(args.path)
         return check(args.path, rows, summary, bad, tail,
-                     expect_rounds=args.expect_rounds)
+                     expect_rounds=args.expect_rounds,
+                     max_host_mem_gb=args.max_host_mem_gb,
+                     min_overlap=args.min_overlap)
 
     last = None
     while True:
