@@ -84,16 +84,40 @@ def host_store_roofline():
           f"{bw / 1e9:.2f} GB/s)")
     print("# staged bytes/round: state window down+up + microbatch rows; "
           "hidden iff prefetch_overlap_frac -> 1 (fig2_store rows)")
+    staged_by_n = {}
     for log2n in (16, 20):
         n = 1 << log2n
         window = cohort * n * 4
         batch = cohort * k * b * (feat * 4 + 4)
         staged = 2 * window + batch
+        staged_by_n[log2n] = staged
         sec = staged / bw
         print(f"roofline_hostdev,n=2^{log2n},cohort={cohort},"
               f"device_put_gbps={bw / 1e9:.3f},staged_mb={staged / 1e6:.2f},"
               f"transfer_s={sec:.5f},rounds_per_s_bound={1.0 / sec:.1f}",
               flush=True)
+    depth_k_roofline(bw, staged_by_n)
+
+
+def depth_k_roofline(bw, staged_by_n):
+    """Depth-K overlap window (fed/simulator.py ring, DESIGN.md §12): a
+    cohort issued at round r is applied at round r+K, so its state-window
+    staging may start up to K rounds early — K cohorts' transfers overlap
+    the compute stream and the steady-state staging term drops to
+    `transfer_s / K` per round.  K=0 is the serial (sync) bound; the
+    modeled rows give the throughput ceiling the prefetch pipeline can
+    reach at each depth, against the same measured bandwidth."""
+    print("# depth-K pipeline overlap window: staging amortized over K "
+          "in-flight cohorts (modeled; K=0 = serial sync bound)")
+    for log2n, staged in staged_by_n.items():
+        transfer = staged / bw
+        for depth in (0, 1, 2, 4):
+            eff = transfer / max(depth, 1)
+            print(f"roofline_depthk,n=2^{log2n},k={depth},"
+                  f"overlap_window_rounds={max(depth, 1)},"
+                  f"transfer_s_effective={eff:.5f},"
+                  f"rounds_per_s_bound={1.0 / eff:.1f}",
+                  flush=True)
 
 
 def main():

@@ -1,0 +1,88 @@
+"""Serve-coordinator throughput bench (repro.serve, DESIGN.md §12).
+
+Two registry-driven sweeps on the toy quadratic task:
+
+* ``serve`` rows — rounds/s and deadline_miss_frac vs pipeline depth K
+  and offered load (the queue's check-in rate), under the token_bucket
+  policy: the depth-K ring should raise dispatch throughput (the host
+  loop stops syncing on every round's server half) while the deadline
+  policy keeps the miss fraction bounded as load rises.
+* ``serve_policy`` rows — one row per registered AdmissionPolicy at the
+  reference (K=1, high-load) point, so a registered policy that the
+  bench never exercises fails the smoke gate (`run.py --smoke`).
+
+``BENCH_FAST=1`` (default) keeps the protocol tiny for CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+
+M, N_MAX, POOL = 24, 8, 128
+
+
+def _coordinator(k, checkin_rate, policy="token_bucket", seed=0):
+    from repro.fed import Simulator, Task
+    from repro.serve import ClientQueue, Coordinator, make_serve_config
+    rng = np.random.default_rng(0)
+    data = dict(
+        images=rng.standard_normal((POOL, 4)).astype(np.float32),
+        labels=rng.integers(0, 2, POOL).astype(np.int32),
+        client_idx=rng.integers(0, POOL, (M, N_MAX)).astype(np.int32),
+        client_sizes=np.full((M,), N_MAX, np.int32))
+    task = Task(loss=lambda p, b: jnp.mean(
+        (b["images"] @ p["w"] - b["labels"]) ** 2))
+    params = dict(w=jnp.zeros((4,), jnp.float32))
+    fl = make_serve_config(method="fedncv", n_clients=M, cohort=6,
+                           k_micro=2, micro_batch=4, server_lr=0.5,
+                           staleness=k, local_epochs=1)
+    sim = Simulator(task, params, data, fl, seed=seed)
+    queue = ClientQueue(M, avail="markov", checkin_rate=checkin_rate,
+                        lat_mean=0.6, lat_skew=0.5, seed=seed)
+    return Coordinator(sim, queue, policy=policy, deadline_s=1.0)
+
+
+def _drive(coord, rounds):
+    """Serve `rounds` rounds; returns (rounds_per_s, mean miss frac,
+    admit rate) over the timed (post-warmup) window."""
+    coord.step()                              # compile + warm the ring
+    miss, admitted, checkins = [], 0.0, 0.0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        out = coord.step()
+        miss.append(out["deadline_miss_frac"])
+        admitted += out["admitted"]
+        checkins += out["checkins"]
+    wall = time.perf_counter() - t0
+    return (rounds / wall, float(np.mean(miss)),
+            admitted / max(checkins, 1.0))
+
+
+def main():
+    from repro.serve import registered_policies
+    rounds = 10 if FAST else 60
+    print("# serve coordinator: rounds/s + deadline_miss_frac vs pipeline "
+          "depth K and offered load (token_bucket, toy task)")
+    for k in (0, 1, 2):
+        for load in (0.3, 0.9):
+            coord = _coordinator(k, load)
+            rps, miss, adm = _drive(coord, rounds)
+            print(f"serve,k={k},load={load:g},rounds_per_s={rps:.2f},"
+                  f"deadline_miss_frac={miss:.3f},admit_rate={adm:.3f}",
+                  flush=True)
+    print("# one row per registered admission policy (K=1, load 0.9)")
+    for name in registered_policies():
+        coord = _coordinator(1, 0.9, policy=name)
+        rps, miss, adm = _drive(coord, rounds)
+        print(f"serve_policy,{name},rounds_per_s={rps:.2f},"
+              f"deadline_miss_frac={miss:.3f},admit_rate={adm:.3f}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ BENCHES = [
     ("comm", "benchmarks.bench_comm"),             # codec accuracy-vs-bytes
     ("sampling", "benchmarks.bench_sampling"),     # cohort samplers (§8)
     ("faults", "benchmarks.bench_faults"),         # fault tolerance (§9)
+    ("serve", "benchmarks.bench_serve"),           # round service (§12)
 ]
 
 # benches whose BENCH_<name>.json must exist for the smoke gate to pass
@@ -37,7 +38,7 @@ BENCHES = [
 # host<->device staging term (fed/store.py §11) — both registry/row
 # checked below, so they must be present, not merely well-formed.
 REQUIRED_BENCHES = {"fl_table1_fig1", "sampling", "faults",
-                    "scalability_fig2", "roofline"}
+                    "scalability_fig2", "roofline", "serve"}
 
 # per-row numeric fields the --compare perf gate guards: relative slack
 # allowed before the diff counts as a regression, and the direction that
@@ -149,7 +150,9 @@ def _check_sampling_rows(payload) -> None:
     from repro.fed import registered_samplers
     seen = {r["fields"][0] for r in payload["rows"]
             if r["name"] == "sampling_var" and r["fields"]}
-    missing = sorted(set(registered_samplers()) - seen)
+    # the "external" shim has no standalone draw — a coordinator writes
+    # its tables (repro.serve); it is exercised by BENCH_serve instead
+    missing = sorted(set(registered_samplers()) - seen - {"external"})
     assert not missing, f"registered samplers missing from bench: {missing}"
 
 
@@ -163,7 +166,9 @@ def _check_faults_rows(payload) -> None:
     from repro.fed.faults import registered_faults
     seen_f = {r["fields"][0] for r in payload["rows"]
               if r["name"] == "faults_model" and r["fields"]}
-    missing = sorted(set(registered_faults()) - seen_f)
+    # the "external" shim's plan is host-written (repro.serve) — it has
+    # no standalone injection sweep; BENCH_serve exercises it
+    missing = sorted(set(registered_faults()) - seen_f - {"external"})
     assert not missing, f"registered faults missing from bench: {missing}"
     seen_a = {r["fields"][1] for r in payload["rows"]
               if r["name"] == "faults_byz" and len(r["fields"]) >= 2}
@@ -193,10 +198,44 @@ def _check_store_rows(payload) -> None:
 def _check_roofline_rows(payload) -> None:
     """BENCH_roofline.json must carry at least one measured data row (the
     host<->device staging term) — a header-only artifact means the bench
-    degenerated back to reading dry-run JSONs that are not committed."""
+    degenerated back to reading dry-run JSONs that are not committed —
+    plus the depth-K overlap-window modeled rows (fed/simulator.py ring):
+    K=0 (serial sync bound) and at least one pipelined depth."""
     rows = [r for r in payload["rows"] if r["name"] == "roofline_hostdev"]
     assert rows, ("no roofline_hostdev data rows — the measured "
                   "host<->device staging section did not run")
+    depths = set()
+    for r in payload["rows"]:
+        if r["name"] != "roofline_depthk":
+            continue
+        for f in r["fields"]:
+            if f.startswith("k="):
+                depths.add(int(float(f.partition("=")[2])))
+    assert 0 in depths and any(d >= 1 for d in depths), (
+        "roofline_depthk rows must cover K=0 (serial bound) and a "
+        f"pipelined depth; found {sorted(depths)}")
+
+
+def _check_serve_rows(payload) -> None:
+    """BENCH_serve.json must carry the (K x load) throughput grid
+    including the K=0 sync baseline, and a serve_policy row for every
+    registered AdmissionPolicy (registry-driven, like the FL table)."""
+    from repro.serve import registered_policies
+    depths = set()
+    for r in payload["rows"]:
+        if r["name"] != "serve":
+            continue
+        for f in r["fields"]:
+            if f.startswith("k="):
+                depths.add(int(float(f.partition("=")[2])))
+    assert 0 in depths and any(d >= 1 for d in depths), (
+        f"serve rows must cover K=0 and a pipelined depth; "
+        f"found {sorted(depths)}")
+    seen = {r["fields"][0] for r in payload["rows"]
+            if r["name"] == "serve_policy" and r["fields"]}
+    missing = sorted(set(registered_policies()) - seen)
+    assert not missing, (f"registered admission policies missing from "
+                         f"serve bench: {missing}")
 
 
 def _row_index(payload):
@@ -342,6 +381,8 @@ def smoke() -> None:
                 _check_store_rows(payload)
             if payload["bench"] == "roofline":
                 _check_roofline_rows(payload)
+            if payload["bench"] == "serve":
+                _check_serve_rows(payload)
             print(f"smoke:{os.path.basename(path)},ok,"
                   f"{len(payload['rows'])} rows", flush=True)
         except Exception as e:

@@ -1,41 +1,54 @@
-"""Minimal federated-learning *server loop* over the simulator.
+"""Production-shaped federated-learning *round service* (DESIGN.md §12).
 
-    PYTHONPATH=src python examples/serve.py [--rounds N] [--fault NAME]
-                                            [--aggregator NAME]
-                                            [--tracker NAME] [--smoke]
+    PYTHONPATH=src python examples/serve.py [--rounds N] [--staleness K]
+        [--policy NAME] [--fault NAME] [--tracker NAME]
+        [--ckpt-dir DIR --ckpt-every N] [--resume] [--smoke]
 
-This is the quickstart's training loop turned inside out: instead of one
-`run_rounds(N)` scan, the server loop below drives `sim.run_round()` one
-round at a time — the shape a real coordinator has.  Each round's cohort
-draw, client pass and robust aggregation happen inside the jitted round,
-and the per-round diagnostics stream out of it through `repro.track`
-(DESIGN.md §10): the round body itself emits into the configured sink via
-io_callback, so the terminal line you see is written by the stdout
-tracker, not by a hand-rolled print in this loop.  `--tracker jsonl`
-fans out to stdout + an append-per-round jsonl file (`--track-out`) —
-tail it live from a second terminal with `tools/flwatch.py`.
+This is the quickstart's training loop turned into a server: a
+`serve.Coordinator` owns a `ClientQueue` of simulated check-ins
+(availability driven by the registered fault model named by `--fault`),
+an `AdmissionPolicy` (`--policy`) sizes each round's cohort, and a
+deadline policy cuts stragglers at `--deadline` seconds — with every
+admission/deadline decision folded into the Horvitz-Thompson weights so
+the Eq. 10-12 estimator stays unbiased.  `--staleness K` runs a depth-K
+pipeline: the cohort admitted at round r is applied at round r+K, and
+the loop's last K rounds (and a SIGINT) drain the in-flight ring so no
+issued work is lost.
 
-Between rounds the host is free to do server-side things a scan cannot:
-here it evaluates every --eval-every rounds and reacts to faulted rounds
-(DESIGN.md §9 — `--fault dropout` drops clients, `--fault byzantine`
-corrupts them; pair the latter with `--aggregator trimmed_mean` or
-`median` to watch the robust reduction hold the trajectory; the streamed
-`live` / `corrupt_frac` columns show the fault layer acting per round).
+Each round the jitted body streams its own tracker row (DESIGN.md §10)
+with the queue/admission columns riding along (queue_depth, admitted,
+rejected, cohort_size, deadline_miss_frac) — `--tracker jsonl` fans out
+to stdout + an append-per-round file (`--track-out`), tailed and gated
+live by `tools/flwatch.py`.  Between rounds the host evaluates every
+`--eval-every` rounds and checkpoints every `--ckpt-every` rounds
+(`--ckpt-dir`): `--resume` restores the latest checkpoint — params,
+optimizer state, the pending pipeline ring, the queue trace, the policy
+state — and continues the exact served trajectory (exact for the
+deterministic policies; `adaptive` is wall-clock-driven by design).
 
-`--smoke` runs a 2-round loop on a tiny split and prints SERVE_SMOKE_OK —
-wired into tests/test_serve.py so this example stops bit-rotting, and
-into the CI telemetry job (`--smoke --tracker jsonl`), which asserts the
-jsonl is well-formed.
+Ctrl-C is a graceful shutdown, not a lost run: the loop catches the
+interrupt, drains the K in-flight cohorts, runs the final eval, flushes
+the tracker summary, and writes a final checkpoint.  `--crash-after N`
+simulates the opposite — a hard kill (no drain, no flush) after round N
+— which the CI soak job pairs with `--resume` to prove the checkpoint
+path survives mid-pipeline death.
+
+`--smoke` runs a 2-round depth-1 serve on a tiny split and prints
+SERVE_SMOKE_OK — wired into tests/test_serve.py and the CI telemetry +
+serve-soak jobs.
 """
 import argparse
+import os
 
 import jax
 
 from repro import track
 from repro.data import federated_splits
-from repro.fed import (FLConfig, Simulator, Task, registered_aggregators,
-                       registered_faults)
+from repro.fed import Simulator, Task, registered_aggregators, \
+    registered_faults
 from repro.models import lenet
+from repro.serve import ClientQueue, Coordinator, make_serve_config, \
+    registered_policies
 
 
 def build_tracker(name: str, path: str):
@@ -50,8 +63,11 @@ def build_tracker(name: str, path: str):
     return track.make_tracker(name)
 
 
-def build_sim(n_clients, cohort, fault, fault_opts, aggregator, scale,
-              tracker=None, seed=0):
+def build_coordinator(n_clients, cohort, staleness, policy, deadline,
+                      fault, checkin_rate, aggregator, scale, tracker=None,
+                      seed=0):
+    """Data plane (Simulator on the "external" sampler/fault shims) +
+    control plane (queue with fault-model availability, admission policy)."""
     spec, train, test = federated_splits("cifar10", n_clients=n_clients,
                                          alpha=0.1, seed=seed, scale=scale,
                                          noise=1.2, class_sep=0.8)
@@ -62,27 +78,55 @@ def build_sim(n_clients, cohort, fault, fault_opts, aggregator, scale,
                 accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
                 head_keys=lenet.HEAD_KEYS)
     params = lenet.init(cfg, jax.random.PRNGKey(seed))
-    fl = FLConfig.make(method="fedncv", n_clients=n_clients, cohort=cohort,
-                       k_micro=3, micro_batch=8, server_lr=0.5,
-                       local_epochs=1, ncv_beta=0.0,
-                       fault=fault, fault_opts=fault_opts,
-                       aggregator=aggregator)
-    return Simulator(task, params, train, fl, seed=seed,
-                     tracker=tracker), test
+    fl = make_serve_config(method="fedncv", n_clients=n_clients,
+                           cohort=cohort, k_micro=3, micro_batch=8,
+                           server_lr=0.5, local_epochs=1, ncv_beta=0.0,
+                           staleness=staleness, aggregator=aggregator)
+    sim = Simulator(task, params, train, fl, seed=seed, tracker=tracker)
+    queue = ClientQueue(n_clients, avail=fault, checkin_rate=checkin_rate,
+                        lat_mean=0.4, lat_skew=0.5, seed=seed)
+    coord = Coordinator(sim, queue, policy=policy, deadline_s=deadline)
+    return coord, test
 
 
-def serve(sim, test, rounds, eval_every):
-    """The server loop: the jitted round streams its own tracker row; the
-    host only schedules rounds and runs the periodic eval."""
-    for _ in range(rounds):
-        sim.run_round()
-        if eval_every and sim.round_idx % eval_every == 0:
-            acc = sim.evaluate(test)
-            print(f"round {sim.round_idx:3d}  eval accuracy {acc:.3f}",
-                  flush=True)
+def serve(coord, test, rounds, eval_every, ckpt_dir=None, ckpt_every=0,
+          crash_after=0):
+    """The server loop.  Issues admission rounds until `rounds - K`, then
+    drains the depth-K pipeline so the last K rows apply the in-flight
+    cohorts — total streamed rounds == `rounds` exactly.  KeyboardInterrupt
+    is a graceful shutdown: drain, eval, flush the tracker summary, write
+    the final checkpoint (the summary used to be lost on Ctrl-C)."""
+    sim = coord.sim
+    k = sim.fl.staleness
+    interrupted = False
+    try:
+        while sim.round_idx < rounds:
+            if sim.round_idx >= rounds - k:
+                coord.step(admit_override=0)      # tail drain: flush ring
+            else:
+                coord.step()
+            if eval_every and sim.round_idx % eval_every == 0 \
+                    and sim.round_idx < rounds:
+                acc = sim.evaluate(test)
+                print(f"round {sim.round_idx:3d}  eval accuracy {acc:.3f}",
+                      flush=True)
+            if ckpt_dir and ckpt_every and sim.round_idx % ckpt_every == 0:
+                coord.save(ckpt_dir)
+            if crash_after and sim.round_idx >= crash_after:
+                # hard kill for the CI soak: no drain, no tracker flush —
+                # recovery must come entirely from the last checkpoint
+                print(f"SERVE_CRASHED round={sim.round_idx}", flush=True)
+                os._exit(3)
+    except KeyboardInterrupt:
+        interrupted = True
+        print(f"\ninterrupt: draining {k} in-flight round(s)", flush=True)
+        coord.drain()
     acc = sim.evaluate(test)
     sim.tracker.finish(dict(rounds=sim.round_idx,
-                            final_accuracy=round(float(acc), 4)))
+                            final_accuracy=round(float(acc), 4),
+                            interrupted=interrupted))
+    if ckpt_dir:
+        coord.save(ckpt_dir)
     return acc
 
 
@@ -91,11 +135,18 @@ def main():
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--clients", type=int, default=12)
     ap.add_argument("--cohort", type=int, default=4)
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="pipeline depth K (0 = synchronous rounds)")
     ap.add_argument("--eval-every", type=int, default=5)
-    ap.add_argument("--fault", default="none",
-                    choices=sorted(registered_faults()))
-    ap.add_argument("--drop-rate", type=float, default=0.3,
-                    help="dropout rate when --fault dropout")
+    ap.add_argument("--policy", default="token_bucket",
+                    choices=sorted(registered_policies()))
+    ap.add_argument("--deadline", type=float, default=2.0,
+                    help="round deadline T (seconds); stragglers are cut "
+                         "and HT-reweighted")
+    ap.add_argument("--fault", default="markov",
+                    choices=sorted(set(registered_faults()) - {"external"}),
+                    help="availability model driving the client queue")
+    ap.add_argument("--checkin-rate", type=float, default=0.7)
     ap.add_argument("--aggregator", default="mean",
                     choices=sorted(registered_aggregators()))
     ap.add_argument("--tracker", default="stdout",
@@ -103,25 +154,43 @@ def main():
                     help="streaming sink; jsonl/csv compose with stdout")
     ap.add_argument("--track-out", default="serve.jsonl",
                     help="output path for the jsonl/csv sink")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint directory (enables checkpointing)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N rounds (0 = final only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from --ckpt-dir "
+                         "before serving")
+    ap.add_argument("--crash-after", type=int, default=0,
+                    help="simulate a hard kill after round N (CI soak)")
     ap.add_argument("--smoke", action="store_true",
                     help="2 tiny rounds, print SERVE_SMOKE_OK and exit")
     args = ap.parse_args()
 
     tracker = build_tracker(args.tracker, args.track_out)
     if args.smoke:
-        sim, test = build_sim(n_clients=6, cohort=3, fault="dropout",
-                              fault_opts=dict(drop_rate=0.3),
-                              aggregator="trimmed_mean", scale=0.05,
-                              tracker=tracker)
-        serve(sim, test, rounds=2, eval_every=2)
+        coord, test = build_coordinator(
+            n_clients=6, cohort=3, staleness=1, policy="token_bucket",
+            deadline=2.0, fault=args.fault, checkin_rate=0.9,
+            aggregator="mean", scale=0.05, tracker=tracker)
+        if args.resume:
+            coord.restore(args.ckpt_dir)
+        serve(coord, test, rounds=max(2, args.rounds if args.crash_after
+                                      or args.resume else 2),
+              eval_every=2, ckpt_dir=args.ckpt_dir or None,
+              ckpt_every=args.ckpt_every, crash_after=args.crash_after)
         print("SERVE_SMOKE_OK", flush=True)
         return
 
-    fault_opts = dict(drop_rate=args.drop_rate) \
-        if args.fault == "dropout" else {}
-    sim, test = build_sim(args.clients, args.cohort, args.fault, fault_opts,
-                          args.aggregator, scale=0.15, tracker=tracker)
-    acc = serve(sim, test, args.rounds, args.eval_every)
+    coord, test = build_coordinator(
+        args.clients, args.cohort, args.staleness, args.policy,
+        args.deadline, args.fault, args.checkin_rate, args.aggregator,
+        scale=0.15, tracker=tracker)
+    if args.resume:
+        coord.restore(args.ckpt_dir)
+    acc = serve(coord, test, args.rounds, args.eval_every,
+                ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+                crash_after=args.crash_after)
     print(f"final eval accuracy {acc:.3f}")
 
 

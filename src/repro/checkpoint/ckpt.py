@@ -128,16 +128,31 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
     `store="host"` the per-client tables are checkpointed from their host
     (numpy) views with the same flat keys as the device store's arrays,
     so the on-disk format is store-independent.
+
+    Async pipelines (`staleness = K >= 1`, DESIGN.md §12): the in-flight
+    pending cohort(s) — the depth-K ring — are serialized under the
+    "pipeline" subtree, so a mid-pipeline crash restarts on the exact
+    trajectory instead of dropping K rounds of issued work.  The meta
+    records `staleness` and the in-flight count for restore-time shape
+    validation; a sync checkpoint simply has no pipeline entry.
     """
     state = sim._get_state()
     tree = dict(params=sim.params, state=state)
-    save_step(directory, sim.round_idx, tree,
-              dict(meta or {}, round_idx=sim.round_idx,
-                   method=sim.fl.method, codec=sim.fl.codec,
-                   sampler=sim.fl.sampler,
-                   aggregator=sim.fl.aggregator, fault=sim.fl.fault,
-                   store=sim.fl.store,
-                   state_keys=sorted(state)), keep=keep)
+    meta_d = dict(meta or {}, round_idx=sim.round_idx,
+                  method=sim.fl.method, codec=sim.fl.codec,
+                  sampler=sim.fl.sampler,
+                  aggregator=sim.fl.aggregator, fault=sim.fl.fault,
+                  store=sim.fl.store, staleness=sim.fl.staleness,
+                  state_keys=sorted(state))
+    pipe = sim.pipeline_state() if hasattr(sim, "pipeline_state") else None
+    if pipe is not None:
+        tree["pipeline"] = pipe
+        # host rings may be mid-warmup (fewer than K entries); the device
+        # carries are always full-shaped once they exist
+        meta_d["pipeline_inflight"] = (len(pipe["ring"])
+                                       if "pidx" in pipe
+                                       else max(1, sim.fl.staleness))
+    save_step(directory, sim.round_idx, tree, meta_d, keep=keep)
 
 
 def restore_sim(directory: str, sim, step: int | None = None):
@@ -145,11 +160,12 @@ def restore_sim(directory: str, sim, step: int | None = None):
     the same FLConfig, codec included — validated against the checkpoint
     meta).  Returns the checkpoint meta.
 
-    The async pipeline's in-flight cohort is NOT checkpointed (DESIGN.md
-    §6.2): any pending round on `sim` is dropped so the restored run
-    restarts with a fresh pipeline bubble instead of applying a stale
-    cohort from the pre-restore trajectory."""
-    import jax.numpy as jnp
+    Async pipelines: a checkpoint carrying a "pipeline" subtree restores
+    the in-flight pending ring onto the simulator, so the resumed run
+    continues the exact pre-crash trajectory (DESIGN.md §12).  Legacy
+    checkpoints (pre-ring format, or saved before the pipeline warmed up)
+    have no pipeline entry and restore with a fresh bubble — the
+    historical behavior."""
     path = _step_path(directory, step)
     payload = _read_payload(path)           # one read + decode
     # validate method/codec/state-layout compatibility BEFORE the
@@ -201,14 +217,27 @@ def restore_sim(directory: str, sim, step: int | None = None):
             f"checkpoint state layout {have_keys} does not match the "
             f"simulator's state_spec() layout {want_keys} (same method "
             f"name, different state fields — version skew?)")
+    has_pipe = any(k.startswith("pipeline/") for k in payload
+                   if k != "_meta")
+    if has_pipe:
+        # a serialized ring is shaped by the depth it was saved under —
+        # restoring it into a different pipeline depth would mis-apply
+        # in-flight cohorts, so that is a configuration error
+        saved_k = saved.get("staleness")
+        if saved_k is not None and saved_k != sim.fl.staleness:
+            raise ValueError(
+                f"checkpoint carries an in-flight pipeline saved with "
+                f"staleness={saved_k} but the simulator is configured "
+                f"with staleness={sim.fl.staleness}")
     like = dict(params=sim.params, state=sim._get_state())
+    if has_pipe:
+        like["pipeline"] = sim.pipeline_template(
+            n_inflight=saved.get("pipeline_inflight"))
     tree, meta = restore(path, like, payload=payload)
     sim.params = tree["params"]
     sim._set_state(tree["state"])
     sim.round_idx = int(meta.get("round_idx", sim.round_idx))
-    sim._pending, sim._valid = None, jnp.float32(0.0)
-    if getattr(sim, "_host_mode", False):
-        sim._host_async = None      # host pipeline carry is per-run scratch
+    sim.set_pipeline_state(tree.get("pipeline"))
     # re-arm the streaming tracker at the restored round: sinks discard
     # rows the checkpoint never saw (a crash mid-chunk streams ahead of
     # the last save) and cumulative counters pick up from the last

@@ -298,7 +298,10 @@ class FLConfig:
     server_lr: float = 1.0
     codec: str = "identity"           # client->server wire format (repro.comm)
     codec_opts: dict = dataclasses.field(default_factory=dict)
-    staleness: int = 0                # 0 = sync; 1 = one-round-stale overlap
+    staleness: int = 0                # 0 = sync; K >= 1 = depth-K pipeline
+    # (a cohort issued at round r is applied at round r+K; K=1 is the
+    # classic one-round-stale overlap, K>=2 keeps a ring of K in-flight
+    # pending cohorts — DESIGN.md §12)
     sampler: str = "uniform"          # cohort selection (repro.fed.sampling)
     sampler_opts: dict = dataclasses.field(default_factory=dict)
     aggregator: str = "mean"          # server reduction (fed.aggregators)
@@ -321,9 +324,9 @@ class FLConfig:
                 f"FLConfig.method={self.method!r} does not match "
                 f"mc.name={self.mc.name!r} — the method config would be "
                 f"silently ignored; construct via FLConfig.make(method=...)")
-        if self.staleness not in (0, 1):
-            raise ValueError(f"staleness must be 0 or 1, got "
-                             f"{self.staleness}")
+        if not isinstance(self.staleness, int) or self.staleness < 0:
+            raise ValueError(f"staleness must be an int >= 0 (pipeline "
+                             f"depth K), got {self.staleness!r}")
         if not 1 <= self.cohort <= self.n_clients:
             raise ValueError(f"cohort={self.cohort} must be in "
                              f"[1, n_clients={self.n_clients}]")

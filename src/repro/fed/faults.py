@@ -417,3 +417,46 @@ register_fault(FaultModel(
     description="fixed fraction of adversarial client ids: scaled / "
                 "sign-flipped uploads or label-flipped training",
 ))
+
+
+# ---------------------------------------------------------------------------
+# external — per-slot exclusion planned by a host-side driver (repro.serve)
+# ---------------------------------------------------------------------------
+
+def _external_plan(opts, state, key, idx, m):
+    """Per-SLOT (not per-client) alive/invp tables, written host-side by a
+    driver before the round is dispatched — the serve.Coordinator's
+    deadline policy records which admitted clients will finish inside
+    T_round and the exact survival probability of that cut, so the round
+    applies the same honest-dropout HT reweighting as the simulated fault
+    models (DESIGN.md §9.2, §12.3)."""
+    del key, m
+    if state["alive"].shape != idx.shape:
+        raise ValueError(
+            f"external fault state holds {state['alive'].shape[0]} slots "
+            f"but the cohort has {idx.shape[0]}: set ext_slots=FLConfig."
+            f"cohort")
+    return dict(_ones_plan(idx.shape[0]), alive=state["alive"],
+                invp=state["invp"])
+
+
+def _external_validate(opts):
+    if int(opts["ext_slots"]) < 1:
+        raise ValueError(
+            "ext_slots must be >= 1 — set it to FLConfig.cohort (the "
+            "serve.Coordinator does this for you)")
+
+
+register_fault(FaultModel(
+    name="external",
+    plan=_external_plan,
+    init_state=lambda opts, m: dict(
+        alive=jnp.ones((int(opts["ext_slots"]),), jnp.float32),
+        invp=jnp.ones((int(opts["ext_slots"]),), jnp.float32)),
+    drops=staticmethod(lambda opts: True),
+    options=("ext_slots",),
+    defaults=dict(ext_slots=0),
+    validate=_external_validate,
+    description="per-slot exclusion + HT factors written host-side by a "
+                "driver (the serve.Coordinator's deadline cutoff)",
+))

@@ -385,3 +385,45 @@ register_sampler(CohortSampler(
     description="greedy farthest-point cohort over EMA update sketches "
                 "(+staleness bonus, Gumbel exploration)",
 ))
+
+
+# ---------------------------------------------------------------------------
+# external — a host-side driver owns the draw (repro.serve, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _external_draw(opts, state, key, m, c):
+    """The 'draw' just reads the tables a host-side driver wrote before
+    the round was dispatched: `idx` is the admitted cohort (padded slots
+    repeat a valid id), `invp` carries the driver's realized inclusion
+    probabilities — 1/(M q_u) for the admission process, 0 for padding —
+    so the HT machinery downstream is exactly the §8.2 contract and the
+    estimator never learns the cohort came from a queue instead of a
+    sampler."""
+    del key, m
+    if state["idx"].shape[0] != c:
+        raise ValueError(
+            f"external sampler state holds {state['idx'].shape[0]} slots "
+            f"but the round draws cohort={c}: set ext_cohort=FLConfig."
+            f"cohort")
+    return state["idx"], state["invp"]
+
+
+def _external_validate(opts):
+    if int(opts["ext_cohort"]) < 1:
+        raise ValueError(
+            "ext_cohort must be >= 1 — set it to FLConfig.cohort (the "
+            "serve.Coordinator does this for you)")
+
+
+register_sampler(CohortSampler(
+    name="external",
+    draw=_external_draw,
+    init_state=lambda opts, m: dict(
+        idx=jnp.zeros((int(opts["ext_cohort"]),), jnp.int32),
+        invp=jnp.ones((int(opts["ext_cohort"]),), jnp.float32)),
+    options=("ext_cohort",),
+    defaults=dict(ext_cohort=0),
+    validate=_external_validate,
+    description="cohort + HT inverse-probabilities written host-side by a "
+                "driver (the serve.Coordinator's admitted check-ins)",
+))

@@ -32,13 +32,19 @@ that do not divide the device count are padded with zero-weight slots
 (exact no-ops).  Per-client EF residual storage is kept sharded over the
 mesh when M divides the device count.
 
-Async rounds (DESIGN.md §6): `FLConfig.staleness = 1` double-buffers the
-cohort — round r's client passes are issued against the params that round
-r-1's server update has not yet touched, and that server update completes
-in the same scan step, giving one-round-staleness overlap.  Round 1 is the
-pipeline bubble (no update is applied; its diagnostics row reads zero).
-Bounded staleness: every applied update is exactly one round old —
-`theta_r = server(theta_{r-1}, clients(theta_{r-2}, cohort_{r-1}))`.
+Async rounds (DESIGN.md §6, §12): `FLConfig.staleness = 1` double-buffers
+the cohort — round r's client passes are issued against the params that
+round r-1's server update has not yet touched, and that server update
+completes in the same scan step, giving one-round-staleness overlap.
+Round 1 is the pipeline bubble (no update is applied; its diagnostics row
+reads zero).  Bounded staleness: every applied update is exactly one round
+old — `theta_r = server(theta_{r-1}, clients(theta_{r-2}, cohort_{r-1}))`.
+`staleness = K >= 2` generalizes the double buffer to a **ring of K
+pending cohorts** (DESIGN.md §12): the cohort issued at round r is applied
+at round r+K, the first K rounds are warmup bubbles (zeroed diagnostics
+rows, gated by the ring's per-slot valid flags), and every applied update
+is exactly K rounds old.  K=0 and K=1 take the historical sync/async round
+bodies unchanged — their trajectories are bit-identical to prior releases.
 
 Methods are `fed.api.FedMethod` strategies resolved from the registry
 (DESIGN.md §7): all per-client/global state handling — init, cohort
@@ -87,7 +93,6 @@ class Simulator:
         `fl.tracker`/`fl.tracker_opts` — for programmatic sinks (a composite
         built by a server loop, a memory sink a test inspects).
         """
-        assert fl.staleness in (0, 1), fl.staleness
         self.task, self.fl = task, fl
         self.method = api.get_method(fl.method)
         self._fields = self.method.state_spec(task, fl.mc)
@@ -234,9 +239,12 @@ class Simulator:
                     "model's state key; rename the StateField")
             self._state["faults"] = self.fm.init_state(self._fm_opts, m)
 
-        # async pipeline buffers (round in flight; None until first round)
+        # async pipeline buffers (round in flight; None until first round).
+        # staleness=1 carries (pending, valid); staleness>=2 carries the
+        # depth-K ring (`_ring` = (ring, rvalid, pos), DESIGN.md §12).
         self._pending = None
         self._valid = jnp.float32(0.0)
+        self._ring = None
 
         self.round_idx = 0
         self._round_jit = jax.jit(self._round_core)
@@ -246,6 +254,9 @@ class Simulator:
         self._round_async_jit = jax.jit(self._round_async_core)
         self._scan_async_jit = jax.jit(self._scan_rounds_async,
                                        donate_argnums=(0, 1, 2))
+        self._round_pipe_jit = jax.jit(self._round_pipe_core)
+        self._scan_pipe_jit = jax.jit(self._scan_rounds_pipe,
+                                      donate_argnums=(0, 1, 2))
         self._eval_jit = jax.jit(self._eval_core,
                                  static_argnames=("personalize_steps",))
         # host-store pipeline (fed/store.py §11.3): the select jit draws
@@ -257,7 +268,9 @@ class Simulator:
             self._round_host_jit = jax.jit(self._round_host_core)
             self._round_host_async_jit = jax.jit(self._round_host_async_core)
             self._prefetcher = None
-            self._host_async = None   # (pending, pending idx_np, valid)
+            # in-flight ring, oldest first: list of (pending, idx_np) with
+            # at most `staleness` entries (empty list == fresh pipeline)
+            self._host_async = None
 
         # state-field names double as attributes (__getattr__/__setattr__
         # redirection): a field shadowing a real instance attribute would
@@ -737,6 +750,41 @@ class Simulator:
             params = track.tether(params, self._emit(r, diag))
         return params, state, new_pending, jnp.float32(1.0), diag
 
+    def _round_pipe_core(self, params, state, ring, rvalid, pos, key, r):
+        """One depth-K pipeline step (`staleness = K >= 2`, DESIGN.md §12).
+
+        The ring holds the K in-flight cohorts, stacked on a leading K
+        axis; `pos` points at the oldest slot.  Each step (a) issues round
+        r's client passes against the current params, (b) applies the
+        oldest pending cohort — issued K rounds ago — through the server
+        half, (c) overwrites the oldest slot with the new cohort and
+        advances `pos`.  `rvalid[pos]` gates the K warmup bubbles with the
+        exact `_round_async_core` invariant: params/state `_tree_where`-
+        gated, every diag key zeroed (never dropped), static pytree
+        structure across scan steps."""
+        oldest = jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, pos, 0,
+                                                   keepdims=False), ring)
+        ovalid = jax.lax.dynamic_index_in_dim(rvalid, pos, 0,
+                                              keepdims=False)
+        new_pending = self._client_section(params, state, key)
+        params2, state2, diag = self._server_section(params, state, oldest,
+                                                     r)
+        params = _tree_where(ovalid, params2, params)
+        state = _tree_where(ovalid, state2, state)
+        diag = {k: jnp.where(ovalid > 0, v, jnp.zeros_like(v))
+                for k, v in diag.items()}
+        ring = jax.tree.map(
+            lambda buf, x: jax.lax.dynamic_update_index_in_dim(buf, x, pos,
+                                                               0),
+            ring, new_pending)
+        rvalid = jax.lax.dynamic_update_index_in_dim(
+            rvalid, jnp.float32(1.0), pos, 0)
+        pos = jnp.mod(pos + 1, self.fl.staleness)
+        if self._emit is not None:
+            params = track.tether(params, self._emit(r, diag))
+        return params, state, ring, rvalid, pos, diag
+
     # ------------------------------------------------------------------
     # host-store round path (fed/store.py, DESIGN.md §11): the (M, ...)
     # per-client tables and data tensors live host-side; each round the
@@ -1014,8 +1062,12 @@ class Simulator:
         if self._emit is not None:
             self._emit.reset()
         if self._prefetcher is None:
+            # prefetch depth follows the pipeline depth: K in-flight
+            # cohorts want K+1 staged slices (the K pendings' server
+            # windows plus the next client window) before backpressure
             self._prefetcher = store_lib.CohortPrefetcher(
-                enabled=bool(self._store_opts.get("prefetch", True)))
+                enabled=bool(self._store_opts.get("prefetch", True)),
+                depth=max(2, self.fl.staleness + 1))
         pf = self._prefetcher
         rs = self.round_idx + np.arange(1, n + 1)
         # select ahead of the round only when the draw is key-only: a
@@ -1074,14 +1126,20 @@ class Simulator:
 
     def _run_host_async(self, n, keys, rs, pf, sels, waits, diags,
                         dispatch_select, sel_ahead):
-        """staleness=1 on the host store: the pending dict stays a device
-        carry across chunks exactly like the device async driver, plus the
-        pending cohort's host-side indices so the next step's worker job
-        can re-gather its server windows after the previous scatter."""
-        if self._host_async is None:
-            pending, pidx, valid = self._zero_pending_host(), None, False
-        else:
-            pending, pidx, valid = self._host_async
+        """staleness = K >= 1 on the host store: the in-flight pendings
+        stay device carries across chunks exactly like the device async
+        drivers, held in a ring list (oldest first, at most K entries)
+        together with each pending cohort's host-side indices so the next
+        step's worker job can re-gather its server windows after the
+        previous scatter.  A step with a full ring pops + applies the
+        oldest pending (issued K rounds ago); a mid-warmup step (ring
+        shorter than K) runs the server half on an all-zero bubble, gated
+        off by `valid` — the exact `_round_async_core` bubble invariant.
+        For K=1 this issues the same jit calls in the same order as the
+        historical double-buffered driver (bit-identical trajectories)."""
+        k = self.fl.staleness
+        ring = [] if self._host_async is None else self._host_async
+        zero = None
 
         def make_job(i, scatter_prev, swin_idx):
             sel = sels[i]
@@ -1093,7 +1151,10 @@ class Simulator:
             return job
 
         dispatch_select(0)
-        waits[0] = pf.submit(make_job(0, None, pidx))
+        # swin for step i is the cohort applied at step i == ring head
+        # when the ring is full, else a zero bubble window (idx None)
+        waits[0] = pf.submit(make_job(
+            0, None, ring[0][1] if len(ring) == k else None))
         last_scatter = None
         for i in range(n):
             if sel_ahead and i + 1 < n:
@@ -1101,6 +1162,13 @@ class Simulator:
             if self._emit is not None:
                 self._emit.set_host_metrics(self._host_metrics())
             buf = waits[i]()
+            if len(ring) == k:
+                pending, pidx = ring.pop(0)
+                valid = True
+            else:
+                if zero is None:
+                    zero = self._zero_pending_host()
+                pending, pidx, valid = zero, None, False
             out = self._round_host_async_jit(
                 self.params, self._state, buf["windows"], buf["batch"],
                 self._sel_args(sels[i]), buf["swin"], pending,
@@ -1110,24 +1178,25 @@ class Simulator:
             self._state = out["dstate"]
             scatter_prev = (pidx, out["wout"], out.get("alive")) \
                 if valid else None
-            pending = out["pending"]
-            pidx, valid = buf["idx"], True
+            ring.append((out["pending"], buf["idx"]))
             if i + 1 < n:
                 if not sel_ahead:
                     dispatch_select(i + 1)
-                waits[i + 1] = pf.submit(make_job(i + 1, scatter_prev, pidx))
+                waits[i + 1] = pf.submit(make_job(
+                    i + 1, scatter_prev,
+                    ring[0][1] if len(ring) == k else None))
             elif scatter_prev is not None:
                 last_scatter = scatter_prev
             diags.append(out["diag"])
         if last_scatter is not None:
             pf.submit(lambda: self._host_scatter(*last_scatter))()
-        self._host_async = (pending, pidx, valid)
+        self._host_async = ring
         self.round_idx += n
         jax.block_until_ready(self.params)
         if self._emit is not None:
             jax.effects_barrier()
-        return {k: np.stack([np.asarray(d[k]) for d in diags])
-                for k in diags[0]}
+        return {k2: np.stack([np.asarray(d[k2]) for d in diags])
+                for k2 in diags[0]}
 
     def device_state_bytes(self):
         """Bytes of device-resident run state: params + the state dict
@@ -1165,6 +1234,17 @@ class Simulator:
             unroll=self._scan_unroll(keys))
         return params, state, pending, valid, diags
 
+    def _scan_rounds_pipe(self, params, state, ring, rvalid, pos, keys, rs):
+        def body(carry, kr):
+            p, st, rg, rv, po = carry
+            p, st, rg, rv, po, diag = self._round_pipe_core(
+                p, st, rg, rv, po, kr[0], kr[1])
+            return (p, st, rg, rv, po), diag
+        (params, state, ring, rvalid, pos), diags = jax.lax.scan(
+            body, (params, state, ring, rvalid, pos), (keys, rs),
+            unroll=self._scan_unroll(keys))
+        return params, state, ring, rvalid, pos, diags
+
     def _scan_unroll(self, keys):
         # XLA:CPU compiles while-loop bodies without the fusion/parallelism
         # the straight-line version gets (~3-4x slower per round here), so
@@ -1178,6 +1258,84 @@ class Simulator:
         shapes = jax.eval_shape(self._client_section, self.params,
                                 self._get_state(), self.base_key)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def _zero_ring(self):
+        """Fresh depth-K ring: K stacked all-zero pending slots, all-zero
+        per-slot valid flags, write cursor at slot 0."""
+        k = self.fl.staleness
+        shapes = jax.eval_shape(self._client_section, self.params,
+                                self._get_state(), self.base_key)
+        ring = jax.tree.map(
+            lambda s: jnp.zeros((k,) + s.shape, s.dtype), shapes)
+        return ring, jnp.zeros((k,), jnp.float32), jnp.int32(0)
+
+    # ------------------------------------------------------------------
+    # pipeline carry snapshot/restore (checkpoint/ckpt.py): a mid-pipeline
+    # save keeps the in-flight cohorts, so a crash-restart resumes the
+    # exact trajectory instead of re-warming the bubble (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def pipeline_state(self):
+        """The in-flight pipeline carry as a checkpointable pytree, or
+        None when nothing is in flight (sync mode, or a fresh pipeline).
+        Layouts by mode — `checkpoint.save_sim` stores whichever appears:
+          staleness=1, device store:  dict(pending=..., valid=...)
+          staleness>=2, device store: dict(ring=..., rvalid=..., pos=...)
+          host store (any K>=1):      dict(ring=[pending...],
+                                           pidx=(L, cohort) int32)
+        """
+        if self.fl.staleness == 0:
+            return None
+        if self._host_mode:
+            ring = self._host_async
+            if not ring:
+                return None
+            return dict(ring=[p for p, _ in ring],
+                        pidx=jnp.asarray(
+                            np.stack([np.asarray(ix) for _, ix in ring])))
+        if self.fl.staleness == 1:
+            if self._pending is None:
+                return None
+            return dict(pending=self._pending, valid=self._valid)
+        if self._ring is None:
+            return None
+        ring, rvalid, pos = self._ring
+        return dict(ring=ring, rvalid=rvalid, pos=pos)
+
+    def pipeline_template(self, n_inflight=None):
+        """Shape/dtype template matching `pipeline_state()` for msgpack
+        restore.  `n_inflight` (host store) is the saved ring length L."""
+        if self._host_mode:
+            zero = self._zero_pending_host()
+            ring = [jax.tree.map(jnp.zeros_like, zero)
+                    for _ in range(int(n_inflight))]
+            return dict(ring=ring,
+                        pidx=jnp.zeros((int(n_inflight), self.fl.cohort),
+                                       jnp.int32))
+        if self.fl.staleness == 1:
+            return dict(pending=self._zero_pending(),
+                        valid=jnp.float32(0.0))
+        ring, rvalid, pos = self._zero_ring()
+        return dict(ring=ring, rvalid=rvalid, pos=pos)
+
+    def set_pipeline_state(self, pipe):
+        """Install a restored pipeline carry (None == fresh bubble)."""
+        if pipe is None:
+            self._pending, self._valid = None, jnp.float32(0.0)
+            self._ring = None
+            if self._host_mode:
+                self._host_async = None
+            return
+        if self._host_mode:
+            pidx = np.asarray(pipe["pidx"]).astype(np.int32)
+            self._host_async = [(p, pidx[i])
+                                for i, p in enumerate(pipe["ring"])]
+        elif self.fl.staleness == 1:
+            self._pending = pipe["pending"]
+            self._valid = jnp.asarray(pipe["valid"], jnp.float32)
+        else:
+            self._ring = (pipe["ring"],
+                          jnp.asarray(pipe["rvalid"], jnp.float32),
+                          jnp.asarray(pipe["pos"], jnp.int32))
 
     def _track_resume(self, round_idx):
         """Re-arm the tracker after a checkpoint restore: sinks discard
@@ -1202,7 +1360,15 @@ class Simulator:
         if self._emit is not None:
             self._emit.reset()
         self.round_idx += 1
-        if self.fl.staleness:
+        if self.fl.staleness >= 2:
+            if self._ring is None:
+                self._ring = self._zero_ring()
+            ring, rvalid, pos = self._ring
+            params, state, ring, rvalid, pos, diag = self._round_pipe_jit(
+                self.params, self._get_state(), ring, rvalid, pos,
+                key, jnp.int32(self.round_idx))
+            self._ring = (ring, rvalid, pos)
+        elif self.fl.staleness:
             if self._pending is None:
                 self._pending = self._zero_pending()
             params, state, pending, valid, diag = self._round_async_jit(
@@ -1224,9 +1390,10 @@ class Simulator:
 
         Equivalent to n `run_round()` calls: same per-round keys, same
         trajectory.  Returns stacked per-round scalar diagnostics.  In
-        async mode (`staleness = 1`) the in-flight cohort is carried on the
-        simulator across calls, so chunked driving (`run_rounds(5)` x 4)
-        follows the same pipelined trajectory as one `run_rounds(20)`.
+        async mode (`staleness = K >= 1`) the in-flight cohort(s) are
+        carried on the simulator across calls, so chunked driving
+        (`run_rounds(5)` x 4) follows the same pipelined trajectory as one
+        `run_rounds(20)`.
         """
         if n <= 0:
             return {}
@@ -1241,7 +1408,14 @@ class Simulator:
         if self._emit is not None:
             self._emit.reset()
         rs = start + jnp.arange(1, n + 1, dtype=jnp.int32)
-        if self.fl.staleness:
+        if self.fl.staleness >= 2:
+            if self._ring is None:
+                self._ring = self._zero_ring()
+            ring, rvalid, pos = self._ring
+            params, state, ring, rvalid, pos, diags = self._scan_pipe_jit(
+                self.params, self._get_state(), ring, rvalid, pos, keys, rs)
+            self._ring = (ring, rvalid, pos)
+        elif self.fl.staleness:
             if self._pending is None:
                 self._pending = self._zero_pending()
             params, state, pending, valid, diags = self._scan_async_jit(

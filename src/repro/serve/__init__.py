@@ -1,0 +1,17 @@
+"""repro.serve — production round service (DESIGN.md §12).
+
+The seventh registry subsystem: a `Coordinator` drives the simulator one
+round at a time from a `ClientQueue` of simulated check-ins, with a
+registered `AdmissionPolicy` sizing each cohort and a deadline policy
+cutting stragglers — all folded into the Horvitz-Thompson weights via
+the "external" sampler/fault shims, so Eq. 10-12 stays unbiased with no
+estimator change.
+"""
+from repro.serve.admission import (  # noqa: F401
+    AdmissionPolicy, get_policy, register_policy, registered_policies,
+    resolve_opts,
+)
+from repro.serve.coordinator import (  # noqa: F401
+    Coordinator, make_serve_config,
+)
+from repro.serve.queue import ClientQueue  # noqa: F401

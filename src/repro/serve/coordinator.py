@@ -1,0 +1,233 @@
+"""Event-driven round coordinator (DESIGN.md §12).
+
+The `Coordinator` owns the serve loop's control plane: a `ClientQueue`
+of simulated check-ins, a registered `AdmissionPolicy` deciding how many
+to admit each round, and a deadline policy cutting stragglers at
+`deadline_s` — and it drives the data plane (a `fed.Simulator`) one
+round at a time, writing what it decided into the simulator's
+"external" sampler/fault tables before each dispatch.
+
+The estimator contract ("dropout is just another sampler"): the round
+jit never learns the cohort came from a queue.  The coordinator writes
+
+  * sampler state (idx, invp): the admitted cohort ids, padded to the
+    static `FLConfig.cohort` shape, with the admission Horvitz-Thompson
+    factor 1/(M q_u) per slot — q_u estimated from the per-client
+    admission-frequency EMA, normalized so a uniform world yields
+    invp == 1 exactly — and invp = 0 on padding slots;
+  * fault state (alive, invp): the deadline cut — alive = 0 for
+    stragglers and padding, invp = alive / s_u with the closed-form
+    exponential survival s_u = 1 - exp(-deadline / mu_u)
+
+and the existing §8/§9 machinery does the rest: HT weights into
+Eq. 10-12, state-scatter gating, honest bytes_up, the all-dropped
+guard.  Unbiasedness condition (§12.3): conditional on admission, the
+deadline cut is independent thinning with known per-client survival
+probability, so E[sum_u w_u invp_u g_u] recovers the admitted-cohort
+estimator exactly; across rounds the admission EMA is a consistent
+estimate of the realized inclusion rate, approaching the exact HT
+correction as the trace mixes.
+
+Pipelining: `FLConfig.staleness = K` issues the admitted cohort at
+round r and applies it at round r+K (the simulator's depth-K ring);
+`drain()` flushes the K in-flight cohorts with zero-admission bubble
+rounds — what a graceful SIGINT shutdown calls before the final
+checkpoint, so no issued work is lost.
+
+Telemetry: queue_depth / admitted / rejected / cohort_size /
+deadline_miss_frac are published through `emit.set_host_metrics` and
+ride every streamed row (`tools/flwatch.py` renders and gates them).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import admission
+from repro.serve.queue import ClientQueue
+
+SERVE_SIDECAR = "serve_state.json"
+
+
+class Coordinator:
+    """Drive `sim` (sampler="external", fault="external") from `queue`.
+
+    policy / policy_opts: registered `AdmissionPolicy` + its options.
+    deadline_s:     T_round — admitted clients slower than this are cut
+                    (and HT-reweighted; <= 0 disables the cut).
+    target_round_s: the wall-clock budget the adaptive policy steers
+                    toward (defaults to deadline_s).
+    """
+
+    def __init__(self, sim, queue: ClientQueue, policy: str = "fixed",
+                 policy_opts: dict | None = None, deadline_s: float = 2.0,
+                 target_round_s: float | None = None, ema: float = 0.1):
+        fl = sim.fl
+        if fl.sampler != "external" or fl.fault != "external":
+            raise ValueError(
+                "Coordinator needs FLConfig.make(sampler='external', "
+                "sampler_opts={'ext_cohort': cohort}, fault='external', "
+                "fault_opts={'ext_slots': cohort}) — the coordinator "
+                f"writes those tables; got sampler={fl.sampler!r}, "
+                f"fault={fl.fault!r}")
+        if queue.m != fl.n_clients:
+            raise ValueError(f"queue has {queue.m} clients but the "
+                             f"simulator has {fl.n_clients}")
+        self.sim, self.queue = sim, queue
+        self.policy = admission.get_policy(policy)
+        self.policy_opts = admission.resolve_opts(self.policy, policy_opts)
+        self.pstate = self.policy.init(self.policy_opts)
+        self.deadline_s = float(deadline_s)
+        self.target_round_s = float(deadline_s if target_round_s is None
+                                    else target_round_s)
+        self.ema = float(ema)
+        # admission-frequency EMA (the q_u estimate); uniform start
+        self._freq = np.full((fl.n_clients,), fl.cohort / fl.n_clients,
+                             np.float64)
+        self._last_round_s = 0.0
+        self.last_metrics: dict = {}
+
+    # ------------------------------------------------------------------
+    def _admission_invp(self, ids) -> np.ndarray:
+        """HT factor 1/(M q_u) for the admitted ids, with q normalized
+        over the population — a uniform world gives exactly 1.0."""
+        w = np.maximum(self._freq, 1e-6)
+        q = w / w.sum()
+        return 1.0 / (self.sim.fl.n_clients * q[np.asarray(ids, np.int64)])
+
+    def _write_tables(self, ids, alive, invp_admit, invp_deadline):
+        """Install this round's cohort + HT tables into the simulator's
+        external sampler/fault state (the only coordinator->jit channel)."""
+        c = self.sim.fl.cohort
+        idx = np.zeros((c,), np.int32)
+        s_invp = np.zeros((c,), np.float32)
+        f_alive = np.zeros((c,), np.float32)
+        f_invp = np.zeros((c,), np.float32)
+        n = len(ids)
+        if n:
+            idx[:n] = np.asarray(ids, np.int32)
+            s_invp[:n] = np.asarray(invp_admit, np.float32)
+            f_alive[:n] = np.asarray(alive, np.float32)
+            f_invp[:n] = np.asarray(invp_deadline, np.float32)
+        st = self.sim._get_state()
+        st["sampler"] = dict(idx=jnp.asarray(idx),
+                             invp=jnp.asarray(s_invp))
+        st["faults"] = dict(alive=jnp.asarray(f_alive),
+                            invp=jnp.asarray(f_invp))
+        self.sim._set_state(st)
+
+    # ------------------------------------------------------------------
+    def step(self, *, admit_override: int | None = None) -> dict:
+        """One served round: tick the queue, admit, cut stragglers,
+        write the tables, dispatch the round.  Returns the round's diag
+        dict merged with the queue/admission metrics."""
+        fl = self.sim.fl
+        checkins = self.queue.tick()
+        stats = dict(queue_depth=self.queue.depth, cohort_max=fl.cohort,
+                     last_round_s=self._last_round_s,
+                     target_round_s=self.target_round_s)
+        if admit_override is None:
+            n_admit, self.pstate = self.policy.admit(
+                self.policy_opts, self.pstate, stats)
+        else:
+            n_admit = admit_override
+        ids = self.queue.admit(n_admit)
+        n = len(ids)
+        if n:
+            if self.deadline_s > 0:
+                lat = self.queue.latencies(ids)
+                alive = (lat <= self.deadline_s).astype(np.float32)
+                surv = self.queue.survival(ids, self.deadline_s)
+                invp_deadline = alive / np.maximum(surv, 1e-9)
+            else:
+                alive = np.ones((n,), np.float32)
+                invp_deadline = np.ones((n,), np.float32)
+            invp_admit = self._admission_invp(ids)
+            miss_frac = 1.0 - float(np.mean(alive))
+        else:
+            alive = invp_deadline = invp_admit = np.zeros((0,), np.float32)
+            miss_frac = 0.0
+        self._write_tables(ids, alive, invp_admit, invp_deadline)
+        # consistent inclusion-rate estimate for the next rounds' HT factor
+        ind = np.zeros_like(self._freq)
+        if n:
+            ind[np.asarray(ids, np.int64)] = 1.0
+        self._freq = (1.0 - self.ema) * self._freq + self.ema * ind
+        metrics = dict(queue_depth=float(stats["queue_depth"]),
+                       checkins=float(checkins), admitted=float(n),
+                       rejected=float(stats["queue_depth"] - n),
+                       cohort_size=float(np.sum(alive)),
+                       deadline_miss_frac=float(miss_frac))
+        self.last_metrics = metrics
+        if self.sim._emit is not None:
+            self.sim._emit.set_host_metrics(metrics)
+        import time
+        t0 = time.perf_counter()
+        diag = self.sim.run_round()
+        self._last_round_s = time.perf_counter() - t0
+        return dict(diag, **metrics)
+
+    def drain(self) -> list[dict]:
+        """Flush the pipeline: run `staleness` zero-admission rounds so
+        every in-flight cohort's server half is applied (the new bubbles
+        are all-dead no-ops).  Sync mode (K=0) drains instantly."""
+        return [self.step(admit_override=0)
+                for _ in range(self.sim.fl.staleness)]
+
+    # ------------------------------------------------------------------
+    # serve checkpointing: simulator checkpoint + coordinator sidecar
+    # ------------------------------------------------------------------
+    def save(self, directory: str, keep: int = 3):
+        """`checkpoint.save_sim` (params/state/pending ring) plus a json
+        sidecar with the control-plane state (queue trace, policy state,
+        admission EMA), so a restart resumes the exact served trajectory."""
+        from repro.checkpoint import ckpt
+        ckpt.save_sim(directory, self.sim, keep=keep)
+        sidecar = dict(
+            round_idx=self.sim.round_idx,
+            policy=self.policy.name,
+            pstate=self.pstate,
+            freq=self._freq.tolist(),
+            last_round_s=self._last_round_s,
+            queue=self.queue.state_dict())
+        tmp = os.path.join(directory, SERVE_SIDECAR + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(sidecar, f)
+        os.replace(tmp, os.path.join(directory, SERVE_SIDECAR))
+
+    def restore(self, directory: str) -> dict:
+        """Restore the simulator checkpoint and the coordinator sidecar
+        (when present — a sim-only checkpoint restores the data plane
+        and keeps the fresh control plane)."""
+        from repro.checkpoint import ckpt
+        meta = ckpt.restore_sim(directory, self.sim)
+        path = os.path.join(directory, SERVE_SIDECAR)
+        if os.path.exists(path):
+            with open(path) as f:
+                sidecar = json.load(f)
+            if sidecar.get("policy") != self.policy.name:
+                raise ValueError(
+                    f"serve checkpoint was written with admission policy "
+                    f"{sidecar.get('policy')!r} but the coordinator runs "
+                    f"{self.policy.name!r}")
+            self.pstate = sidecar["pstate"]
+            self._freq = np.asarray(sidecar["freq"], np.float64)
+            self._last_round_s = float(sidecar["last_round_s"])
+            self.queue.load_state_dict(sidecar["queue"])
+        return meta
+
+
+def make_serve_config(base=None, **kw):
+    """Convenience: an `FLConfig.make` pre-wired for the coordinator —
+    sampler/fault forced to "external" with matching slot counts."""
+    from repro.fed import FLConfig
+    kw = dict(base or {}, **kw)
+    cohort = int(kw.get("cohort", 10))
+    kw["sampler"] = "external"
+    kw["sampler_opts"] = dict(ext_cohort=cohort)
+    kw["fault"] = "external"
+    kw["fault_opts"] = dict(ext_slots=cohort)
+    return FLConfig.make(**kw)

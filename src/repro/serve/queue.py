@@ -1,0 +1,151 @@
+"""Host-side client queue for the serve coordinator (DESIGN.md §12.1).
+
+Simulates the population of M clients a real FL server faces: each round
+(one `tick`), clients flip availability according to a registered
+`FaultModel`'s trace — the SAME process the in-jit fault plans draw from,
+so "the world the coordinator sees" and "the world the simulator injects"
+share one model registry — and available clients check in with
+probability `checkin_rate`.  Checked-in clients wait FIFO until admitted;
+a client whose availability flips off while queued departs (a real
+device going offline mid-wait).
+
+Capacity heterogeneity rides the straggler model's latency law: client u
+runs at mean latency `mu_u = lat_mean * (1 + lat_skew * span_u)`
+(`faults._straggler_means`), and a round's realized latency is
+`mu_u * Exp(1)` — which gives the deadline policy the closed-form
+survival probability `s_u = 1 - exp(-T / mu_u)` it folds into the HT
+weights (faults.py's straggler model, DESIGN.md §9.2).
+
+Everything here is host-side numpy + eager jax on small (M,) vectors;
+nothing enters the round jit.  State is JSON-serializable via
+`state_dict`/`load_state_dict` so a serve checkpoint restores the queue
+mid-trace (same availability bits, same rng stream, same waiting line).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.fed import faults
+
+
+class ClientQueue:
+    """FIFO check-in queue over a FaultModel-driven availability trace.
+
+    avail:      registered fault-model name driving availability ("none"
+                — always on, "markov" — the on/off chain, "dropout" —
+                i.i.d. per-round presence) with `avail_opts` resolved by
+                the model's own option contract.
+    lat_mean /
+    lat_skew:   straggler-law per-client mean latencies (seconds of
+                simulated client compute per round).
+    checkin_rate: probability an available, un-queued client checks in
+                at a given tick.
+    """
+
+    def __init__(self, n_clients: int, avail: str = "markov",
+                 avail_opts: dict | None = None, checkin_rate: float = 0.5,
+                 lat_mean: float = 1.0, lat_skew: float = 0.5, seed: int = 0):
+        if not 0.0 < checkin_rate <= 1.0:
+            raise ValueError(f"checkin_rate must be in (0, 1], got "
+                             f"{checkin_rate}")
+        self.m = int(n_clients)
+        self.fm = faults.get_fault(avail)
+        self.fm_opts = faults.resolve_opts(self.fm, avail_opts)
+        self.checkin_rate = float(checkin_rate)
+        self._rng = np.random.default_rng(seed)
+        self._seed = int(seed)
+        self.tick_idx = 0
+        # straggler-law latency means (exact HT survival closed form)
+        self._mu = np.asarray(faults._straggler_means(
+            dict(str_mean=float(lat_mean), str_skew=float(lat_skew)),
+            np.arange(self.m), self.m), np.float64)
+        self._fstate = None
+        if self.fm.stateful:
+            self._fstate = {k: np.asarray(v) for k, v in
+                            self.fm.init_state(self.fm_opts, self.m).items()}
+        self._queued: list[int] = []
+        self._on = self._availability()
+
+    # ------------------------------------------------------------------
+    def _availability(self) -> np.ndarray:
+        """(M,) float 0/1 availability for the current tick, read from
+        the fault model exactly as the in-jit plan would."""
+        if self.fm.plan is None:                      # "none": always on
+            return np.ones((self.m,), np.float32)
+        key = jax.random.fold_in(jax.random.PRNGKey(self._seed),
+                                 self.tick_idx)
+        fstate = None
+        if self._fstate is not None:
+            fstate = {k: np.asarray(v) for k, v in self._fstate.items()}
+        plan = self.fm.plan(self.fm_opts, fstate, key,
+                            np.arange(self.m), self.m)
+        return np.asarray(plan["alive"], np.float32)
+
+    def tick(self):
+        """Advance one round: evolve availability, drop departed queued
+        clients, draw new check-ins.  Returns the number of fresh
+        check-ins this tick."""
+        self.tick_idx += 1
+        if self.fm.step is not None:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self._seed ^ 0x5E12), self.tick_idx)
+            self._fstate = {
+                k: np.asarray(v) for k, v in
+                self.fm.step(self.fm_opts, self._fstate, key).items()}
+        self._on = self._availability()
+        # departures: queued clients whose device went offline
+        self._queued = [u for u in self._queued if self._on[u] > 0]
+        in_q = np.zeros((self.m,), bool)
+        if self._queued:
+            in_q[np.asarray(self._queued)] = True
+        eligible = (self._on > 0) & ~in_q
+        coins = self._rng.random(self.m) < self.checkin_rate
+        fresh = np.flatnonzero(eligible & coins)
+        self._rng.shuffle(fresh)          # arrival order, not id order
+        self._queued.extend(int(u) for u in fresh)
+        return len(fresh)
+
+    def admit(self, n: int) -> list[int]:
+        """Pop the n oldest check-ins (FIFO)."""
+        n = max(0, min(int(n), len(self._queued)))
+        out, self._queued = self._queued[:n], self._queued[n:]
+        return out
+
+    def latencies(self, ids) -> np.ndarray:
+        """Realized round latency per admitted client: mu_u * Exp(1)."""
+        ids = np.asarray(ids, np.int64)
+        return self._mu[ids] * self._rng.exponential(size=ids.shape)
+
+    def survival(self, ids, deadline_s: float) -> np.ndarray:
+        """Exact P(latency <= deadline) per client (exponential law)."""
+        ids = np.asarray(ids, np.int64)
+        return 1.0 - np.exp(-float(deadline_s) / self._mu[ids])
+
+    @property
+    def depth(self) -> int:
+        return len(self._queued)
+
+    @property
+    def available_frac(self) -> float:
+        return float(np.mean(self._on))
+
+    # ------------------------------------------------------------------
+    # checkpointing (serve sidecar, json)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return dict(
+            tick_idx=self.tick_idx,
+            queued=list(self._queued),
+            fstate=None if self._fstate is None else
+            {k: np.asarray(v).tolist() for k, v in self._fstate.items()},
+            rng=self._rng.bit_generator.state)
+
+    def load_state_dict(self, sd: dict):
+        self.tick_idx = int(sd["tick_idx"])
+        self._queued = [int(u) for u in sd["queued"]]
+        if sd.get("fstate") is not None:
+            self._fstate = {k: np.asarray(v, np.float32)
+                            for k, v in sd["fstate"].items()}
+        self._rng.bit_generator.state = sd["rng"]
+        self._on = self._availability()

@@ -509,10 +509,13 @@ def emitter(tracker: Tracker, ordered: bool = True):
         state["bytes"] = float((last_row or {}).get("bytes_up_cum", 0.0))
 
     def set_host_metrics(metrics: dict):
-        """Publish host-side metrics to merge into every subsequent row
-        (the host-store driver calls this once per round before dispatch).
-        """
-        state["host"] = {k: float(v) for k, v in metrics.items()}
+        """Publish host-side metrics to merge into every subsequent row.
+        Merge semantics (update, not replace): independent publishers —
+        the host-store driver's memory/overlap gauges and the serve
+        coordinator's queue/admission counters — each own their keys and
+        refresh them once per round before dispatch without clobbering
+        the other's."""
+        state["host"].update({k: float(v) for k, v in metrics.items()})
 
     emit.reset = reset
     emit.resume = resume

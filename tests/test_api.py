@@ -128,7 +128,10 @@ def test_flconfig_validates_options():
     with pytest.raises(ValueError, match="cohort"):
         FLConfig.make(method="fedavg", n_clients=4, cohort=9)
     with pytest.raises(ValueError, match="staleness"):
-        FLConfig.make(method="fedavg", n_clients=8, cohort=4, staleness=3)
+        FLConfig.make(method="fedavg", n_clients=8, cohort=4, staleness=-1)
+    # depth-K pipelines are valid configurations (DESIGN.md §12)
+    assert FLConfig.make(method="fedavg", n_clients=8, cohort=4,
+                         staleness=3).staleness == 3
 
 
 # ------------------------- method-matrix parity ------------------------------

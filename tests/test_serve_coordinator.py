@@ -1,0 +1,388 @@
+"""repro.serve + the depth-K round pipeline (fed/simulator.py ring,
+serve/{queue,admission,coordinator}.py, DESIGN.md §12).
+
+The standing contracts:
+
+* `staleness=K` is a depth-K pipeline: the cohort issued at round r is
+  applied at round r+K, the first K rounds are zero-diag warmup bubbles,
+  and a hand-unrolled client/server reference reproduces the jitted ring
+  bitwise.  K=0 (sync) and K=1 (the original async path) are untouched
+  code paths — the device and host stores must agree exactly at every K.
+* The pending ring is checkpoint state: a save mid-pipeline restores the
+  exact trajectory (judged against a chunked baseline — one-shot vs
+  chunked scans differ by the documented refusion wobble for momentum
+  methods), and a checkpoint written at depth K refuses to restore into
+  a simulator built with a different K.
+* The "external" sampler/fault shims let a host-side coordinator feed
+  cohorts and exclusions through the standard Horvitz-Thompson machinery;
+  they validate their slot counts at construction.
+* The serve control plane (ClientQueue, AdmissionPolicy registry,
+  Coordinator) is deterministic under a seed for the wall-clock-free
+  policies: a save/restore resumes the exact served trajectory, queue
+  trace and all.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import track
+from repro.fed import FLConfig, Simulator, Task, faults, sampling
+from repro.serve import (ClientQueue, Coordinator, get_policy,
+                         make_serve_config, registered_policies,
+                         resolve_opts)
+
+M, N_MAX, POOL = 12, 8, 64
+
+
+def _maxdiff(a, b):
+    return max((float(jnp.max(jnp.abs(x - y)))
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))),
+               default=0.0)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(0)
+    data = dict(
+        images=rng.standard_normal((POOL, 3)).astype(np.float32),
+        labels=rng.integers(0, 2, POOL).astype(np.int32),
+        client_idx=rng.integers(0, POOL, (M, N_MAX)).astype(np.int32),
+        client_sizes=np.full((M,), N_MAX, np.int32))
+    task = Task(loss=lambda p, b: jnp.mean(
+        (b["images"] @ p["w"] + p["b"] - b["labels"]) ** 2))
+    return task, data
+
+
+def _sim(toy, method="fedavg", staleness=0, cohort=4, seed=0, mesh=None,
+         tracker=None, **opts):
+    task, data = toy
+    params = dict(w=jnp.zeros((3,), jnp.float32),
+                  b=jnp.zeros((), jnp.float32))
+    fl = FLConfig.make(method=method, n_clients=M, cohort=cohort, k_micro=2,
+                       micro_batch=4, server_lr=0.5, local_epochs=1,
+                       staleness=staleness, **opts)
+    return Simulator(task, params, data, fl, seed=seed, mesh=mesh,
+                     tracker=tracker)
+
+
+# ------------------------- depth-K pipeline semantics -------------------------
+
+def _unrolled(sim, n, k):
+    """Eager client/server reference for the depth-k ring: issue at r,
+    apply at r+k, FIFO."""
+    params, state, ring = sim.params, sim._get_state(), []
+    for i in range(n):
+        key = jax.random.fold_in(sim.base_key, i)
+        new_pending = sim._client_section(params, state, key)
+        if len(ring) == k:
+            params, state, _ = sim._server_section(
+                params, state, ring.pop(0), jnp.int32(i + 1))
+        ring.append(new_pending)
+    return params
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_depth_k_matches_unrolled_reference(toy, k):
+    sim = _sim(toy, staleness=k)
+    ref = _unrolled(_sim(toy, staleness=k), 6, k)
+    sim.run_rounds(6)
+    assert _maxdiff(sim.params, ref) == 0.0
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_warmup_bubbles_emit_zero_diags(toy, k):
+    sim = _sim(toy, staleness=k)
+    diags = sim.run_rounds(k + 3)
+    an = np.asarray(diags["agg_norm"])
+    assert np.all(an[:k] == 0.0), an          # K warmup bubbles
+    assert np.all(an[k:] > 0.0), an           # then every cohort applies
+
+
+@pytest.mark.parametrize("method", ["fedavg", "fedncv"])
+@pytest.mark.parametrize("k", [0, 1, 2, 3])
+def test_host_store_matches_device_store(toy, method, k):
+    """The host dispatch loop's ring and the in-jit ring are the same
+    pipeline at every depth — including the untouched K=0/K=1 paths."""
+    sa = _sim(toy, method=method, staleness=k)
+    sb = _sim(toy, method=method, staleness=k, store="host",
+              store_opts=dict(prefetch=False))
+    sa.run_rounds(5)
+    sb.run_rounds(5)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+
+
+def test_depth_k_chunked_parity(toy):
+    """Chunked driving carries the ring across calls: 5+3 == 8."""
+    sa = _sim(toy, staleness=3)
+    sb = _sim(toy, staleness=3)
+    sa.run_rounds(8)
+    sb.run_rounds(5)
+    sb.run_rounds(3)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+
+
+def test_depth_k_with_faults_and_importance_sampler(toy):
+    """K=2 x honest dropout x non-uniform sampler: the HT weights flow
+    through the pipelined server half — finite trajectory, live rounds
+    after warmup, and the ring keeps the invp tables with the cohort."""
+    sim = _sim(toy, method="fedncv", staleness=2, fault="dropout",
+               fault_opts=dict(drop_rate=0.3), sampler="importance",
+               tracker=track.make_tracker("memory"))
+    diags = sim.run_rounds(8)
+    for v in jax.tree.leaves(sim.params) + list(diags.values()):
+        assert np.all(np.isfinite(np.asarray(v)))
+    live = np.asarray(diags["live"])
+    assert np.all(live[:2] == 0.0) and np.any(live[2:] > 0.0)
+    rows = sim.tracker.rows
+    assert [r["round"] for r in rows] == list(range(1, 9))
+
+
+# --------------------- pending-ring checkpoint round-trip ---------------------
+
+@pytest.mark.parametrize("store", ["device", "host"])
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_ckpt_roundtrip_mid_pipeline(toy, tmp_path, store, k):
+    """Save with K cohorts in flight; the restored run must continue the
+    exact chunked trajectory (baseline is chunked the same way — one-shot
+    scans refuse differently for momentum methods)."""
+    from repro.checkpoint import read_meta, restore_sim, save_sim
+    kw = dict(store="host", store_opts=dict(prefetch=False)) \
+        if store == "host" else {}
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(toy, method="fedncv", staleness=k, **kw)
+    sa.run_rounds(4)
+    save_sim(ckdir, sa)
+    meta = read_meta(ckdir)
+    assert meta["staleness"] == k
+    assert meta["pipeline_inflight"] >= 1
+    sa.run_rounds(3)
+    sb = _sim(toy, method="fedncv", staleness=k, **kw)
+    restore_sim(ckdir, sb)
+    assert sb.round_idx == 4
+    sb.run_rounds(3)
+    assert _maxdiff(sa.params, sb.params) == 0.0
+
+
+def test_ckpt_refuses_staleness_mismatch(toy, tmp_path):
+    from repro.checkpoint import restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    sa = _sim(toy, staleness=2)
+    sa.run_rounds(3)
+    save_sim(ckdir, sa)
+    with pytest.raises(ValueError, match="staleness"):
+        restore_sim(ckdir, _sim(toy, staleness=1))
+
+
+# ------------------------------ external shims --------------------------------
+
+def test_external_shims_validate_slot_counts():
+    smp = sampling.get_sampler("external")
+    fm = faults.get_fault("external")
+    with pytest.raises(ValueError):
+        sampling.resolve_opts(smp, {})        # ext_cohort defaults to 0
+    with pytest.raises(ValueError):
+        faults.resolve_opts(fm, dict(ext_slots=0))
+    assert sampling.resolve_opts(smp, dict(ext_cohort=4))["ext_cohort"] == 4
+
+
+def test_make_serve_config_forces_external(toy):
+    fl = make_serve_config(method="fedavg", n_clients=M, cohort=4,
+                           k_micro=2, micro_batch=4, server_lr=0.5)
+    assert fl.sampler == "external" and fl.fault == "external"
+    assert fl.sampler_opts["ext_cohort"] == 4
+    assert fl.fault_opts["ext_slots"] == 4
+
+
+# --------------------------- admission policy registry ------------------------
+
+def test_policy_registry_roster():
+    assert registered_policies() == ("adaptive", "fixed", "token_bucket")
+    with pytest.raises(KeyError, match="registered"):
+        get_policy("nope")
+    with pytest.raises(TypeError, match="tb_rate"):
+        resolve_opts(get_policy("fixed"), dict(tb_rate=1.0))
+    with pytest.raises(ValueError):
+        resolve_opts(get_policy("adaptive"), dict(ad_shrink=1.5))
+
+
+def _stats(**kw):
+    base = dict(queue_depth=10, cohort_max=4, last_round_s=0.0,
+                target_round_s=2.0)
+    base.update(kw)
+    return base
+
+
+def test_fixed_policy_admits_min_of_depth_and_cohort():
+    pol = get_policy("fixed")
+    opts = resolve_opts(pol, None)
+    assert pol.admit(opts, {}, _stats())[0] == 4
+    assert pol.admit(opts, {}, _stats(queue_depth=2))[0] == 2
+
+
+def test_token_bucket_rate_limits():
+    pol = get_policy("token_bucket")
+    opts = resolve_opts(pol, dict(tb_rate=1.0, tb_burst=3.0))
+    state = pol.init(opts)
+    admitted = []
+    for _ in range(5):
+        n, state = pol.admit(opts, state, _stats())
+        admitted.append(n)
+    # the initial burst (refill caps at tb_burst), then the 1/round rate
+    assert admitted == [3, 1, 1, 1, 1]
+
+
+def test_adaptive_policy_aimd():
+    pol = get_policy("adaptive")
+    opts = resolve_opts(pol, dict(ad_shrink=0.5, ad_grow=1.0, ad_min=1))
+    state = pol.init(opts)
+    n, state = pol.admit(opts, state, _stats())          # starts at max
+    assert n == 4
+    n, state = pol.admit(opts, state, _stats(last_round_s=9.0))  # miss
+    assert n == 2
+    n, state = pol.admit(opts, state, _stats())          # grow under load
+    assert n == 3
+
+
+# --------------------------------- ClientQueue --------------------------------
+
+def test_queue_fifo_and_departures():
+    q = ClientQueue(M, avail="none", checkin_rate=1.0, seed=0)
+    q.tick()
+    assert q.depth == M                       # everyone checks in
+    first = q.admit(3)
+    assert len(first) == 3 and q.depth == M - 3
+    assert q.admit(0) == []
+    # "none" availability never departs anyone; the 3 served clients
+    # check straight back in (rate 1.0) and rejoin BEHIND the 9 waiting
+    q.tick()
+    assert q.depth == M
+    assert set(q.admit(M)[-3:]) == set(first)
+
+
+def test_queue_markov_availability_is_seeded():
+    qa = ClientQueue(M, avail="markov", checkin_rate=0.5, seed=7)
+    qb = ClientQueue(M, avail="markov", checkin_rate=0.5, seed=7)
+    for _ in range(5):
+        assert qa.tick() == qb.tick()
+        assert qa.admit(2) == qb.admit(2)
+    assert 0.0 <= qa.available_frac <= 1.0
+
+
+def test_queue_survival_closed_form():
+    q = ClientQueue(M, avail="none", lat_mean=0.5, lat_skew=0.5, seed=0)
+    ids = np.arange(M)
+    s = q.survival(ids, 1.0)
+    assert np.allclose(s, 1.0 - np.exp(-1.0 / q._mu))
+    assert np.all(q.latencies(ids) >= 0.0)
+
+
+def test_queue_state_roundtrip():
+    qa = ClientQueue(M, avail="markov", checkin_rate=0.6, seed=3)
+    for _ in range(3):
+        qa.tick()
+    sd = json.loads(json.dumps(qa.state_dict()))    # must survive json
+    qb = ClientQueue(M, avail="markov", checkin_rate=0.6, seed=3)
+    qb.load_state_dict(sd)
+    for _ in range(4):
+        assert qa.tick() == qb.tick()
+        assert qa.admit(2) == qb.admit(2)
+
+
+# --------------------------------- Coordinator --------------------------------
+
+def _coord(toy, seed=0, policy="token_bucket", staleness=1, **kw):
+    task, data = toy
+    params = dict(w=jnp.zeros((3,), jnp.float32),
+                  b=jnp.zeros((), jnp.float32))
+    fl = make_serve_config(method="fedncv", n_clients=M, cohort=4,
+                           k_micro=2, micro_batch=4, server_lr=0.5,
+                           staleness=staleness, local_epochs=1)
+    sim = Simulator(task, params, data, fl, seed=seed, **kw)
+    queue = ClientQueue(M, avail="markov", checkin_rate=0.7, lat_mean=0.5,
+                        lat_skew=0.5, seed=seed)
+    return Coordinator(sim, queue, policy=policy, deadline_s=1.5)
+
+
+def test_coordinator_requires_external_shims(toy):
+    with pytest.raises(ValueError, match="external"):
+        Coordinator(_sim(toy), ClientQueue(M))
+    with pytest.raises(ValueError, match="clients"):
+        task, data = toy
+        fl = make_serve_config(method="fedavg", n_clients=M, cohort=4,
+                               k_micro=2, micro_batch=4, server_lr=0.5)
+        sim = Simulator(task, dict(w=jnp.zeros((3,), jnp.float32),
+                                   b=jnp.zeros((), jnp.float32)),
+                        data, fl, seed=0)
+        Coordinator(sim, ClientQueue(M + 1))
+
+
+def test_coordinator_steps_and_metrics(toy):
+    c = _coord(toy, tracker=track.make_tracker("memory"))
+    for _ in range(6):
+        out = c.step()
+        for key in ("queue_depth", "checkins", "admitted", "rejected",
+                    "cohort_size", "deadline_miss_frac"):
+            assert key in out
+    assert np.all(np.isfinite(np.asarray(c.sim.params["w"])))
+    # queue columns ride the streamed rows (set_host_metrics merge)
+    assert all("admitted" in r and "queue_depth" in r
+               for r in c.sim.tracker.rows)
+    # drain flushes exactly the K in-flight cohorts with bubble rounds
+    drained = c.drain()
+    assert len(drained) == c.sim.fl.staleness
+    assert all(d["admitted"] == 0.0 for d in drained)
+
+
+def test_coordinator_uniform_world_admission_invp_is_one(toy):
+    c = _coord(toy)
+    invp = c._admission_invp(list(range(4)))
+    assert np.allclose(invp, 1.0)
+
+
+def test_coordinator_save_restore_exact_trajectory(toy, tmp_path):
+    """token_bucket is wall-clock-free, so a restored coordinator replays
+    the served trajectory bit-for-bit (params, queue trace, policy
+    state).  The adaptive policy is wall-clock-driven by design and is
+    NOT covered by this guarantee."""
+    dd = str(tmp_path)
+    a = _coord(toy, seed=3)
+    for _ in range(4):
+        a.step()
+    a.save(dd)
+    for _ in range(4):
+        a.step()
+    b = _coord(toy, seed=3)
+    b.restore(dd)
+    for _ in range(4):
+        b.step()
+    assert _maxdiff(a.sim.params, b.sim.params) == 0.0
+    qa, qb = a.queue.state_dict(), b.queue.state_dict()
+    assert qa["tick_idx"] == qb["tick_idx"] and qa["queued"] == qb["queued"]
+    assert a.pstate == b.pstate
+
+
+def test_coordinator_restore_refuses_policy_mismatch(toy, tmp_path):
+    dd = str(tmp_path)
+    a = _coord(toy, policy="fixed")
+    a.step()
+    a.save(dd)
+    with pytest.raises(ValueError, match="fixed"):
+        _coord(toy, policy="token_bucket").restore(dd)
+
+
+# ----------------------------------- mesh -------------------------------------
+
+def test_mesh_depth2_matches_single_device(toy):
+    """The ring carry shards like any scan carry: a K=2 pipelined run on
+    the cohort mesh tracks the single-device trajectory (multidevice CI
+    runs this against 8 forced host devices)."""
+    from repro.sharding import cohort_mesh
+    sa = _sim(toy, staleness=2)
+    sb = _sim(toy, staleness=2, mesh=cohort_mesh())
+    sa.run_rounds(5)
+    sb.run_rounds(5)
+    assert _maxdiff(sa.params, sb.params) < 1e-5

@@ -221,21 +221,24 @@ def test_async_chunked_equals_oneshot():
     assert _maxdiff(sa.params, sc.params) == 0.0
 
 
-def test_async_restore_drops_inflight_round(tmp_path):
-    """restore_sim into an async sim that kept running discards the
-    pending cohort: the restored run restarts with a fresh bubble instead
-    of applying a stale update from the pre-restore trajectory."""
+def test_async_restore_preserves_inflight_round(tmp_path):
+    """restore_sim into an async sim that kept running rewinds the pending
+    cohort to the one that was in flight at save time (the checkpoint
+    carries the pipeline ring, DESIGN.md §12.4): the restored run resumes
+    mid-pipeline — no fresh warmup bubble, no lost round — and follows the
+    saved trajectory exactly."""
     from repro.checkpoint import restore_sim, save_sim
     ckdir = os.path.join(str(tmp_path), "ck")
     sa, _ = _tiny_sim(staleness=1)
     sa.run_rounds(3)
-    save_sim(ckdir, sa)
-    sa.run_rounds(4)              # sa._pending now holds an in-flight round
+    save_sim(ckdir, sa)           # round 3's cohort is in flight
+    sa.run_rounds(4)
     restore_sim(ckdir, sa)
-    assert sa._pending is None and float(sa._valid) == 0.0
+    assert sa._pending is not None and float(sa._valid) == 1.0
     sa.run_rounds(4)
     sb, _ = _tiny_sim(staleness=1)
     restore_sim(ckdir, sb)
+    assert sb._pending is not None and float(sb._valid) == 1.0
     sb.run_rounds(4)
     assert _maxdiff(sa.params, sb.params) == 0.0
 

@@ -37,6 +37,12 @@ EMA_BETA = 0.9
 # peak-RSS telemetry (fed/store.py §11) is unreadable in raw bytes
 DISPLAY_GIB = {"host_mem_peak": "host_mem_peak_gib"}
 
+# serve-coordinator control-plane columns (repro.serve, DESIGN.md §12):
+# rendered as their own block below the training metrics, with a derived
+# admission-rate line
+SERVE_KEYS = ("queue_depth", "checkins", "admitted", "rejected",
+              "cohort_size", "deadline_miss_frac")
+
 
 def read_rows(path: str):
     """(data_rows, summary, bad_lines): tolerant reader for a live file —
@@ -95,13 +101,7 @@ def fmt(v) -> str:
     return f"{v:.4g}"
 
 
-def render(path: str, rows, summary) -> str:
-    out = [f"{path}  —  {len(rows)} rounds"
-           + (f"  (last: round {rows[-1]['round']})" if rows else "")]
-    if not rows:
-        return "\n".join(out + ["  (no rows yet)"])
-    keys = sorted(k for k in rows[-1] if k != "round"
-                  and isinstance(rows[-1][k], (int, float)))
+def _metric_table(rows, keys, out):
     labels = [DISPLAY_GIB.get(k, k) for k in keys]
     w = max((len(k) for k in labels), default=4)
     out.append(f"  {'metric':<{w}}  {'last':>10}  {'ema':>10}  "
@@ -114,20 +114,46 @@ def render(path: str, rows, summary) -> str:
                    f"{fmt(ema(hist)):>10}  "
                    f"{fmt(min(hist)):>10}  {fmt(max(hist)):>10}  "
                    f"{sparkline(hist)}")
+
+
+def render(path: str, rows, summary) -> str:
+    out = [f"{path}  —  {len(rows)} rounds"
+           + (f"  (last: round {rows[-1]['round']})" if rows else "")]
+    if not rows:
+        return "\n".join(out + ["  (no rows yet)"])
+    keys = sorted(k for k in rows[-1] if k != "round"
+                  and isinstance(rows[-1][k], (int, float)))
+    serve_keys = [k for k in SERVE_KEYS if k in keys]
+    _metric_table(rows, [k for k in keys if k not in SERVE_KEYS], out)
+    if serve_keys:
+        out.append("  — serve —")
+        _metric_table(rows, serve_keys, out)
+        adm = sum(r.get("admitted", 0) for r in rows)
+        chk = sum(r.get("checkins", 0) for r in rows)
+        if chk:
+            out.append(f"  admitted {adm:g} of {chk:g} check-ins "
+                       f"({100.0 * adm / chk:.1f}%)")
     if summary is not None:
         out.append("  summary: " + json.dumps(summary, sort_keys=True))
     return "\n".join(out)
 
 
 def check(path: str, rows, summary, bad, tail, expect_rounds=None,
-          max_host_mem_gb=None, min_overlap=None) -> int:
+          max_host_mem_gb=None, min_overlap=None, max_deadline_miss=None,
+          min_cohort=None) -> int:
     """CI gate: 0 = well-formed, 1 = first violation printed to stderr.
 
     `--max-host-mem-gb` bounds every row's host_mem_peak (the host-store
     memory ceiling must not creep); `--min-overlap` requires the run's
     best prefetch_overlap_frac to reach the bound (the staging pipeline
     must actually hide host work — early rounds report 0 while the
-    pipeline fills, so the max over rows is judged, not each row)."""
+    pipeline fills, so the max over rows is judged, not each row).
+
+    Serve-soak bounds (repro.serve rows): `--max-deadline-miss` bounds the
+    MEAN deadline_miss_frac over the run (one unlucky round must not fail
+    the soak, a systematically missed deadline must); `--min-cohort`
+    requires the run's best cohort_size to reach the bound (warmup bubbles
+    and drain rounds serve 0 by construction, so the max is judged)."""
     def fail(msg):
         print(f"flwatch: {path}: {msg}", file=sys.stderr)
         return 1
@@ -167,6 +193,25 @@ def check(path: str, rows, summary, bad, tail, expect_rounds=None,
         if max(fracs) < min_overlap:
             return fail(f"prefetch_overlap_frac peaked at {max(fracs):.3f},"
                         f" below the {min_overlap:g} bound")
+    if max_deadline_miss is not None:
+        miss = [r["deadline_miss_frac"] for r in rows
+                if isinstance(r.get("deadline_miss_frac"), (int, float))]
+        if not miss:
+            return fail("--max-deadline-miss given but no row carries "
+                        "deadline_miss_frac (not a serve run?)")
+        mean = sum(miss) / len(miss)
+        if mean > max_deadline_miss:
+            return fail(f"mean deadline_miss_frac {mean:.3f} exceeds the "
+                        f"{max_deadline_miss:g} bound")
+    if min_cohort is not None:
+        sizes = [r["cohort_size"] for r in rows
+                 if isinstance(r.get("cohort_size"), (int, float))]
+        if not sizes:
+            return fail("--min-cohort given but no row carries "
+                        "cohort_size (not a serve run?)")
+        if max(sizes) < min_cohort:
+            return fail(f"cohort_size peaked at {max(sizes):g}, below the "
+                        f"{min_cohort:g} bound")
     print(f"flwatch: {path}: OK — {len(rows)} rounds, monotone index"
           + (", summary present" if summary is not None else ""))
     return 0
@@ -189,6 +234,12 @@ def main(argv=None) -> int:
     ap.add_argument("--min-overlap", type=float, default=None,
                     help="with --check: fail if prefetch_overlap_frac "
                          "never reaches this bound")
+    ap.add_argument("--max-deadline-miss", type=float, default=None,
+                    help="with --check: fail if the mean "
+                         "deadline_miss_frac exceeds this bound")
+    ap.add_argument("--min-cohort", type=float, default=None,
+                    help="with --check: fail if cohort_size never "
+                         "reaches this bound")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.path):
@@ -200,7 +251,9 @@ def main(argv=None) -> int:
         return check(args.path, rows, summary, bad, tail,
                      expect_rounds=args.expect_rounds,
                      max_host_mem_gb=args.max_host_mem_gb,
-                     min_overlap=args.min_overlap)
+                     min_overlap=args.min_overlap,
+                     max_deadline_miss=args.max_deadline_miss,
+                     min_cohort=args.min_cohort)
 
     last = None
     while True:
