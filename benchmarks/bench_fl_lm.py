@@ -1,0 +1,161 @@
+"""Federated LM fine-tuning cost sheet: llama-100m rounds over codecs
+and mesh layouts (DESIGN.md §13).
+
+Two sections:
+
+* ``fl_lm_bytes`` — the uplink byte layout of every wire codec on the
+  REAL llama-100m parameter spec, computed from the codec's deterministic
+  wire format (`bytes_per_client`) without allocating the model.  The
+  acceptance bar (ISSUE 10): lowrank r=16 cuts bytes_up >= 10x vs the
+  f32 identity path on this spec.
+* ``fl_lm`` — measured rounds/s of `fed.distributed.make_round` for the
+  codec x mesh matrix {identity, int8, lowrank r in {4,16,64}} x
+  {1-D fed_mesh(4,1), 2-D fed_mesh(4,2)}, one subprocess per mesh (the
+  host device count is fixed at first jax init, like the scalability
+  sweep).  FAST mode times the CI-sized llama-smoke twin; BENCH_FAST=0
+  times llama-100m itself.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+
+CODEC_MATRIX = [("identity", {}), ("int8", {}),
+                ("lowrank_r4", dict(rank=4)),
+                ("lowrank_r16", dict(rank=16)),
+                ("lowrank_r64", dict(rank=64))]
+MESHES = ["4", "4x2"]
+ROUNDS = 3 if FAST else 5
+
+
+def _codec_name(tag: str) -> str:
+    return tag.split("_")[0]
+
+
+def _build_codec(tag: str, opts, spec):
+    from repro import comm
+    n = sum(spec.sizes)
+    return comm.get_codec(_codec_name(tag), n=n, spec=spec, **opts)
+
+
+def _lm_cfg():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    import train_lm
+    return train_lm.model_100m() if not FAST else train_lm.model_smoke()
+
+
+def bytes_section():
+    """Uplink bytes on the real llama-100m spec — shape-only, no params."""
+    import jax
+
+    from repro.models import api
+    from repro.utils.tree_math import flat_spec
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    import train_lm
+    cfg = train_lm.model_100m()
+    shapes = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    spec = flat_spec(shapes, stacked=False)
+    n = sum(spec.sizes)
+    f32 = 4 * n
+    for tag, opts in CODEC_MATRIX:
+        codec = _build_codec(tag, opts, spec)
+        b = codec.bytes_per_client()
+        print(f"fl_lm_bytes,llama-100m,{tag},bytes_up={b},"
+              f"x_vs_f32={f32 / b:.2f}", flush=True)
+    print("# acceptance: the lowrank_r16 row holds x_vs_f32 >= 10 "
+          "(checked by run.py --smoke)")
+
+
+def worker(mesh_spec: str):
+    """Timed rounds for every codec on one mesh (runs in a subprocess
+    with the forced device count)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fed import api as fed_api
+    from repro.fed import MethodConfig, Task
+    from repro.fed.distributed import init_distributed_state, make_round
+    from repro.models import api as models_api
+    from repro.utils.tree_math import flat_spec
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    import train_lm
+
+    cfg = _lm_cfg()
+    mesh, n_clients = train_lm._parse_mesh(mesh_spec)
+    if mesh.shape.get("model", 1) > 1:
+        cfg = cfg.replace(scan_layers=False)     # §13.1
+    k, b, seq = (2, 4, 64) if FAST else (1, 2, 128)
+    params = models_api.init_params(cfg, jax.random.PRNGKey(0))
+    spec = flat_spec(params, stacked=False)
+    task = Task(loss=lambda p, bt: models_api.loss(cfg, p, bt))
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (n_clients, k, b, seq), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(key, (n_clients, k, b, seq), 0,
+                                     cfg.vocab)}
+    n_u = jnp.asarray([float(seq * b * (1.0 + 0.25 * u))
+                       for u in range(n_clients)])
+    for tag, opts in CODEC_MATRIX:
+        codec = (None if tag == "identity"
+                 else _build_codec(tag, opts, spec))
+        mc = MethodConfig(name="fedncv", ncv_beta=0.5)
+        round_fn = make_round("fedncv", task, mesh, mc, server_lr=0.05,
+                              codec=codec)
+        state = init_distributed_state(fed_api.get_method("fedncv"),
+                                       params, task, mc,
+                                       n_clients=n_clients, codec=codec)
+        p, s = params, state
+        seeds = ((jnp.arange(n_clients, dtype=jnp.uint32),)
+                 if codec is not None else ())
+        p, s, m = round_fn(p, s, batch, n_u, jnp.int32(0), *seeds)
+        jax.block_until_ready(p)                 # warmup + compile
+        t0 = time.time()
+        for r in range(ROUNDS):
+            p, s, m = round_fn(p, s, batch, n_u, jnp.int32(r + 1), *seeds)
+        jax.block_until_ready(p)
+        dt = (time.time() - t0) / ROUNDS
+        bytes_up = float(m["bytes_up"]) if "bytes_up" in m \
+            else 4.0 * sum(spec.sizes) * n_clients
+        print(f"fl_lm,{cfg.name},{mesh_spec},{tag},bytes_up={bytes_up:.0f},"
+              f"sec_per_round={dt:.3f},rounds_per_s={1.0 / dt:.3f}",
+              flush=True)
+
+
+def main():
+    print(f"# fl_lm: llama federated rounds, codec x mesh "
+          f"(rounds={ROUNDS}, FAST={FAST})")
+    bytes_section()
+    for mesh_spec in MESHES:
+        n_dev = 8 if "x" in mesh_spec else 4
+        env = dict(os.environ,
+                   XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                              + f" --xla_force_host_platform_device_count"
+                                f"={n_dev}").strip(),
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH=os.pathsep.join(
+                       p for p in [os.path.join(os.getcwd(), "src"),
+                                   os.environ.get("PYTHONPATH", "")] if p))
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_fl_lm", "--worker",
+             mesh_spec],
+            capture_output=True, text=True, env=env, cwd=os.getcwd())
+        sys.stdout.write(out.stdout)
+        if out.returncode != 0:
+            sys.stderr.write(out.stderr)
+            raise RuntimeError(f"fl_lm worker failed on mesh {mesh_spec}")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        worker(sys.argv[2])
+    else:
+        main()

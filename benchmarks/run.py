@@ -30,6 +30,7 @@ BENCHES = [
     ("sampling", "benchmarks.bench_sampling"),     # cohort samplers (§8)
     ("faults", "benchmarks.bench_faults"),         # fault tolerance (§9)
     ("serve", "benchmarks.bench_serve"),           # round service (§12)
+    ("fl_lm", "benchmarks.bench_fl_lm"),           # fed LM x mesh (§13)
 ]
 
 # benches whose BENCH_<name>.json must exist for the smoke gate to pass
@@ -38,7 +39,7 @@ BENCHES = [
 # host<->device staging term (fed/store.py §11) — both registry/row
 # checked below, so they must be present, not merely well-formed.
 REQUIRED_BENCHES = {"fl_table1_fig1", "sampling", "faults",
-                    "scalability_fig2", "roofline", "serve"}
+                    "scalability_fig2", "roofline", "serve", "fl_lm"}
 
 # per-row numeric fields the --compare perf gate guards: relative slack
 # allowed before the diff counts as a regression, and the direction that
@@ -238,6 +239,33 @@ def _check_serve_rows(payload) -> None:
                          f"serve bench: {missing}")
 
 
+def _check_fl_lm_rows(payload) -> None:
+    """BENCH_fl_lm.json must carry the llama-100m uplink byte sheet for
+    the full codec matrix, with the ISSUE-10 acceptance bar: lowrank r=16
+    records >= 10x fewer uploaded bytes than the f32 identity path.  It
+    must also carry measured fl_lm timing rows for both the 1-D and 2-D
+    mesh layouts (DESIGN.md §13)."""
+    ratios = {}
+    for r in payload["rows"]:
+        if r["name"] != "fl_lm_bytes" or len(r["fields"]) < 2:
+            continue
+        tag = r["fields"][1]
+        for f in r["fields"]:
+            if f.startswith("x_vs_f32="):
+                ratios[tag] = float(f.partition("=")[2])
+    want = {"identity", "int8", "lowrank_r4", "lowrank_r16", "lowrank_r64"}
+    missing = sorted(want - set(ratios))
+    assert not missing, f"fl_lm_bytes rows missing codecs: {missing}"
+    assert ratios["lowrank_r16"] >= 10.0, (
+        f"lowrank r=16 compresses only {ratios['lowrank_r16']:.1f}x on "
+        f"llama-100m — the acceptance bar is >= 10x vs identity")
+    meshes = {r["fields"][1] for r in payload["rows"]
+              if r["name"] == "fl_lm" and len(r["fields"]) >= 2}
+    assert {"4", "4x2"} <= meshes, (
+        f"fl_lm timing rows must cover the 1-D and 2-D meshes; "
+        f"found {sorted(meshes)}")
+
+
 def _row_index(payload):
     """Rows keyed by (name, *identity fields); numeric ``k=v`` fields
     parsed out per row.  Identity = the fields without '='."""
@@ -383,6 +411,8 @@ def smoke() -> None:
                 _check_roofline_rows(payload)
             if payload["bench"] == "serve":
                 _check_serve_rows(payload)
+            if payload["bench"] == "fl_lm":
+                _check_fl_lm_rows(payload)
             print(f"smoke:{os.path.basename(path)},ok,"
                   f"{len(payload['rows'])} rows", flush=True)
         except Exception as e:

@@ -1,0 +1,20 @@
+"""repro — FedNCV (networked control variates) on a jax/pallas substrate.
+
+One process-wide configuration lives here so every entry point (tests,
+examples, benchmarks, repro.launch) agrees on it:
+
+jax_threefry_partitionable = True.  The legacy (non-partitionable)
+threefry lowering is NOT sharding-stable: the same `jax.random` call
+compiled into a graph that also contains a 2-d-mesh consumer (the fed
+simulator's shard_map client section, DESIGN.md §13) can return
+*different bits* than the identical call compiled alone, because GSPMD
+partitions the generator computation differently.  That breaks the
+repo's standing mesh-parity contract (single-device and mesh runs of
+one config produce one trajectory).  The partitionable implementation
+is value-stable under any sharding — the contract the parity tests pin.
+It is a different stream than the legacy lowering, so it must be set
+once, globally, before any key is consumed — not per-simulator.
+"""
+import jax as _jax
+
+_jax.config.update("jax_threefry_partitionable", True)

@@ -144,6 +144,12 @@ def save_sim(directory: str, sim, meta=None, keep: int = 3):
                   aggregator=sim.fl.aggregator, fault=sim.fl.fault,
                   store=sim.fl.store, staleness=sim.fl.staleness,
                   state_keys=sorted(state))
+    # mesh layout is recorded for provenance only: the mesh-parity
+    # contract (DESIGN.md §6, §13) makes the trajectory placement-
+    # independent, so a 2-d-mesh checkpoint restores onto any mesh
+    # (including none) and continues identically
+    if getattr(sim, "mesh", None) is not None:
+        meta_d["mesh"] = {str(k): int(v) for k, v in sim.mesh.shape.items()}
     pipe = sim.pipeline_state() if hasattr(sim, "pipeline_state") else None
     if pipe is not None:
         tree["pipeline"] = pipe

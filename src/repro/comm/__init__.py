@@ -15,8 +15,8 @@ from __future__ import annotations
 import jax
 
 from repro.comm.codecs import (  # noqa: F401
-    CODECS, BF16Codec, Codec, Int4Codec, Int8Codec, TopKCodec,
-    compression_ratio, get_codec,
+    CODECS, BF16Codec, Codec, Int4Codec, Int8Codec, LowRankCodec, TopKCodec,
+    compression_ratio, get_codec, validate_codec_opts,
 )
 from repro.utils.tree_math import FlatSpec, unravel
 

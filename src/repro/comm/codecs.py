@@ -43,10 +43,22 @@ Codecs (DESIGN.md §5):
   compression error contracts: ||x - decode(encode(x))||^2 <=
   (1 - k/N) ||x||^2.  The residual is new per-client state, carried through
   the simulator's scan and checkpointing exactly like `alphas`.
+* ``lowrank``  — rank-r factorization of every matrix-shaped leaf
+  (DESIGN.md §13.2): a (p, q) gradient block uploads U (p, r) and
+  V (q, r) with X ~ U V^T from warm-started subspace (power) iteration —
+  PowerSGD-style — so bytes_up is O(r (p + q)), independent of cohort
+  size and nearly independent of N for square-ish leaves.  X_hat =
+  U U^T X is an orthogonal projection, so the per-step error never
+  exceeds ||X||_F, and the per-client EF residual re-injects the
+  projected-out mass next round exactly like topk.  The warm bases V
+  ride the same per-client state as the residual (one packed vector),
+  so the iteration tracks the slowly-rotating top subspace across
+  rounds.  Non-matrix leaves (norms, biases, scalars) ship dense f32.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +70,13 @@ class Codec:
     n: int
     name = "identity"
     stateful = False
+    options = ()        # construction options FLConfig.make may route here
+
+    @classmethod
+    def validate_opts(cls, opts: dict):
+        """Value-level option validation (FLConfig construction time —
+        no N needed): subclasses override to reject bad values loudly."""
+        del opts
 
     # -- per-client state (error-feedback residuals etc.) -------------------
     def init_state(self):
@@ -113,6 +132,7 @@ class Int8Codec(Codec):
     """Chunked-scale int8 with unbiased stochastic rounding."""
     chunk: int = 512
     name = "int8"
+    options = ("chunk",)
     qmax = 127.0                 # symmetric code range [-qmax, qmax]
 
     @property
@@ -128,7 +148,14 @@ class Int8Codec(Codec):
         grid, one scale = max|x|/qmax per chunk, q = floor(x/scale + u)
         with u ~ U[0,1) so E[q * scale] = x (unbiased).  Returns
         (q int32 (C, chunk), scales (C,))."""
-        x = jnp.pad(vec.astype(jnp.float32), (0, self.n_padded - self.n))
+        # zero-pad via dynamic_update_slice, not jnp.pad: the pad op on a
+        # model-sharded operand aborts the SPMD partitioner inside a
+        # partially-manual shard_map region (2-d fed mesh, DESIGN.md
+        # §13.1); the update-slice form lowers cleanly and is the same
+        # computation
+        x = jax.lax.dynamic_update_slice(
+            jnp.zeros(self.n_padded, jnp.float32),
+            vec.astype(jnp.float32), (0,))
         xc = x.reshape(self.n_chunks, self.chunk)
         scales = jnp.max(jnp.abs(xc), axis=1) / self.qmax
         scales = jnp.maximum(scales, 1e-12)
@@ -213,7 +240,14 @@ class TopKCodec(Codec):
     """Magnitude top-k with per-client error-feedback residual state."""
     ratio: float = 0.1
     name = "topk"
+    options = ("ratio",)
     stateful = True
+
+    @classmethod
+    def validate_opts(cls, opts: dict):
+        r = opts.get("ratio")
+        if r is not None and not 0.0 < float(r) <= 1.0:
+            raise ValueError(f"topk ratio must be in (0, 1], got {r!r}")
 
     @property
     def k(self) -> int:
@@ -244,19 +278,261 @@ class TopKCodec(Codec):
         return (4 + self.index_dtype.dtype.itemsize) * self.k
 
 
+@dataclasses.dataclass(frozen=True)
+class LowRankCodec(Codec):
+    """Rank-r factorization of every matrix-shaped leaf (DESIGN.md §13.2).
+
+    `shapes` is the per-leaf shape tuple of the upload's FlatSpec
+    (`utils.tree_math.flat_spec(params).shapes`) — the one piece of tree
+    structure the flat substrate needs back: which contiguous segments of
+    the (N,) vector are matrices.  A leaf with shape (..., p', q) is
+    factored as a (prod(...p'), q) matrix when rank (p + q) < p q (i.e.
+    the factors are actually smaller); everything else — biases, norms,
+    small heads — ships dense f32 in the `d` segment.
+
+    Per-client state (packed into one dict so it rides the EF
+    gather/scatter path unchanged):
+
+    * ``r`` (N,)  — error-feedback residual on the reconstruction gap.
+    * ``v`` (sum_m q_m r,) — warm-started right bases: one subspace
+      iteration per round from last round's V tracks the top-r subspace
+      across rounds (PowerSGD-style), so `iters=1` suffices in practice.
+
+    Encode: X = grad + residual; for each matrix, `iters` rounds of
+    U = qr(X V), V = X^T U; the wire carries (U, V) and the residual
+    keeps X - U V^T = (I - U U^T) X — an orthogonal projection, so the
+    per-step error is bounded by ||X||_F and EF re-injects it next round.
+    The HT/Eq. 10-12 weights are untouched: the server's weighted sum
+    runs straight off the factors (`weighted_sum` contracts
+    sum_u w_u U_u V_u^T without materializing per-client dense vectors),
+    so the codec composes with every sampler x fault x aggregator
+    exactly like topk (DESIGN.md §13.3).
+    """
+    rank: int = 8
+    iters: int = 1
+    shapes: tuple = ()
+    name = "lowrank"
+    options = ("rank", "iters")
+    stateful = True
+
+    def __post_init__(self):
+        if not isinstance(self.rank, int) or self.rank < 1:
+            raise ValueError(f"lowrank rank must be an int >= 1, "
+                             f"got {self.rank!r}")
+        if not isinstance(self.iters, int) or self.iters < 1:
+            raise ValueError(f"lowrank iters must be an int >= 1, "
+                             f"got {self.iters!r}")
+        total = 0
+        for s in self.shapes:
+            size = 1
+            for d in s:
+                size *= int(d)
+            total += size
+        if self.shapes and total != self.n:
+            raise ValueError(f"lowrank shapes sum to {total} params, "
+                             f"but n={self.n}")
+
+    @classmethod
+    def validate_opts(cls, opts: dict):
+        r = opts.get("rank")
+        if r is not None and (not isinstance(r, int) or r < 1):
+            raise ValueError(f"lowrank rank must be an int >= 1, got {r!r}")
+        it = opts.get("iters")
+        if it is not None and (not isinstance(it, int) or it < 1):
+            raise ValueError(f"lowrank iters must be an int >= 1, "
+                             f"got {it!r}")
+
+    @functools.cached_property
+    def _plan(self):
+        """Static factorization plan over the flat vector's segments.
+
+        Returns (mats, rest): mats = tuple of (flat_offset, p, q, u_off,
+        v_off) for factored segments; rest = tuple of (flat_offset, size)
+        for dense segments.  Without `shapes` the whole vector is one
+        dense segment (nothing to factor — an honest passthrough)."""
+        mats, rest = [], []
+        off = u_off = v_off = 0
+        r = self.rank
+        shapes = self.shapes if self.shapes else ((self.n,),)
+        for s in shapes:
+            size = 1
+            for d in s:
+                size *= int(d)
+            if len(s) >= 2:
+                q = int(s[-1])
+                p = size // q
+                if r * (p + q) < p * q:
+                    mats.append((off, p, q, u_off, v_off))
+                    u_off += p * r
+                    v_off += q * r
+                    off += size
+                    continue
+            rest.append((off, size))
+            off += size
+        return tuple(mats), tuple(rest)
+
+    @property
+    def _sizes(self):
+        mats, rest = self._plan
+        r = self.rank
+        n_u = sum(p * r for _, p, _, _, _ in mats)
+        n_v = sum(q * r for _, _, q, _, _ in mats)
+        n_d = sum(sz for _, sz in rest)
+        return n_u, n_v, n_d
+
+    def init_state(self):
+        _, n_v, _ = self._sizes
+        mats, _ = self._plan
+        # deterministic non-degenerate starting bases (qr normalizes, so
+        # any full-rank V works); per-matrix fold_in keeps leaves distinct
+        key = jax.random.PRNGKey(0x10A4)
+        vs = [jax.random.normal(jax.random.fold_in(key, i),
+                                (q * self.rank,), jnp.float32)
+              for i, (_, _, q, _, _) in enumerate(mats)]
+        v0 = jnp.concatenate(vs) if vs else jnp.zeros((0,), jnp.float32)
+        return dict(r=jnp.zeros((self.n,), jnp.float32), v=v0)
+
+    @staticmethod
+    def _orthonormalize(y, steps=12, eps=1e-6):
+        """Column-orthonormalize y (p, r) as y (y^T y)^{-1/2}, the inverse
+        square root by trace-normalized Newton-Schulz iteration.  Pure
+        matmuls on purpose: `jnp.linalg.qr`/`cholesky` lower to
+        LAPACK/cuSOLVER custom calls and Gram-Schmidt needs dynamically
+        indexed scans — both rejected by the SPMD partitioner inside a
+        partially-manual shard_map region (the 2-d fed mesh client
+        section, DESIGN.md §13.1); matmuls partition everywhere.  The
+        ridge keeps a rank-deficient y bounded (its dead directions come
+        out near-zero, not arbitrary unit vectors); whatever those
+        columns fail to carry stays in the EF residual."""
+        r = y.shape[1]
+        eye = jnp.eye(r, dtype=jnp.float32)
+        s = y.T @ y
+        c = jnp.trace(s) + eps                 # eigvals of s/c land in [0, 1]
+        s = s / c + eps * eye
+        yk, zk = s, eye
+        for _ in range(steps):
+            t = 0.5 * (3.0 * eye - zk @ yk)
+            yk = yk @ t
+            zk = t @ zk                        # zk -> (s/c)^{-1/2}
+        return (y @ zk) / jnp.sqrt(c)
+
+    def encode(self, vec, state=None, key=None):
+        del key
+        r = self.rank
+        mats, rest = self._plan
+        x = vec.astype(jnp.float32)
+        if state is not None:
+            x = x + state["r"]                    # re-inject projected mass
+        v_prev = state["v"] if state is not None \
+            else self.init_state()["v"]
+        us, vs, recon = [], [], []
+        for off, p, q, _, v_off in mats:
+            X = jax.lax.dynamic_slice_in_dim(x, off, p * q).reshape(p, q)
+            V = jax.lax.dynamic_slice_in_dim(v_prev, v_off,
+                                             q * r).reshape(q, r)
+            for _ in range(self.iters):
+                U = self._orthonormalize(X @ V)   # (p, r), orthonormal
+                V = X.T @ U                       # (q, r)
+            us.append(U.reshape(-1))
+            vs.append(V.reshape(-1))
+            recon.append((off, (U @ V.T).reshape(-1)))
+        ds = [jax.lax.dynamic_slice_in_dim(x, off, sz) for off, sz in rest]
+        wire = dict(
+            u=jnp.concatenate(us) if us else jnp.zeros((0,), jnp.float32),
+            v=jnp.concatenate(vs) if vs else jnp.zeros((0,), jnp.float32),
+            d=jnp.concatenate(ds) if ds else jnp.zeros((0,), jnp.float32))
+        residual = x
+        for off, xhat in recon:
+            seg = jax.lax.dynamic_slice_in_dim(residual, off, xhat.shape[0])
+            residual = jax.lax.dynamic_update_slice_in_dim(
+                residual, seg - xhat, off, axis=0)
+        for off, sz in rest:                      # dense segments ship exact
+            residual = jax.lax.dynamic_update_slice_in_dim(
+                residual, jnp.zeros((sz,), jnp.float32), off, axis=0)
+        return wire, dict(r=residual, v=wire["v"])
+
+    def decode(self, wire):
+        r = self.rank
+        mats, rest = self._plan
+        out = jnp.zeros((self.n,), jnp.float32)
+        for off, p, q, u_off, v_off in mats:
+            U = jax.lax.dynamic_slice_in_dim(wire["u"], u_off,
+                                             p * r).reshape(p, r)
+            V = jax.lax.dynamic_slice_in_dim(wire["v"], v_off,
+                                             q * r).reshape(q, r)
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, (U @ V.T).reshape(-1), off, axis=0)
+        d_off = 0
+        for off, sz in rest:
+            seg = jax.lax.dynamic_slice_in_dim(wire["d"], d_off, sz)
+            out = jax.lax.dynamic_update_slice_in_dim(out, seg, off, axis=0)
+            d_off += sz
+        return out
+
+    def bytes_per_client(self) -> int:
+        n_u, n_v, n_d = self._sizes
+        return 4 * (n_u + n_v + n_d)
+
+    def weighted_sum(self, wire, w, *, use_pallas):
+        """sum_u w_u g_u straight off the stacked factors: per matrix,
+        einsum('c,cpr,cqr->pq') — never materializes the (cohort, N)
+        dense stack the base implementation would."""
+        del use_pallas
+        r = self.rank
+        mats, rest = self._plan
+        agg = jnp.zeros((self.n,), jnp.float32)
+        for off, p, q, u_off, v_off in mats:
+            U = jax.lax.dynamic_slice_in_dim(
+                wire["u"], u_off, p * r, axis=1).reshape(-1, p, r)
+            V = jax.lax.dynamic_slice_in_dim(
+                wire["v"], v_off, q * r, axis=1).reshape(-1, q, r)
+            blk = jnp.einsum("c,cpr,cqr->pq", w, U, V)
+            agg = jax.lax.dynamic_update_slice_in_dim(
+                agg, blk.reshape(-1), off, axis=0)
+        d_agg = jnp.einsum("c,cd->d", w, wire["d"])
+        d_off = 0
+        for off, sz in rest:
+            seg = jax.lax.dynamic_slice_in_dim(d_agg, d_off, sz)
+            agg = jax.lax.dynamic_update_slice_in_dim(agg, seg, off, axis=0)
+            d_off += sz
+        return agg, jnp.sum(agg * agg)
+
+
 CODECS = {
     "identity": Codec,
     "bf16": BF16Codec,
     "int8": Int8Codec,
     "int4": Int4Codec,
     "topk": TopKCodec,
+    "lowrank": LowRankCodec,
 }
 
 
-def get_codec(name: str, n: int, **opts) -> Codec:
-    """Construct the codec `name` for an N-parameter upload vector."""
+def validate_codec_opts(name: str, opts: dict):
+    """Name + option validation without an N (FLConfig construction time):
+    unknown codec names, options the chosen codec would silently ignore,
+    and out-of-range values (rank <= 0, ratio outside (0, 1]) all raise
+    here, never at round time."""
     if name not in CODECS:
         raise KeyError(f"unknown codec '{name}'; have {sorted(CODECS)}")
+    cls = CODECS[name]
+    bad = sorted(set(opts) - set(cls.options))
+    if bad:
+        raise TypeError(
+            f"codec option(s) {bad} are not used by codec '{name}'; "
+            f"valid options: {sorted(cls.options)}")
+    cls.validate_opts(opts)
+
+
+def get_codec(name: str, n: int, spec=None, **opts) -> Codec:
+    """Construct the codec `name` for an N-parameter upload vector.
+
+    `spec` (a `utils.tree_math.FlatSpec`, optional) carries the upload's
+    per-leaf shapes to structure-aware codecs (`lowrank` factors matrix
+    leaves); flat codecs ignore it."""
+    validate_codec_opts(name, opts)
+    if name == "lowrank" and spec is not None:
+        opts = dict(opts, shapes=tuple(tuple(s) for s in spec.shapes))
     return CODECS[name](n=n, **opts)
 
 

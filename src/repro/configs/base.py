@@ -55,6 +55,11 @@ class ArchConfig:
     n_image_tokens: int = 1601           # stub vision-encoder output length
 
     # -- misc ---------------------------------------------------------------
+    # scan_layers=False unrolls the depth loop into straight-line HLO.
+    # Needed inside partially-manual shard_map regions (fed_mesh's auto
+    # "model" axis, DESIGN.md §13.1): the SPMD partitioner aborts on a
+    # lax.scan whose xs/carry leaves carry GSPMD shardings there.
+    scan_layers: bool = True
     tie_embeddings: bool = True
     dtype: str = "bfloat16"
     source: str = ""                     # citation for the assigned config

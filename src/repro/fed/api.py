@@ -119,12 +119,31 @@ class StateField:
                   computes the new per-client values itself (FedNCV's
                   alpha adaptation) leave this False and scatter inside
                   `server_update`.
+    federated_slice : optional (params, task, mc) -> 0/1 mask pytree (same
+                  structure as params) marking which parameter leaves the
+                  FEDERATED averaging covers.  Fields from several methods
+                  compose by product (`federated_mask`); the runtimes
+                  multiply every upload by the mask *before* the codec and
+                  hard-mask the aggregate after it (DESIGN.md §13.4), so
+                  per-layer/partial averaging survives lossy compression.
+                  None (the default) means the field doesn't restrict
+                  averaging.
+    pspec       : placement hint for the stacked per-client table (and the
+                  global instance) on a 2-d fed mesh (DESIGN.md §13.1).
+                  "params": leaves mirror the parameters' `param_spec`
+                  model sharding with the leading client dim sharded over
+                  the cohort axis — right for param-shaped tables (c_u,
+                  h, momentum) that would otherwise replicate a full
+                  model copy per client slot.  None: replicated (scalars,
+                  small vectors).
     """
     name: str
     per_client: bool
     init: tp.Callable
     cstate_key: str | None = None
     scatter: bool = False
+    federated_slice: tp.Callable | None = None
+    pspec: str | None = None
 
 
 def sgd_server(ctx: RoundCtx, params, agg, state):
@@ -255,6 +274,57 @@ def scatter_cohort_states(fields: tuple[StateField, ...], state, idx,
     return new
 
 
+def federated_mask(fields: tuple[StateField, ...], params, task, mc):
+    """Combined partial-averaging mask (DESIGN.md §13.4), or None.
+
+    The product of every declaring field's `federated_slice` mask — a 0/1
+    f32 pytree matching `params` — so independent restrictions (personal
+    heads, frozen embeddings) compose.  None when no field declares one,
+    which the runtimes treat as "average everything" with zero overhead.
+    """
+    mask = None
+    for f in fields:
+        if f.federated_slice is None:
+            continue
+        m = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                         f.federated_slice(params, task, mc))
+        mask = m if mask is None else jax.tree.map(
+            lambda a, b: a * b, mask, m)
+    return mask
+
+
+def with_federated_slice(client_fn, mask):
+    """Mask the upload *before* the codec sees it (DESIGN.md §13.4).
+
+    Masked-out leaves upload exact zeros, so a sparsifying/factorizing
+    codec spends its entire byte budget on the federated slice and EF
+    residuals never accumulate mass the server would discard.  The
+    server-side hard mask (`apply_federated_mask`) is the second half of
+    the contract: it kills any lossy-codec leakage into masked leaves.
+    """
+    def fn(ctx, params, cstate, batches, key):
+        out = client_fn(ctx, params, cstate, batches, key)
+        grad = jax.tree.map(lambda g, m: g * m.astype(g.dtype),
+                            out.grad, mask)
+        return out._replace(grad=grad)
+    return fn
+
+
+def apply_federated_mask(agg_tree, mask):
+    """Hard-mask the decoded aggregate and recompute its norm.
+
+    With an exact codec this is a no-op (uploads were already masked);
+    with a lossy one (int8's stochastic rounding, lowrank's factor
+    reconstruction) it guarantees masked parameters receive *exactly*
+    zero update, which is the partial-averaging semantics `state_spec`
+    declared.  Returns (masked tree, ||masked||^2).
+    """
+    tree = jax.tree.map(lambda g, m: g * m.astype(g.dtype), agg_tree, mask)
+    nrm = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree))
+    return tree, nrm
+
+
 def with_codec(client_fn, codec):
     """Compose a ctx-signature client fn with wire encoding (DESIGN.md §5).
 
@@ -335,9 +405,11 @@ class FLConfig:
                              f"variate (beta != 0): cohort must be >= 2")
         if method.validate is not None:
             method.validate(self.mc)
-        # sampler/aggregator/fault name + option validation mirrors the
-        # method's: unknown names and typo'd/foreign options raise at
+        # codec/sampler/aggregator/fault name + option validation mirrors
+        # the method's: unknown names and typo'd/foreign options raise at
         # construction, never at round time
+        from repro import comm
+        comm.validate_codec_opts(self.codec, self.codec_opts)
         sampling.resolve_opts(sampling.get_sampler(self.sampler),
                               self.sampler_opts)
         agg = aggregators.get_aggregator(self.aggregator)
@@ -381,10 +453,15 @@ class FLConfig:
         `*_opts` dict).  A typo, an option the chosen strategies would
         silently ignore, and an ambiguously-named option all raise
         instead of training a default config."""
+        from repro import comm
         m = get_method(method)
+        if codec not in comm.CODECS:
+            raise KeyError(f"unknown codec '{codec}'; "
+                           f"have {sorted(comm.CODECS)}")
         # (kind, chosen name, allowed option names, explicit-dict kwarg)
         subsystems = (
             ("method", method, COMMON_OPTIONS | set(m.options), None),
+            ("codec", codec, set(comm.CODECS[codec].options), "codec_opts"),
             ("sampler", sampler,
              set(sampling.get_sampler(sampler).options), "sampler_opts"),
             ("aggregator", aggregator,
@@ -428,18 +505,19 @@ class FLConfig:
                     f"resolved silently)")
             return {**ex, **kw}
 
-        s_opts = routed(subsystems[1][2], sampler_opts, "sampler",
+        c_opts = routed(subsystems[1][2], codec_opts, "codec", "codec_opts")
+        s_opts = routed(subsystems[2][2], sampler_opts, "sampler",
                         "sampler_opts")
-        a_opts = routed(subsystems[2][2], agg_opts, "aggregator", "agg_opts")
-        f_opts = routed(subsystems[3][2], fault_opts, "fault", "fault_opts")
-        t_opts = routed(subsystems[4][2], tracker_opts, "tracker",
+        a_opts = routed(subsystems[3][2], agg_opts, "aggregator", "agg_opts")
+        f_opts = routed(subsystems[4][2], fault_opts, "fault", "fault_opts")
+        t_opts = routed(subsystems[5][2], tracker_opts, "tracker",
                         "tracker_opts")
-        st_opts = routed(subsystems[5][2], store_opts, "store", "store_opts")
+        st_opts = routed(subsystems[6][2], store_opts, "store", "store_opts")
         method_opts = {k: v for k, v in opts.items() if k in subsystems[0][2]}
         return cls(method=method, n_clients=n_clients, cohort=cohort,
                    k_micro=k_micro, micro_batch=micro_batch,
                    server_lr=server_lr, codec=codec,
-                   codec_opts=dict(codec_opts or {}), staleness=staleness,
+                   codec_opts=c_opts, staleness=staleness,
                    sampler=sampler, sampler_opts=s_opts,
                    aggregator=aggregator, agg_opts=a_opts,
                    fault=fault, fault_opts=f_opts,
@@ -503,9 +581,9 @@ register_method(FedMethod(
     server_update=_scaffold_server,
     state_fields=(
         StateField("c_u", per_client=True, cstate_key="c_u", scatter=True,
-                   init=lambda p, t, mc: tree_zeros_like(p)),
+                   init=lambda p, t, mc: tree_zeros_like(p), pspec="params"),
         StateField("c_global", per_client=False, cstate_key="c_global",
-                   init=lambda p, t, mc: tree_zeros_like(p)),
+                   init=lambda p, t, mc: tree_zeros_like(p), pspec="params"),
     ),
     description="local gradients corrected by (c - c_u); client keeps c_u",
 ))
@@ -578,9 +656,9 @@ register_method(FedMethod(
         # server-only (cstate_key=None): the stale gradient table h_u and
         # its running sum never leave the server
         StateField("h", per_client=True,
-                   init=lambda p, t, mc: tree_zeros_like(p)),
+                   init=lambda p, t, mc: tree_zeros_like(p), pspec="params"),
         StateField("h_sum", per_client=False,
-                   init=lambda p, t, mc: tree_zeros_like(p)),
+                   init=lambda p, t, mc: tree_zeros_like(p), pspec="params"),
     ),
     needs_dense_grads=True,
     distributed_ok=False,   # h is an all-clients table held at the server
@@ -589,9 +667,16 @@ register_method(FedMethod(
 
 
 def _personal_fields(task: M.Task, mc: M.MethodConfig):
+    # federated_slice: the head leaves are personal, so FEDERATED averaging
+    # covers the body only (DESIGN.md §13.4).  The personalization clients
+    # already upload zero head gradients (methods._body_mask), so declaring
+    # the slice changes nothing under an exact codec — it makes the same
+    # guarantee hold under lossy ones (and documents it in the spec).
     return (StateField(
         "personal", per_client=True, cstate_key="personal", scatter=True,
-        init=lambda p, t, mc: {k: p[k] for k in t.head_keys}),)
+        init=lambda p, t, mc: {k: p[k] for k in t.head_keys},
+        federated_slice=lambda p, t, mc: M._body_mask(t, p),
+        pspec="params"),)
 
 
 register_method(FedMethod(
@@ -668,9 +753,9 @@ register_method(FedMethod(
     server_update=_fedglomo_server,
     state_fields=(
         StateField("m", per_client=True, cstate_key="m", scatter=True,
-                   init=lambda p, t, mc: tree_zeros_like(p)),
+                   init=lambda p, t, mc: tree_zeros_like(p), pspec="params"),
         StateField("v", per_client=False,
-                   init=lambda p, t, mc: tree_zeros_like(p)),
+                   init=lambda p, t, mc: tree_zeros_like(p), pspec="params"),
     ),
     options=("glomo_beta_global", "glomo_beta_local"),
     validate=_fedglomo_validate,

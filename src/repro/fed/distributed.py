@@ -1,8 +1,11 @@
 """Mesh-distributed federated rounds: any registered `FedMethod` under
-`jax.shard_map` — clients live on the ("pod","data") mesh axes, each shard
-computes its own client pass (microbatch gradients, RLOO statistics,
-message) locally, and the server side runs as collectives.  Eq. 10-12
-collapses to ONE parameter-sized all-reduce (the same volume FedAvg pays):
+`jax.shard_map` — clients live on the ("pod","data") mesh axes (or the
+"cohort" axis of a 2-d `fed_mesh(n_cohort, n_model)`, whose "model" axis
+stays with GSPMD so every leaf keeps its model sharding through the
+round — DESIGN.md §13.1), each shard computes its own client pass
+(microbatch gradients, RLOO statistics, message) locally, and the server
+side runs as collectives.  Eq. 10-12 collapses to ONE parameter-sized
+all-reduce (the same volume FedAvg pays):
 
     n   = psum_u n_u                  (scalar)
     t   = psum_u n_u / (n - n_u)      (scalar)
@@ -48,7 +51,13 @@ from repro.utils.tree_math import ravel, tree_norm_sq, unravel
 
 
 def client_axes(mesh):
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Mesh axes that index clients: ("pod","data") on the classic client
+    meshes, "cohort" on a 2-d `fed_mesh(n_cohort, n_model)` — whatever is
+    left over ("model") stays with GSPMD (shard_map auto) so the client
+    pass and the one-psum reduction run over model-sharded leaves
+    (DESIGN.md §13.1)."""
+    return tuple(a for a in ("pod", "data", "cohort")
+                 if a in mesh.axis_names)
 
 
 def init_distributed_state(method: api.FedMethod, params, task: Task,
@@ -131,6 +140,9 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
                          f"be silently ignored")
     fields = method.state_spec(task, mc)
     ca = client_axes(mesh)
+    # non-client axes (a fed_mesh's "model") stay auto: GSPMD keeps the
+    # params'/states' model sharding through the region (DESIGN.md §13.1)
+    auto = frozenset(mesh.axis_names) - set(ca)
     use_wire = codec is not None and codec.name != "identity"
     stateful = use_wire and codec.stateful
     beta = method.beta(mc)
@@ -141,6 +153,13 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
             f"aggregator '{agg.name}' discards the per-client count "
             f"weighting and cannot apply the NCV correction "
             f"(beta={beta}); use ncv_beta=0 or aggregator='mean'")
+    if auto and not agg.fused_wire:
+        raise NotImplementedError(
+            f"aggregator '{agg.name}' all-gathers the message stack "
+            f"inside the shard_map region, which the SPMD partitioner "
+            f"rejects on a partially-manual 2-d mesh "
+            f"(model axes {sorted(auto)}); use aggregator='mean' or a "
+            f"1-d client mesh")
     if isinstance(tracker, str):
         tracker = track.make_tracker(tracker, **(tracker_opts or {}))
     emit = None
@@ -166,21 +185,21 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
             cs = dict(dummy=jnp.zeros(()))
         return cs
 
-    def body(params, batch, n_u, state_l, r, *extra):
+    def body(params, batch, n_u, state_l, r, cidx, *extra):
         # strip the per-shard client dim (1 client per shard)
         local_batch = jax.tree.map(lambda x: x[0], batch)
         n_u_local = n_u[0].astype(jnp.float32)
         cstate = shard_cstate(state_l)
         if stateful:
-            cstate["ef"] = state_l["ef"][0]
+            cstate["ef"] = jax.tree.map(lambda t: t[0], state_l["ef"])
 
         # ---- client side, on this client's shard ----
-        # distinct per-(seed, round, client) randomness
-        ai = jnp.int32(0)
-        for a in ca:
-            ai = ai * mesh.shape[a] + jax.lax.axis_index(a)
+        # distinct per-(seed, round, client) randomness.  The client index
+        # arrives as a sharded iota operand rather than `lax.axis_index`:
+        # the PartitionId instruction behind axis_index is rejected by the
+        # SPMD partitioner inside a partially-manual region (2-d mesh)
         key_c = jax.random.fold_in(jax.random.fold_in(
-            jax.random.PRNGKey(seed), r), ai)
+            jax.random.PRNGKey(seed), r), cidx[0])
         with track.scope(track.CLIENT_PASS):
             out = method.client_update(ctx_c, params, cstate, local_batch,
                                        key_c)
@@ -226,7 +245,8 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
         cs_out = {k: jax.tree.map(lambda x: x[None], new_cstate[k])
                   for k in scatter_keys}
         if stateful:
-            cs_out["ef"] = new_cstate["ef"][None]
+            cs_out["ef"] = jax.tree.map(lambda t: t[None],
+                                        new_cstate["ef"])
         ret = dict(agg=agg_out, cstates=cs_out,
                    aux=jax.tree.map(lambda x: x[None], out.aux))
         return ret
@@ -236,7 +256,7 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
                    for f in fields}
     if stateful:
         state_specs["ef"] = cspec
-    in_specs = (pspec, cspec, cspec, state_specs, pspec)  # ... state, r
+    in_specs = (pspec, cspec, cspec, state_specs, pspec, cspec)  # .., r, cidx
     if use_wire:
         in_specs += (cspec,)                      # seeds
     out_specs = dict(agg=pspec, aux=cspec,
@@ -244,7 +264,7 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
     if stateful:
         out_specs["cstates"]["ef"] = cspec
     shard_fn = shard_map_compat(body, mesh, in_specs=in_specs,
-                                out_specs=out_specs)
+                                out_specs=out_specs, auto=auto)
 
     def round_fn(params, state, batch, n_samples, r, *extra):
         m_total = n_samples.shape[0]
@@ -258,7 +278,7 @@ def make_round(method, task: Task, mesh, mc: MethodConfig, server_lr: float,
                           codec=codec.name if codec is not None
                           else "identity", mc=mc)
         out = shard_fn(params, batch, n_samples, state, jnp.int32(r),
-                       *extra)
+                       jnp.arange(m_total, dtype=jnp.int32), *extra)
         agg, aux, cstates = out["agg"], out["aux"], out["cstates"]
         idx = jnp.arange(m_total)
         ctx = api.RoundCtx(task=task, mc=mc, fl=fl, r=r, idx=idx,

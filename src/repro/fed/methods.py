@@ -79,14 +79,18 @@ def _microbatch_grads(task: Task, params, batches):
 
 
 def _sgd_epoch(task: Task, params, batches, lr, grad_tx=None):
-    """One pass of sequential SGD over the K microbatches."""
-    def step(p, mb):
-        g = jax.grad(task.loss)(p, mb)
-        if grad_tx is not None:
-            g = grad_tx(p, g)
-        return jax.tree.map(lambda pi, gi: pi - lr * gi, p, g), None
+    """One pass of sequential SGD over the K microbatches.
 
-    params, _ = jax.lax.scan(step, params, batches)
+    Unrolled on purpose (K is a small static constant): a `lax.scan`
+    whose carry is model-sharded aborts the SPMD partitioner inside the
+    2-d fed mesh's partially-manual shard_map region (DESIGN.md §13.1),
+    and the unrolled form is the identical computation."""
+    for k in range(_k_of(batches)):
+        mb = jax.tree.map(lambda x: x[k], batches)
+        g = jax.grad(task.loss)(params, mb)
+        if grad_tx is not None:
+            g = grad_tx(params, g)
+        params = jax.tree.map(lambda pi, gi: pi - lr * gi, params, g)
     return params
 
 
@@ -185,10 +189,15 @@ def fedncv_client(mc: MethodConfig, task: Task, params, cstate, batches, key):
                                                  want_reshaped=True)
         p_local = params
 
-        def step(p, g):
-            return jax.tree.map(lambda pi, gi: pi - mc.local_lr * gi, p, g), None
+        def epoch(p, gs):
+            # unrolled like _sgd_epoch: a model-sharded lax.scan carry
+            # aborts the partitioner in the 2-d mesh's shard_map region
+            for i in range(_k_of(batches)):
+                g = jax.tree.map(lambda x: x[i], gs)
+                p = jax.tree.map(lambda pi, gi: pi - mc.local_lr * gi, p, g)
+            return p
         for _ in range(mc.local_epochs - 1):
-            p_local, _ = jax.lax.scan(step, p_local, reshaped)
+            p_local = epoch(p_local, reshaped)
             g_stack = _microbatch_grads(task, p_local, batches)
             msg, stats, reshaped = cv.client_pass_flat(g_stack, alpha,
                                                        want_reshaped=True)

@@ -10,11 +10,11 @@ meet in a single parameter-sized `psum`.
 
 Exactness with unequal client weights: the coefficients w_u depend on
 global scalar statistics of the sample counts (n = sum_v n_v and
-t = sum_v n_v/(n - n_v)), so the (cohort,)-sized counts are all-gathered
-(a few scalars — negligible next to the N-sized payload) and every device
-computes the exact global coefficient vector, then slices its own block.
-The returned aggregate is therefore bitwise the same estimator as the
-single-device `ncv_aggregate`, up to f32 summation order.
+S = sum_v p_v n/(n - n_v)), so those two scalars are psum'd (negligible
+next to the N-sized payload) and every device computes its local
+coefficient block in place (`local_weights`).  The returned aggregate is
+therefore the same estimator as the single-device `ncv_aggregate`, up to
+f32 summation order.
 
 Padding rule: when cohort % D != 0 the caller pads the stacks with
 zero-weight rows (`pad_cohort`).  A padded slot carries n_u = 0, which
@@ -34,16 +34,35 @@ import jax.numpy as jnp
 from repro.kernels.rloo.rloo import ncv_coefficients
 
 
-def shard_map_compat(f, mesh, in_specs, out_specs):
+def shard_map_compat(f, mesh, in_specs, out_specs, auto=frozenset()):
     """`jax.shard_map` (jax >= 0.6) / `jax.experimental.shard_map` (0.4.x)
     with replication checking off — the one API difference between the two
-    is the name of that flag."""
+    is the name of that flag.
+
+    `auto`: mesh axis names left to GSPMD (DESIGN.md §13) — the body is
+    manual over the remaining axes only, and arrays sharded over an auto
+    axis keep that sharding through the region (specs must not mention
+    auto axes).  jax >= 0.7 spells this as `axis_names` (the manual set);
+    both spellings are handled here.
+    """
+    import inspect
+    auto = frozenset(auto)
     if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+        if auto:
+            params = inspect.signature(jax.shard_map).parameters
+            if "axis_names" in params:
+                kw["axis_names"] = frozenset(mesh.axis_names) - auto
+            else:
+                kw["auto"] = auto
+        return jax.shard_map(f, **kw)
     from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+    if auto:
+        kw["auto"] = auto
+    return shard_map(f, **kw)
 
 
 def pad_cohort(tree, n_devices: int):
@@ -71,15 +90,29 @@ def padded_cohort_size(cohort: int, n_devices: int) -> int:
 def local_weights(n_local, beta, axis_name):
     """Exact per-client coefficients for this device's cohort slice.
 
-    Runs inside shard_map: all-gathers the (cohort,) sample counts (scalar
-    traffic), computes the *global* `ncv_coefficients` so unequal client
-    weights stay exact, and slices the local block by `axis_index`.
+    Runs inside shard_map.  The collapsed Eq. 10-12 coefficients are
+    elementwise in n_u given two GLOBAL scalars — n = sum_v n_v and
+    S = sum_v p_v n/(n - n_v) — so those are psum'd (scalar traffic) and
+    the local block is computed in place (mirrors `ncv_coefficients`,
+    including its zero-weight-padding and lone-reporter guards).
+
+    psum-only on purpose: `all_gather` and `axis_index` are rejected by
+    the SPMD partitioner inside a *partially-manual* shard_map region
+    (2-d fed mesh, model axes auto — DESIGN.md §13.1), while psum lowers
+    cleanly; on a fully-manual 1-d mesh the values agree with the
+    gather-then-`ncv_coefficients` formulation exactly for the beta = 0
+    terms (integer-valued counts sum exactly) and to f32 summation order
+    for the beta-weighted correction scalar.
     """
-    n_all = jax.lax.all_gather(n_local, axis_name, tiled=True)   # (C_p,)
-    w_all = ncv_coefficients(n_all, beta)
-    i = jax.lax.axis_index(axis_name)
-    c_loc = n_local.shape[0]
-    return jax.lax.dynamic_slice_in_dim(w_all, i * c_loc, c_loc)
+    n_local = jnp.asarray(n_local, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
+    n = jax.lax.psum(jnp.sum(n_local), axis_name)
+    p = n_local / n
+    d = n - n_local
+    ratio = jnp.where(d > 0, n / d, 0.0)
+    s = jax.lax.psum(jnp.sum(p * ratio), axis_name)
+    a0 = 1.0 - beta * s
+    return a0 * p + beta * p * jnp.where(d > 0, n_local / d, 0.0)
 
 
 def sharded_aggregate(stack_local, n_local, beta=1.0, *, axis_name: str,
@@ -115,6 +148,33 @@ def sharded_aggregate(stack_local, n_local, beta=1.0, *, axis_name: str,
                                         use_pallas=use_pallas)
     agg = jax.lax.psum(partial, axis_name)
     return agg, jnp.sum(agg * agg)
+
+
+def sharded_aggregate_tree(stack_local, n_local, beta=1.0, *,
+                           axis_name: str):
+    """Eq. 10-12 over a cohort-sharded *pytree* stack, leaf by leaf —
+    the 2-d mesh (cohort x model) aggregation path (DESIGN.md §13).
+
+    stack_local: this device row's cohort slice of the gradient pytree,
+    leaves (C_loc, ...); on a 2-d mesh the trailing dims stay sharded
+    over the GSPMD model axis (`shard_map` auto), so the per-leaf
+    weighted contraction and the cohort psum never materialize an
+    unsharded parameter-sized buffer — the aggregate keeps exactly the
+    parameters' model sharding.  The coefficients come from the same
+    psum'd scalar statistics as the flat path (`local_weights`),
+    so the estimator is unchanged; only the reduction layout differs.
+    Returns (agg pytree, ||agg||^2), replicated across the cohort axis.
+    """
+    w_local = local_weights(n_local, beta, axis_name)
+
+    def leaf(g):
+        w = w_local.reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.sum(w * g.astype(jnp.float32), axis=0)
+
+    partial = jax.tree.map(leaf, stack_local)
+    agg = jax.lax.psum(partial, axis_name)
+    nrm = sum(jnp.sum(a * a) for a in jax.tree.leaves(agg))
+    return agg, nrm
 
 
 def sharded_clipped_aggregate(stack_local, n_local, beta, clip_mult, *,

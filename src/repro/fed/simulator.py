@@ -105,14 +105,31 @@ class Simulator:
         self._host_mode = self.store.host_resident
         self.mesh = mesh
         if mesh is not None:
-            assert len(mesh.axis_names) == 1, mesh.axis_names
+            # 1-d (cohort,) or 2-d (cohort, model) fed mesh (DESIGN.md §13):
+            # the FIRST axis is always the manually-collective cohort axis;
+            # any further axes are GSPMD ("auto") model axes the shard_map
+            # regions never mention — parameter leaves shard over them via
+            # `param_spec` and every collective here reduces over the
+            # cohort axis alone.
+            assert len(mesh.axis_names) >= 1, mesh.axis_names
             self.caxis = mesh.axis_names[0]
-            self.n_devices = int(np.prod(list(mesh.shape.values())))
+            self.maxes = tuple(mesh.axis_names[1:])
+            self._auto = frozenset(self.maxes)
+            self.n_devices = int(mesh.shape[self.caxis])
             rep = NamedSharding(mesh, P())
-            params = jax.device_put(params, rep)
+            if self.maxes:
+                from repro.sharding import params_shardings
+                params = jax.device_put(
+                    params,
+                    params_shardings(jax.eval_shape(lambda: params), mesh))
+            else:
+                params = jax.device_put(params, rep)
             if not self._host_mode:
                 data = {k: jax.device_put(jnp.asarray(v), rep)
                         for k, v in data.items()}
+        else:
+            self.maxes = ()
+            self._auto = frozenset()
         self.params = params
         if self._host_mode:
             # data tensors live in the host tables; the cohort draw is an
@@ -134,7 +151,11 @@ class Simulator:
         # client->server wire format (grads share the params' structure)
         self._grad_spec = flat_spec(params, stacked=False)
         self.codec = comm.get_codec(fl.codec, n=self._grad_spec.n,
-                                    **fl.codec_opts)
+                                    spec=self._grad_spec, **fl.codec_opts)
+        # partial averaging (DESIGN.md §13.4): the combined federated_slice
+        # mask over the param pytree, or None when no field declares one
+        self._fed_mask = api.federated_mask(self._fields, params, task,
+                                            fl.mc)
         from repro.kernels import default_interpret
         self._use_pallas = not default_interpret()
 
@@ -218,8 +239,12 @@ class Simulator:
                                          m, codec=self.codec)
             if self.codec.stateful and mesh is not None \
                     and m % self.n_devices == 0:
+                # codec state may be a pytree (lowrank's residual + bases);
+                # every leaf carries the (M, ...) client-leading dim
                 self._state["ef"] = jax.device_put(
                     self._state["ef"], NamedSharding(mesh, P(self.caxis)))
+            if self.maxes:
+                self._place_pspec_fields(m)
         # stateful samplers carry their tables in the same state dict
         # ("sampler" key): scanned, checkpointed, restored like alphas/EF.
         # Stateless samplers (uniform) leave the dict untouched, so the
@@ -369,10 +394,36 @@ class Simulator:
         return {k: jnp.take(v, sel, axis=0) for k, v in data.items()
                 if k not in ("client_idx", "client_sizes")}
 
+    def _place_pspec_fields(self, m):
+        """2-d mesh placement for `StateField.pspec == "params"` fields
+        (DESIGN.md §13.1): leaves take the parameters' `param_spec` model
+        sharding, and per-client tables additionally shard their leading
+        (M, ...) client dim over the cohort axis when M divides it — a
+        SCAFFOLD c_u table or FedNCV+ h table never replicates a full
+        model copy per client slot."""
+        from repro.sharding import param_spec
+        for f in self._fields:
+            if f.pspec != "params" or f.name not in self._state:
+                continue
+
+            def one(kp, leaf, per_client=f.per_client):
+                path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                for p in kp)
+                shape = leaf.shape[1:] if per_client else leaf.shape
+                spec = param_spec(path, shape, self.mesh)
+                if per_client:
+                    lead = self.caxis \
+                        if leaf.shape[0] % self.n_devices == 0 else None
+                    spec = P(lead, *spec)
+                return NamedSharding(self.mesh, spec)
+
+            sh = jax.tree_util.tree_map_with_path(one, self._state[f.name])
+            self._state[f.name] = jax.device_put(self._state[f.name], sh)
+
     def _cohort_cstates(self, state, idx):
         cs = api.gather_cohort_states(self._fields, state, idx)
         if self.codec.stateful:
-            cs["ef"] = state["ef"][idx]
+            cs["ef"] = jax.tree.map(lambda t: t[idx], state["ef"])
         return cs
 
     @staticmethod
@@ -390,6 +441,13 @@ class Simulator:
         # gradient exactly as it would on a real fleet (fed.faults §9)
         if self._fm_corrupts or self._fm_flips:
             client_fn = faults.wrap_client(client_fn, self._n_classes)
+        # partial averaging (DESIGN.md §13.4): the federated_slice mask
+        # zeroes non-federated leaves BEFORE the sampler stats and the
+        # codec see the upload — the wire carries only the federated slice
+        # (a no-op for methods whose clients already upload masked grads,
+        # e.g. fedper/fedrep body masking — bit-identical under identity)
+        if self._fed_mask is not None:
+            client_fn = api.with_federated_slice(client_fn, self._fed_mask)
         # sampler statistics (upload norm / sketch) are computed on the raw
         # f32 upload, so the stats wrapper goes on before the codec
         if self.smp.needs_norms or self._sketch_proj is not None:
@@ -506,9 +564,22 @@ class Simulator:
         # without a sharded_reduce hook (the order-statistic pair — a
         # robust reduction is not a psum of partials) take the same dense
         # fallback: the stack leaves the shard_map and the reduction runs
-        # on the replicated copy in the server section (DESIGN.md §9)
+        # on the replicated copy in the server section (DESIGN.md §9).
+        # On a 2-d mesh only "mean" stays in-region: norm_clip's hook
+        # all-gathers the per-client norms and slices by axis_index, both
+        # rejected by the partitioner in a partially-manual region.
         agg_path = not self.method.needs_dense_grads and \
-            self.agg.sharded_reduce is not None
+            self.agg.sharded_reduce is not None and \
+            (not self.maxes or fl.aggregator == "mean")
+        # 2-d mesh + identity wire + mean reduction: aggregate leaf-by-leaf
+        # (sharded.sharded_aggregate_tree) so the model-sharded gradient
+        # leaves are weighted-summed and psum'd WITHOUT the ravel into one
+        # (N,) buffer — raveling a model-sharded leaf would force GSPMD to
+        # all-gather it, defeating the model axis (DESIGN.md §13.1).  Wire
+        # codecs keep the flat path: their payloads are already r(p+q)- or
+        # byte-sized, and the factor/int8 stacks gather cheaply.
+        tree_path = agg_path and bool(self.maxes) and not use_wire \
+            and fl.aggregator == "mean"
         beta = self.method.beta(mc)
 
         kd, kk = jax.random.split(key)
@@ -539,7 +610,12 @@ class Simulator:
                     lambda cs, b, k: client_fn(ctx, params, cs, b, k)
                 )(cstates_l, batch, keys_l)
             ret = dict(cstates=outs.cstate, aux=outs.aux)
-            if agg_path:
+            if tree_path:
+                with track.scope(track.AGGREGATE):
+                    ret["agg_tree"], ret["agg_norm"] = \
+                        sharded.sharded_aggregate_tree(
+                            outs.grad, weights_l, beta, axis_name=axis)
+            elif agg_path:
                 stack_l = outs.grad
                 if not use_wire:
                     stack_l, _ = ravel_stack(stack_l)
@@ -554,7 +630,10 @@ class Simulator:
 
         cspec, rspec = P(axis), P()
         out_specs = dict(cstates=cspec, aux=cspec)
-        if agg_path:
+        if tree_path:
+            out_specs["agg_tree"] = rspec
+            out_specs["agg_norm"] = rspec
+        elif agg_path:
             out_specs["agg_vec"] = rspec
             out_specs["agg_norm"] = rspec
         else:
@@ -562,7 +641,7 @@ class Simulator:
         fn = sharded.shard_map_compat(
             body, self.mesh,
             in_specs=(rspec, rspec, cspec, cspec, cspec, cspec),
-            out_specs=out_specs)
+            out_specs=out_specs, auto=self._auto)
         out = fn(params, self.data, cstates_p, sel_p, weights_p, keys_p)
 
         # strip the padding slots so the pending dict always carries exact
@@ -574,7 +653,10 @@ class Simulator:
                        cstates=unpad(out["cstates"]), aux=unpad(out["aux"]))
         if invp is not None:
             pending["invp"] = invp
-        if agg_path:
+        if tree_path:
+            pending["agg_tree"] = out["agg_tree"]
+            pending["agg_norm"] = out["agg_norm"]
+        elif agg_path:
             pending["agg_vec"] = out["agg_vec"]
             pending["agg_norm"] = out["agg_norm"]
         else:
@@ -604,17 +686,24 @@ class Simulator:
         if "fault_state" in pending:
             new_state["faults"] = pending["fault_state"]
         if codec.stateful:
+            # codec state is a pytree in general (topk: one (M, N) residual;
+            # lowrank: dict of residual + warm bases) — gather/scatter and
+            # the sharding constraint map over its leaves uniformly
             ef_rows = new_cstates["ef"]
             if alive is not None:
                 # a dropped client's EF residual never made it back either
-                ef_rows = faults.where_rows(alive, ef_rows,
-                                            state["ef"][idx])
-            new_state["ef"] = state["ef"].at[idx].set(ef_rows)
+                ef_rows = faults.where_rows(
+                    alive, ef_rows,
+                    jax.tree.map(lambda t: t[idx], state["ef"]))
+            new_state["ef"] = jax.tree.map(
+                lambda t, rows: t.at[idx].set(rows), state["ef"], ef_rows)
             if self.mesh is not None and not self._host_mode and \
-                    state["ef"].shape[0] % self.n_devices == 0:
-                new_state["ef"] = jax.lax.with_sharding_constraint(
-                    new_state["ef"],
-                    NamedSharding(self.mesh, P(self.caxis)))
+                    jax.tree.leaves(state["ef"])[0].shape[0] \
+                    % self.n_devices == 0:
+                csh = NamedSharding(self.mesh, P(self.caxis))
+                new_state["ef"] = jax.tree.map(
+                    lambda t: jax.lax.with_sharding_constraint(t, csh),
+                    new_state["ef"])
 
         # sampler-state refresh from the cohort's uploaded statistics
         # (importance EMA norms, similarity sketches/ages) — under the
@@ -655,6 +744,8 @@ class Simulator:
         # the same weights ("mean" is the historical fused path verbatim)
         if method.needs_dense_grads:
             agg = None
+        elif "agg_tree" in pending:       # 2-d tree path: already a pytree
+            agg = (pending["agg_tree"], pending["agg_norm"])
         elif "agg_vec" in pending:        # sharded path already reduced
             agg = (unravel(pending["agg_vec"], self._grad_spec),
                    pending["agg_norm"])
@@ -664,6 +755,14 @@ class Simulator:
                     self.agg, self._agg_opts, grads, weights,
                     method.beta(mc), codec if use_wire else None,
                     self._grad_spec, use_pallas=self._use_pallas)
+        if agg is not None and self._fed_mask is not None and use_wire:
+            # hard mask after a lossy codec: uploads were masked pre-codec,
+            # but reconstruction (lowrank factors, stochastic rounding)
+            # may leak into masked leaves — partial averaging promises
+            # exactly-zero updates there (DESIGN.md §13.4).  Identity wire
+            # skips this: the aggregate is provably already masked, and
+            # the fused kernel's norm stays bit-identical.
+            agg = api.apply_federated_mask(agg[0], self._fed_mask)
         if agg is not None and live is not None:
             # all-dropped guard: nobody reported -> zero update, not NaN
             agg = (jax.tree.map(lambda g: g * live, agg[0]), agg[1] * live)
@@ -858,7 +957,8 @@ class Simulator:
         axis = self.caxis
         use_wire = codec.name != "identity"
         agg_path = not self.method.needs_dense_grads and \
-            self.agg.sharded_reduce is not None
+            self.agg.sharded_reduce is not None and \
+            (not self.maxes or fl.aggregator == "mean")
         beta = self.method.beta(fl.mc)
         cp = sharded.padded_cohort_size(fl.cohort, self.n_devices)
         pad = cp - fl.cohort
@@ -901,7 +1001,7 @@ class Simulator:
         fn = sharded.shard_map_compat(
             body, self.mesh,
             in_specs=(rspec, cspec, cspec, cspec, cspec),
-            out_specs=out_specs)
+            out_specs=out_specs, auto=self._auto)
         out = fn(params, cstates_p, batch, weights_p, keys_p)
         unpad = (lambda t: jax.tree.map(lambda x: x[:fl.cohort], t)) \
             if pad else (lambda t: t)

@@ -17,6 +17,15 @@ def make_debug_mesh(n_data=2, n_model=2):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_fed_mesh(n_cohort=None, n_model=1):
+    """Federated 2-d mesh (cohort x model, DESIGN.md §13): the round's
+    cohort dimension is shard_map'd over "cohort" while parameter leaves
+    shard over the GSPMD "model" axis.  Thin alias of
+    `sharding.fed_mesh` so launch-layer drivers build every mesh here."""
+    from repro.sharding import fed_mesh
+    return fed_mesh(n_cohort=n_cohort, n_model=n_model)
+
+
 # TPU v5e hardware constants (roofline denominators)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -143,17 +143,20 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
     from jax.sharding import PartitionSpec as P
 
     ca = client_axes(mesh)
+    # non-client axes (a fed_mesh's "model") stay with GSPMD: leaves keep
+    # their model sharding through the region (DESIGN.md §13.1)
+    auto = frozenset(mesh.axis_names) - set(ca)
     n_shards = 1
     for a in ca:
         n_shards *= mesh.shape[a]
 
-    def shard_body(params, batch, seed):
+    def shard_body(params, batch, seed, cidx):
         gbar, s2, loss = accum(params, batch)
-        # distinct stochastic-rounding stream per shard (= per client)
-        ai = jnp.int32(0)
-        for a in ca:
-            ai = ai * mesh.shape[a] + jax.lax.axis_index(a)
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), ai)
+        # distinct stochastic-rounding stream per shard (= per client);
+        # the shard index arrives as a sharded iota operand — the
+        # PartitionId behind `lax.axis_index` is rejected by the SPMD
+        # partitioner inside a partially-manual (2-d mesh) region
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), cidx[0])
         with track.scope(track.ENCODE):
             vec, spec = ravel(gbar)
             wire, _ = codec.encode(vec, None, key)
@@ -163,11 +166,12 @@ def make_train_step(cfg: ArchConfig, *, k_micro: int = 4, lr: float = 1e-3,
         return gbar, jax.lax.pmean(s2, ca), jax.lax.pmean(loss, ca)
 
     shard_fn = shard_map_compat(
-        shard_body, mesh, in_specs=(P(), P(ca), P()),
-        out_specs=(P(), P(), P()))
+        shard_body, mesh, in_specs=(P(), P(ca), P(), P(ca)),
+        out_specs=(P(), P(), P()), auto=auto)
 
     def train_step(params, alpha, batch, seed):
-        gbar, s2, loss = shard_fn(params, batch, seed)
+        gbar, s2, loss = shard_fn(params, batch, seed,
+                                  jnp.arange(n_shards, dtype=jnp.int32))
         return ncv_update(params, alpha, gbar, s2, loss)
 
     return train_step

@@ -120,7 +120,13 @@ def forward(cfg: ArchConfig, params, tokens):
             x = _layer_body(cfg, p_j, x, positions, j)
         return x, None
 
-    x, _ = jax.lax.scan(body, x, _group_xs(cfg, params["layers"]))
+    xs = _group_xs(cfg, params["layers"])
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, xs)
+    else:
+        # unrolled depth loop (static indexing): see ArchConfig.scan_layers
+        for i in range(jax.tree.leaves(xs)[0].shape[0]):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], xs))
     x = L.rmsnorm(x, params["final_norm"])
     unembed = params.get("unembed")
     if unembed is None:

@@ -1,4 +1,4 @@
 from repro.sharding.specs import (  # noqa: F401
-    batch_shardings, cache_shardings, client_axes, cohort_mesh, param_spec,
-    params_shardings,
+    batch_shardings, cache_shardings, client_axes, cohort_mesh, fed_mesh,
+    model_axes, param_spec, params_shardings,
 )

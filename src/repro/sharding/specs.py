@@ -55,7 +55,16 @@ def set_expert_parallel(mode):
 
 
 def client_axes(mesh: Mesh):
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Mesh axes that shard clients: the production ("pod","data") pair
+    and the FL runtimes' "cohort" axis (cohort_mesh / fed_mesh)."""
+    return tuple(a for a in ("pod", "data", "cohort")
+                 if a in mesh.axis_names)
+
+
+def model_axes(mesh: Mesh):
+    """Mesh axes that shard parameters (tensor parallelism) — the manual
+    cohort collectives leave these to GSPMD (`shard_map` auto axes)."""
+    return tuple(a for a in mesh.axis_names if a == "model")
 
 
 def cohort_mesh(n_devices: int | None = None, axis: str = "cohort") -> Mesh:
@@ -69,6 +78,27 @@ def cohort_mesh(n_devices: int | None = None, axis: str = "cohort") -> Mesh:
     n = len(devs) if n_devices is None else n_devices
     assert 1 <= n <= len(devs), (n, len(devs))
     return jax.make_mesh((n,), (axis,), devices=devs[:n])
+
+
+def fed_mesh(n_cohort: int | None = None, n_model: int = 1,
+             cohort_axis: str = "cohort", model_axis: str = "model") -> Mesh:
+    """2-d federated mesh: cohort axis x model axis (DESIGN.md §13).
+
+    The round's cohort dimension is shard_map'd over `cohort_axis`
+    (manual collectives: the one Eq. 10-12 psum reduces over it alone),
+    while `model_axis` stays a GSPMD ("auto") axis — parameter leaves
+    carry `param_spec` NamedShardings over it, so each client pass runs
+    tensor-parallel across the model axis without any hand-written
+    collectives.  n_cohort defaults to filling the visible devices at the
+    requested model width.
+    """
+    devs = jax.devices()
+    if n_cohort is None:
+        n_cohort = max(1, len(devs) // n_model)
+    n = n_cohort * n_model
+    assert 1 <= n <= len(devs), (n_cohort, n_model, len(devs))
+    return jax.make_mesh((n_cohort, n_model), (cohort_axis, model_axis),
+                         devices=devs[:n])
 
 
 def _fits(mesh, axis, dim):

@@ -62,6 +62,21 @@ ENTRY %main (a: f32[8]) -> f32[8] {
     assert tot["counts"]["all-reduce"] == 7.0
 
 
+def test_train_lm_smoke_subprocess():
+    """examples/train_lm.py --smoke end-to-end: the 2-layer twin of the
+    llama-100m recipe must beat the unigram CE of its eval batch after
+    600 steps (the learned-bigram-structure gate).  Runs the centralized
+    path (the federated smoke rides in the multidevice CI job)."""
+    script = os.path.join(os.path.dirname(__file__), "..", "examples",
+                          "train_lm.py")
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, script, "--smoke"],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SMOKE_OK" in out.stdout, out.stdout[-2000:]
+
+
 @pytest.mark.slow
 def test_small_mesh_compile_subprocess():
     """Lower+compile a reduced arch train step on a 2x2 mesh (4 host devs)."""

@@ -1,0 +1,187 @@
+"""2-D (cohort x model) fed-mesh parity matrix (DESIGN.md §13).
+
+The standing contract: a `fed_mesh(n_cohort, n_model)` placement changes
+WHERE the round computes, never WHAT it computes — every method x codec
+x staleness combination must reproduce the single-device trajectory.
+These tests run in the CI multidevice job (8 forced host devices) and
+skip below 8 devices; the identity-codec cases are pinned near f32
+summation-order noise (the psum-only Eq. 10-12 scalar collapse is exact
+on the integer counts but reorders the f32 beta-term sum), the lowrank
+cases a decade looser (Newton-Schulz orthonormalization noise feeds
+back through EF).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed import FLConfig, MethodConfig, Simulator, Task
+from repro.fed import api
+from repro.models import lenet
+from repro.sharding import fed_mesh
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 devices (CI multidevice job)")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.data import federated_splits
+    spec, train, test = federated_splits("mnist", n_clients=8, alpha=0.5,
+                                         seed=0, scale=0.1)
+    cfg = lenet.LeNetConfig(n_classes=spec.n_classes,
+                            image_size=spec.image_size,
+                            channels=spec.channels)
+    task = Task(loss=lambda p, b: lenet.loss_fn(cfg, p, b),
+                accuracy=lambda p, b: lenet.accuracy(cfg, p, b),
+                head_keys=lenet.HEAD_KEYS)
+    params0 = lenet.init(cfg, jax.random.PRNGKey(0))
+    return task, params0, train
+
+
+def _run(setup, method, codec, mesh, staleness=0, rounds=3, cohort=4,
+         **opts):
+    task, params0, train = setup
+    fl = FLConfig.make(method=method, n_clients=8, cohort=cohort, k_micro=2,
+                       micro_batch=4, server_lr=0.5, codec=codec,
+                       staleness=staleness, local_epochs=1, **opts)
+    sim = Simulator(task, jax.tree.map(jnp.copy, params0), train, fl,
+                    seed=0, mesh=mesh)
+    for _ in range(rounds + staleness):
+        sim.run_round()
+    return sim
+
+
+def _maxdiff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@needs8
+@pytest.mark.parametrize("staleness", [0, 1])
+@pytest.mark.parametrize("codec", ["identity", "lowrank"])
+@pytest.mark.parametrize("method", ["fedncv", "fedncv+", "scaffold",
+                                    "fedavg"])
+def test_mesh2d_parity_matrix(setup, method, codec, staleness):
+    """{method} x {codec} x {sync, staleness=1} on the 4x2 mesh follows
+    the single-device trajectory."""
+    opts = dict(rank=4) if codec == "lowrank" else {}
+    ref = _run(setup, method, codec, None, staleness=staleness, **opts)
+    got = _run(setup, method, codec, fed_mesh(4, 2), staleness=staleness,
+               **opts)
+    tol = 1e-5 if codec == "identity" else 1e-4
+    assert _maxdiff(ref.params, got.params) < tol
+
+
+@needs8
+def test_mesh2d_cohort_padding(setup):
+    """cohort % n_cohort != 0: the padded shards carry zero weight and
+    never move the estimate (cohort=3 on 4 cohort shards)."""
+    ref = _run(setup, "fedncv", "identity", None, cohort=3)
+    got = _run(setup, "fedncv", "identity", fed_mesh(4, 2), cohort=3)
+    assert _maxdiff(ref.params, got.params) < 1e-5
+
+
+@needs8
+def test_mesh2d_federated_slice_parity(setup):
+    """A federated_slice mask (freeze the head: per-layer partial
+    averaging, DESIGN.md §13.4) holds on the 2-d mesh: masked leaves get
+    exactly zero update, and mesh and single-device agree — including
+    under the lossy lowrank codec, whose leakage the hard mask kills."""
+    task, params0, _ = setup
+    fedavg = api.get_method("fedavg")
+
+    def body_mask(params, t, mc):
+        return jax.tree.map(lambda _: 1.0, params) | {
+            k: jax.tree.map(lambda _: 0.0, params[k])
+            for k in params if k in ("head",)}
+
+    probe = api.FedMethod(
+        name="_mask_probe", client_update=fedavg.client_update,
+        state_fields=(api.StateField(
+            name="maskmark", per_client=False,
+            init=lambda p, t, mc: jnp.zeros(()),
+            federated_slice=body_mask),),
+        description="fedavg with the head leaf frozen (test probe)")
+    api.register_method(probe)
+    try:
+        ref = _run(setup, "_mask_probe", "lowrank", None, rank=4)
+        got = _run(setup, "_mask_probe", "lowrank", fed_mesh(4, 2), rank=4)
+        assert _maxdiff(ref.params, got.params) < 1e-4
+        # the masked leaves never moved — exactly
+        for sim in (ref, got):
+            for a, b in zip(jax.tree.leaves(sim.params["head"]),
+                            jax.tree.leaves(params0["head"])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the federated leaves did move
+        assert _maxdiff(got.params["conv1"], params0["conv1"]) > 0.0
+    finally:
+        api._REGISTRY.pop("_mask_probe")
+
+
+@needs8
+def test_mesh2d_checkpoint_roundtrip(setup, tmp_path):
+    """A 2-d-mesh checkpoint records the mesh layout in its meta and
+    restores onto a different placement (here: none) mid-trajectory."""
+    from repro.checkpoint import read_meta, restore_sim, save_sim
+    ckdir = os.path.join(str(tmp_path), "ck")
+    full = _run(setup, "fedncv", "lowrank", fed_mesh(4, 2), rounds=3,
+                rank=4)
+    half = _run(setup, "fedncv", "lowrank", fed_mesh(4, 2), rounds=2,
+                rank=4)
+    save_sim(ckdir, half)
+    assert read_meta(ckdir)["mesh"] == {"cohort": 4, "model": 2}
+    task, params0, train = setup
+    fl = FLConfig.make(method="fedncv", n_clients=8, cohort=4, k_micro=2,
+                       micro_batch=4, server_lr=0.5, codec="lowrank",
+                       rank=4, local_epochs=1)
+    resumed = Simulator(task, jax.tree.map(jnp.copy, params0), train, fl,
+                        seed=0, mesh=None)
+    restore_sim(ckdir, resumed)
+    resumed.run_round()
+    assert _maxdiff(full.params, resumed.params) < 1e-4
+
+
+@needs8
+@pytest.mark.slow
+def test_mesh2d_llama100m_lowrank_round():
+    """The acceptance case: a llama-100m cohort round end-to-end on the
+    4x2 CI mesh with codec='lowrank' through fed.distributed.make_round —
+    sharded params, rank-r factor uploads, finite outputs.  Marked slow
+    (the unrolled 12-layer compile on 8 host devices is minutes, not
+    seconds); the CI multidevice job runs it as its own step."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    import train_lm
+    from repro import comm
+    from repro.fed.distributed import init_distributed_state, make_round
+    from repro.models import api as models_api
+    from repro.utils.tree_math import ravel
+
+    cfg = train_lm.model_100m().replace(scan_layers=False)
+    mesh = fed_mesh(4, 2)
+    task = Task(loss=lambda p, b: models_api.loss(cfg, p, b))
+    params = models_api.init_params(cfg, jax.random.PRNGKey(0))
+    vec, vspec = ravel(params)
+    codec = comm.get_codec("lowrank", n=vec.shape[0], spec=vspec, rank=16)
+    mc = MethodConfig(name="fedncv", ncv_beta=0.5)
+    round_fn = make_round("fedncv", task, mesh, mc, server_lr=0.1,
+                          codec=codec)
+    state = init_distributed_state(api.get_method("fedncv"), params, task,
+                                   mc, n_clients=4, codec=codec)
+    key = jax.random.PRNGKey(1)
+    batch = dict(
+        tokens=jax.random.randint(key, (4, 1, 1, 64), 0, cfg.vocab),
+        labels=jax.random.randint(key, (4, 1, 1, 64), 0, cfg.vocab))
+    n_u = jnp.asarray([64.0, 96.0, 128.0, 160.0])
+    seeds = jnp.arange(4, dtype=jnp.uint32)
+    p1, s1, m = round_fn(params, state, batch, n_u, jnp.int32(0), seeds)
+    assert np.isfinite(float(m["agg_norm"]))
+    assert float(m["bytes_up"]) == 4 * codec.bytes_per_client()
+    assert _maxdiff(p1, params) > 0.0
+    for leaf in jax.tree.leaves(s1):
+        assert np.isfinite(np.asarray(leaf)).all()
